@@ -1,0 +1,40 @@
+"""Timing + CSV helpers for the benchmark harness."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+
+def time_fn(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock microseconds per call (jit'd fn, post-warmup)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def r_squared(x, y) -> float:
+    x, y = np.asarray(x, np.float64), np.asarray(y, np.float64)
+    if len(x) < 2:
+        return 1.0
+    A = np.stack([x, np.ones_like(x)], axis=1)
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    pred = A @ coef
+    ss_res = np.sum((y - pred) ** 2)
+    ss_tot = np.sum((y - y.mean()) ** 2)
+    return float(1.0 - ss_res / max(ss_tot, 1e-30))

@@ -1,0 +1,72 @@
+"""Per-kernel microbench: Pallas (interpret on CPU; the TPU kernel) next to
+the pure-jnp oracle, plus the int8 MXU-path variants."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.conv_im2col import conv2d_im2col
+from repro.kernels.conv_dw import depthwise2d
+from repro.kernels.conv_shift import shift_conv2d
+from repro.kernels.conv_add import add_conv2d
+from repro.kernels.conv1d_causal import causal_conv1d
+from repro.kernels.matmul_q8 import matmul
+
+from .common import emit, time_fn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def main():
+    x = jax.random.normal(KEY, (1, 16, 16, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 16, 16))
+    us = time_fn(functools.partial(conv2d_im2col, interpret=True), x, w,
+                 reps=2, warmup=1)
+    us_ref = time_fn(jax.jit(lambda a, b: ref.conv2d_ref(a, b)), x, w)
+    emit("kernels/conv_im2col/pallas_interpret", us, f"ref_us={us_ref:.1f}")
+
+    xq = (x * 20).astype(jnp.int8)
+    wq = (w * 10).astype(jnp.int8)
+    us_q = time_fn(functools.partial(conv2d_im2col, requant_shift=6,
+                                     interpret=True), xq, wq, reps=2, warmup=1)
+    emit("kernels/conv_im2col/int8", us_q, "algorithm1_epilogue")
+
+    wd = jax.random.normal(KEY, (3, 3, 16))
+    emit("kernels/conv_dw/pallas_interpret",
+         time_fn(functools.partial(depthwise2d, interpret=True), x, wd,
+                 reps=2, warmup=1), "")
+
+    shifts = jnp.array([[(i % 3) - 1, ((i // 3) % 3) - 1] for i in range(16)],
+                       jnp.int32)
+    wp = jax.random.normal(KEY, (16, 16))
+    emit("kernels/conv_shift/pallas_interpret",
+         time_fn(functools.partial(shift_conv2d, interpret=True), x, shifts,
+                 wp, reps=2, warmup=1), "shift_fused_into_sampling")
+
+    emit("kernels/conv_add/pallas_interpret",
+         time_fn(functools.partial(add_conv2d, interpret=True, block_co=4),
+                 x, w, reps=2, warmup=1), "vpu_only_no_mxu_analogue")
+
+    xs = jax.random.normal(KEY, (2, 128, 32))
+    wc = jax.random.normal(KEY, (4, 32))
+    emit("kernels/conv1d_causal/pallas_interpret",
+         time_fn(functools.partial(causal_conv1d, interpret=True), xs, wc,
+                 reps=2, warmup=1), "mamba_hotpath")
+
+    a = jax.random.normal(KEY, (256, 256), jnp.bfloat16)
+    b = jax.random.normal(KEY, (256, 256), jnp.bfloat16)
+    emit("kernels/matmul/pallas_interpret",
+         time_fn(functools.partial(matmul, bm=128, bn=128, bk=128,
+                                   interpret=True), a, b, reps=2, warmup=1), "")
+    aq = (jax.random.normal(KEY, (256, 256)) * 30).astype(jnp.int8)
+    emit("kernels/matmul_q8/pallas_interpret",
+         time_fn(functools.partial(matmul, bm=128, bn=128, bk=128,
+                                   requant_shift=7, interpret=True), aq, aq,
+                 reps=2, warmup=1), "int8_pow2_requant")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+  table1  -> primitive_costs   (params/MACs formulas)
+  fig2    -> sweeps            (latency/energy vs structural params, r^2 claims)
+  fig3    -> memaccess         (data-reuse ratio)
+  table3  -> frequency         (MCU frequency/power/energy model)
+  table4  -> optlevel          (interpret vs compiled; O0 vs Os)
+  kernels -> kernel microbench (Pallas interpret vs jnp oracle)
+  roofline-> roofline_report   (from dry-run artifacts, if present)
+
+REPRO_BENCH_FAST=1 trims sweep points for CI.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (frequency, kernels_bench, memaccess, optlevel,
+                   primitive_costs, roofline_report, sweeps)
+    sections = [
+        ("table1", primitive_costs.main),
+        ("fig2", sweeps.main),
+        ("fig3", memaccess.main),
+        ("table3", frequency.main),
+        ("table4", optlevel.main),
+        ("kernels", kernels_bench.main),
+        ("roofline", roofline_report.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in sections:
+        try:
+            fn()
+        except Exception as e:      # noqa: BLE001 — report, keep benching
+            failures += 1
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    print(f"done,0.0,sections={len(sections)} failures={failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Feasibility probe: 512 fake CPU devices, sharded compile, cost/memory analysis."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import time
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+t0 = time.time()
+mesh = jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+print("mesh built", time.time() - t0, "s; ndev", len(jax.devices()))
+
+
+def step(x, w1, w2):
+    h = jnp.einsum("bd,df->bf", x, w1)
+    h = jax.nn.relu(h)
+    return jnp.einsum("bf,fd->bd", h, w2)
+
+
+B, D, F = 4096, 2048, 8192
+x = jax.ShapeDtypeStruct((B, D), jnp.bfloat16)
+w1 = jax.ShapeDtypeStruct((D, F), jnp.bfloat16)
+w2 = jax.ShapeDtypeStruct((F, D), jnp.bfloat16)
+
+with mesh:
+    f = jax.jit(
+        step,
+        in_shardings=(
+            NamedSharding(mesh, P(("pod", "data"), None)),
+            NamedSharding(mesh, P(None, "model")),
+            NamedSharding(mesh, P("model", None)),
+        ),
+        out_shardings=NamedSharding(mesh, P(("pod", "data"), None)),
+    )
+    t0 = time.time()
+    lowered = f.lower(x, w1, w2)
+    print("lower:", time.time() - t0, "s")
+    t0 = time.time()
+    compiled = lowered.compile()
+    print("compile:", time.time() - t0, "s")
+    ma = compiled.memory_analysis()
+    print("memory_analysis:", ma)
+    ca = compiled.cost_analysis()
+    print("cost keys:", {k: v for k, v in ca.items() if "flops" in k or "bytes" in k})
+    txt = compiled.as_text()
+    import re
+    colls = re.findall(r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)", txt)
+    print("collective op mentions:", len(colls))
+    # expected per-device flops: 2*B*D*F*2 / 512 ≈ 2*4096*2048*8192*2/512
+    print("expected per-dev flops:", 2 * B * D * F * 2 / 512, "reported:", ca.get("flops"))

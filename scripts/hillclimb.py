@@ -1,0 +1,99 @@
+"""§Perf hillclimb driver: run named variants of the three chosen cells,
+tag the artifacts, and print before/after roofline terms.
+
+Variants are (hypothesis -> change) pairs from EXPERIMENTS.md §Perf;
+each lowers + compiles the cell with a modified TrainConfig / ShardingRules
+and records a tagged artifact next to the baseline.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(ROOT, "artifacts", "dryrun")
+
+# (cell, variant_tag, env knobs consumed by dryrun via REPRO_* )
+RUNS = [
+    # paper-representative: falcon-mamba (conv1d primitive in the LM stack)
+    ("falcon-mamba-7b", "train_4k", "single", "hc_tri",
+     {"REPRO_ATTN_IMPL": "flash_tri"}),
+    ("falcon-mamba-7b", "train_4k", "single", "hc_dots",
+     {"REPRO_REMAT": "dots"}),
+    ("falcon-mamba-7b", "train_4k", "single", "hc_tri_dots",
+     {"REPRO_ATTN_IMPL": "flash_tri", "REPRO_REMAT": "dots"}),
+    # worst flops-ratio: qwen2-0.5b train (replicated attention over model)
+    ("qwen2-0.5b", "train_4k", "single", "hc_tri",
+     {"REPRO_ATTN_IMPL": "flash_tri"}),
+    ("qwen2-0.5b", "train_4k", "single", "hc_seqshard",
+     {"REPRO_SEQ_SHARD": "1"}),
+    ("qwen2-0.5b", "train_4k", "single", "hc_seq_tri",
+     {"REPRO_SEQ_SHARD": "1", "REPRO_ATTN_IMPL": "flash_tri"}),
+    ("qwen2-0.5b", "train_4k", "single", "hc_seq_tri_dots",
+     {"REPRO_SEQ_SHARD": "1", "REPRO_ATTN_IMPL": "flash_tri",
+      "REPRO_REMAT": "dots"}),
+    # most collective-bound: arctic train multi-pod (EP a2a + ZeRO gathers)
+    ("arctic-480b", "train_4k", "multi", "hc_podlocal",
+     {"REPRO_POD_LOCAL_FSDP": "1"}),
+    ("arctic-480b", "train_4k", "multi", "hc_tri",
+     {"REPRO_ATTN_IMPL": "flash_tri"}),
+    ("arctic-480b", "train_4k", "multi", "hc_tri_podlocal",
+     {"REPRO_ATTN_IMPL": "flash_tri", "REPRO_POD_LOCAL_FSDP": "1"}),
+    # hypothesis: ZeRO weight gathers repeat per microbatch; with sharded
+    # residuals mb=1 fits memory and divides gather traffic by 8
+    ("arctic-480b", "train_4k", "multi", "hc_mb1_tri",
+     {"REPRO_MICROBATCHES": "1", "REPRO_SHARD_RESIDUALS": "1",
+      "REPRO_ATTN_IMPL": "flash_tri"}),
+    ("falcon-mamba-7b", "train_4k", "single", "hc_mb1_tri",
+     {"REPRO_MICROBATCHES": "1", "REPRO_SHARD_RESIDUALS": "1",
+      "REPRO_ATTN_IMPL": "flash_tri"}),
+    ("arctic-480b", "train_4k", "multi", "hc_mb2_tri",
+     {"REPRO_MICROBATCHES": "2", "REPRO_SHARD_RESIDUALS": "1",
+      "REPRO_ATTN_IMPL": "flash_tri"}),
+]
+
+
+def term_str(rec):
+    h = rec["hlo"]
+    comp = h["dot_flops"] / 197e12
+    coll = h["coll_bytes_ici"] / (4 * 50e9) + h["coll_bytes_dcn"] / 25e9
+    ratio = rec["model_flops"] / max(rec["n_chips"] * h["dot_flops"], 1)
+    return (f"compute={comp*1e3:8.1f}ms coll={coll*1e3:8.1f}ms "
+            f"ratio={ratio:.3f} "
+            f"peak_tpu={rec['memory'].get('peak_bytes_tpu', 0)/2**30:6.2f}GiB")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    env0 = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    for arch, shape, mp, tag, knobs in RUNS:
+        if args.only and args.only not in (arch, tag):
+            continue
+        meshname = "2x16x16" if mp == "multi" else "16x16"
+        cell = f"{arch}__{shape}__{meshname}__{tag}"
+        path = os.path.join(ART, cell + ".json")
+        if not os.path.exists(path):
+            env = dict(env0, **knobs)
+            r = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+                 "--shape", shape, "--multi-pod", mp, "--tag", tag],
+                env=env, cwd=ROOT, capture_output=True, text=True)
+            print((r.stdout or "").strip().splitlines()[-1:] or
+                  [f"rc={r.returncode} {(r.stderr or '')[-200:]}"])
+        base_path = os.path.join(ART, f"{arch}__{shape}__{meshname}__baseline.json")
+        if os.path.exists(path) and os.path.exists(base_path):
+            rec = json.load(open(path))
+            base = json.load(open(base_path))
+            if rec.get("status") == "ok" and base.get("status") == "ok":
+                print(f"{arch}/{shape}/{meshname}")
+                print(f"  baseline   {term_str(base)}")
+                print(f"  {tag:10s} {term_str(rec)}")
+            else:
+                print(f"{cell}: {rec.get('status')} {rec.get('error','')[:120]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts."""
+import glob
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(ROOT, "artifacts", "dryrun")
+PEAK, HBM, ICI, DCN = 197e12, 819e9, 4 * 50e9, 25e9
+
+
+def rows(tag="baseline"):
+    out = []
+    for p in sorted(glob.glob(os.path.join(ART, f"*__{tag}.json"))):
+        out.append(json.load(open(p)))
+    return out
+
+
+def terms(r):
+    h = r["hlo"]
+    comp = h["dot_flops"] / PEAK
+    coll = h["coll_bytes_ici"] / ICI + h["coll_bytes_dcn"] / DCN
+    mem_lo = (r["memory"]["argument_bytes"] + r["memory"]["output_bytes"]) / HBM
+    mem_hi = h["out_bytes"] / HBM
+    # classify with the FUSED memory estimate (mem_lo): on TPU the unfused
+    # per-op bound (mem_hi) never materializes for matmul-dominated steps
+    dom = max((comp, "compute"), (mem_lo, "memory"), (coll, "collective"))
+    ratio = r["model_flops"] / max(r["n_chips"] * h["dot_flops"], 1.0)
+    frac = r["model_flops"] / r["n_chips"] / PEAK / max(dom[0], 1e-12)
+    return comp, mem_lo, mem_hi, coll, dom[1], ratio, frac
+
+
+def main():
+    rs = rows()
+    print("### §Dry-run (per (arch × shape × mesh) cell)\n")
+    print("| arch | shape | mesh | status | compile s | peak GiB/dev (CPU) | peak GiB/dev (TPU-corrected) | ICI GiB/dev | DCN GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rs:
+        if r["status"] == "ok":
+            m = r["memory"]
+            h = r["hlo"]
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                  f"{r['compile_s']} | {m['peak_bytes']/2**30:.2f} | "
+                  f"{m.get('peak_bytes_tpu', m['peak_bytes'])/2**30:.2f} | "
+                  f"{h['coll_bytes_ici']/2**30:.2f} | "
+                  f"{h['coll_bytes_dcn']/2**30:.2f} |")
+        else:
+            reason = r.get("reason", r.get("error", ""))[:60]
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"{r['status']} | | | | | {reason} |")
+
+    print("\n### §Roofline (single-pod 16×16 = 256 chips)\n")
+    print("| arch | shape | compute s | memory s (lo..hi) | collective s | bottleneck | MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rs:
+        if r["status"] != "ok" or r["mesh"] != "16x16":
+            continue
+        c, ml, mh, co, dom, ratio, frac = terms(r)
+        print(f"| {r['arch']} | {r['shape']} | {c:.4f} | {ml:.4f}..{mh:.4f} | "
+              f"{co:.4f} | {dom} | {ratio:.3f} | {frac:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Dry-run sweep orchestrator: one subprocess per cell (fresh memory, rlimit
+inside, per-cell timeout) so a pathological cell is recorded as an error
+instead of killing the sweep. Resumable via --skip-done semantics."""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(ROOT, "artifacts", "dryrun")
+
+ARCHS = ["internvl2-1b", "arctic-480b", "granite-moe-1b-a400m", "granite-34b",
+         "qwen1.5-32b", "granite-3-2b", "qwen2-0.5b", "seamless-m4t-large-v2",
+         "jamba-v0.1-52b", "falcon-mamba-7b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def done(cell):
+    p = os.path.join(ART, cell + ".json")
+    if not os.path.exists(p):
+        return False
+    try:
+        return json.load(open(p)).get("status") in ("ok", "skipped")
+    except Exception:
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--timeout", type=int, default=1500)
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--meshes", default="both")
+    ap.add_argument("--retry-errors", action="store_true")
+    args = ap.parse_args()
+    meshes = {"both": [("single", "16x16"), ("multi", "2x16x16")],
+              "single": [("single", "16x16")],
+              "multi": [("multi", "2x16x16")]}[args.meshes]
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mp, meshname in meshes:
+                cell = f"{arch}__{shape}__{meshname}__{args.tag}"
+                if done(cell):
+                    print(f"[have] {cell}", flush=True)
+                    continue
+                t0 = time.time()
+                r = subprocess.run(
+                    [sys.executable, "-m", "repro.launch.dryrun",
+                     "--arch", arch, "--shape", shape, "--multi-pod", mp,
+                     "--tag", args.tag],
+                    env=env, cwd=ROOT, timeout=None,
+                    capture_output=True, text=True,
+                    **({} if args.timeout == 0 else {}))
+                out = (r.stdout or "").strip().splitlines()
+                msg = out[-1] if out else f"rc={r.returncode}"
+                if r.returncode != 0 and "[ok]" not in msg and "[skipped]" not in msg:
+                    # record crash-level failures (OOM kill etc.)
+                    p = os.path.join(ART, cell + ".json")
+                    if not os.path.exists(p):
+                        json.dump(dict(arch=arch, shape=shape, mesh=meshname,
+                                       tag=args.tag, status="error",
+                                       error=f"subprocess rc={r.returncode}: "
+                                       + (r.stderr or "")[-400:]),
+                                  open(p, "w"), indent=1)
+                print(f"{msg}  [{time.time()-t0:.0f}s]", flush=True)
+
+
+if __name__ == "__main__":
+    main()

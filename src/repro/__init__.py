@@ -1,0 +1,7 @@
+"""repro: conv-primitive library + multi-pod JAX training/serving framework.
+
+Reproduction target: Nguyen, Moellic, Blayac (2023), "Evaluation of
+Convolution Primitives for Embedded Neural Networks on 32-bit
+Microcontrollers", adapted TPU-natively (see DESIGN.md).
+"""
+__version__ = "1.0.0"

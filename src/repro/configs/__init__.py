@@ -1,0 +1,2 @@
+from .base import (ARCH_IDS, SHAPES, ModelConfig, MoEConfig, MambaConfig,
+                   ShapeConfig, get_config, register, cell_supported)

@@ -1,0 +1,9 @@
+"""Core: the paper's convolution primitives, quantization, folding, cost models."""
+from .primitives import (ConvSpec, Primitives, apply, apply_block, init,
+                         init_block, add_conv, depthwise_conv, shift_channels,
+                         standard_conv, batchnorm_apply)
+from .quantize import (QTensor, quantize, requantize, frac_bits_for,
+                       mac_inner, addmac_inner, quantize_params)
+from .folding import fold, FOLDABLE
+from .energy import MCUModel, TPUv5e, accesses_direct, accesses_im2col, reuse_ratio
+from .qconv import qconv_apply, quantize_conv_params

@@ -1,0 +1,34 @@
+"""Batch-normalization folding (Jacob et al. 2018; paper §3.2).
+
+Folds an inference-time BN layer into the preceding convolution's weights
+and bias so the fused layer computes ``BN(conv(x))`` exactly:
+
+    W' = W * gamma / sqrt(var + eps)        (per output channel)
+    b' = beta + (b - mean) * gamma / sqrt(var + eps)
+
+Applies to standard / grouped / shift (fold into the pointwise) / dws (fold
+into the pointwise). NOT applicable to add-convolution — |W - x| is not
+linear in W, so scaling W does not scale the output; the add-conv path keeps
+its explicit BN (the paper reports the same limitation).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .primitives import ConvSpec
+
+FOLDABLE = ("standard", "grouped", "dws", "shift")
+
+
+def fold(conv_params: dict, bn: dict, spec: ConvSpec, eps: float = 1e-5) -> dict:
+    if spec.primitive not in FOLDABLE:
+        raise ValueError(f"BN folding not applicable to {spec.primitive!r} "
+                         "(paper §3.2: add-conv keeps explicit BN)")
+    inv = bn["gamma"] * (bn["var"] + eps) ** -0.5          # (Cy,)
+    out = dict(conv_params)
+    wkey = "w_pw" if spec.primitive in ("dws", "shift") else "w"
+    w = conv_params[wkey]
+    out[wkey] = (w * inv.astype(w.dtype)).astype(w.dtype)  # last dim = Cy
+    b = conv_params.get("b", jnp.zeros(w.shape[-1], w.dtype))
+    out["b"] = (bn["beta"] + (b - bn["mean"]) * inv).astype(w.dtype)
+    return out

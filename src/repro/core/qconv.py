@@ -1,0 +1,100 @@
+"""Integer-only quantized forward paths for all five primitives.
+
+Mirrors NNoM's execution model: int8 operands, int32 accumulation, one
+arithmetic shift to the output scale (Algorithm 1), optional bias added at
+accumulator scale. BN is folded beforehand for the multiplicative
+primitives (folding.fold); add-conv keeps an explicit integer BN-free path
+followed by a float BN (the paper's layout).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .primitives import ConvSpec, shift_channels, _DN
+from .quantize import QTensor, addmac_align, requantize, rshift_round
+
+
+def _conv_int(x_q: jax.Array, w_q: jax.Array, *, stride=1, padding="SAME",
+              groups=1) -> jax.Array:
+    """int8 x int8 -> int32 convolution (the MXU-native contraction)."""
+    return lax.conv_general_dilated(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32), (stride, stride), padding,
+        dimension_numbers=_DN, feature_group_count=groups,
+    )
+
+
+def _bias_at(acc: jax.Array, bias: Optional[QTensor], acc_fb: int) -> jax.Array:
+    if bias is None:
+        return acc
+    b = rshift_round(bias.q.astype(jnp.int32), bias.frac_bits - acc_fb)
+    return acc + b
+
+
+def qconv_apply(qparams: dict, x: QTensor, spec: ConvSpec, out_frac_bits: int) -> QTensor:
+    """Run one quantized primitive layer; returns int8 QTensor."""
+    p = spec.primitive
+    bias = qparams.get("b")
+
+    if p in ("standard", "grouped"):
+        w = qparams["w"]
+        groups = spec.groups if p == "grouped" else 1
+        acc_fb = x.frac_bits + w.frac_bits
+        acc = _conv_int(x.q, w.q, stride=spec.stride, padding=spec.padding,
+                        groups=groups)
+        acc = _bias_at(acc, bias, acc_fb)
+        return QTensor(requantize(acc, acc_fb, out_frac_bits), out_frac_bits)
+
+    if p == "dws":
+        w_dw, w_pw = qparams["w_dw"], qparams["w_pw"]
+        # depthwise at an intermediate scale, then pointwise
+        mid_fb = qparams.get("mid_frac_bits", out_frac_bits)
+        acc = _conv_int(x.q, jnp.transpose(w_dw.q, (0, 1, 3, 2)),
+                        stride=spec.stride, padding=spec.padding,
+                        groups=spec.in_channels)
+        h = QTensor(requantize(acc, x.frac_bits + w_dw.frac_bits, mid_fb), mid_fb)
+        acc2 = _conv_int(h.q, w_pw.q, stride=1, padding="SAME")
+        acc_fb = h.frac_bits + w_pw.frac_bits
+        acc2 = _bias_at(acc2, bias, acc_fb)
+        return QTensor(requantize(acc2, acc_fb, out_frac_bits), out_frac_bits)
+
+    if p == "shift":
+        # shift is pure data movement: exact in integer domain (paper's point)
+        shifted = shift_channels(x.q, qparams["shifts"])
+        w_pw = qparams["w_pw"]
+        acc_fb = x.frac_bits + w_pw.frac_bits
+        acc = _conv_int(shifted, w_pw.q, stride=spec.stride, padding="SAME")
+        acc = _bias_at(acc, bias, acc_fb)
+        return QTensor(requantize(acc, acc_fb, out_frac_bits), out_frac_bits)
+
+    if p == "add":
+        w = qparams["w"]
+        hk, cx, cy = spec.kernel_size, spec.in_channels, spec.out_channels
+        pads = ((hk // 2, (hk - 1) // 2),) * 2 if spec.padding == "SAME" else ((0, 0), (0, 0))
+        patches = lax.conv_general_dilated_patches(
+            x.q.astype(jnp.int32), (hk, hk), (1, 1), pads, dimension_numbers=_DN)
+        b, hy, wy, _ = patches.shape
+        patches = patches.reshape(b, hy, wy, cx, hk * hk)
+        wk = jnp.transpose(w.q, (2, 0, 1, 3)).reshape(cx, hk * hk, cy).astype(jnp.int32)
+        xi, wi, acc_fb = addmac_align(patches[..., None], wk[None, None, None],
+                                      x.frac_bits, w.frac_bits)
+        acc = -jnp.sum(jnp.abs(xi - wi), axis=(3, 4))
+        acc = _bias_at(acc, bias, acc_fb)
+        return QTensor(requantize(acc, acc_fb, out_frac_bits), out_frac_bits)
+
+    raise ValueError(p)
+
+
+def quantize_conv_params(params: dict, spec: ConvSpec) -> dict:
+    """Per-tensor power-of-two PTQ of a float primitive layer."""
+    from .quantize import quantize
+    out = {}
+    for k, v in params.items():
+        if k == "shifts":
+            out[k] = v
+        else:
+            out[k] = quantize(v)
+    return out

@@ -1,0 +1,134 @@
+"""Power-of-two symmetric int8 quantization (paper Eq. 4 + Algorithm 1).
+
+The paper writes Eq. 4 as::
+
+    dec = ceil(log2(max |X_f|));   x_i = floor(x_f * 2^{(8-1)-dec})
+
+i.e. the scale is 2^{dec-7}; ``frac_bits = 7 - dec`` is NNoM's "dec_bits"
+(number of fractional bits). Algorithm 1's ``dec_*`` symbols are these
+fractional-bit counts — rescaling between scales is then a plain arithmetic
+shift, never a division. We carry ``frac_bits`` explicitly.
+
+All integer paths use int32 accumulators and arithmetic right shifts,
+mirroring the Cortex-M implementation; the same scheme feeds the int8 MXU
+Pallas kernels (kernels/matmul_q8.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QTensor:
+    """int8 values with a power-of-two scale: value ≈ q * 2^{-frac_bits}."""
+
+    q: jax.Array                       # int8
+    frac_bits: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def scale(self) -> float:
+        return 2.0 ** (-self.frac_bits)
+
+    def dequantize(self) -> jax.Array:
+        return self.q.astype(jnp.float32) * self.scale
+
+
+def frac_bits_for(x: jax.Array | float) -> int:
+    """7 - ceil(log2(max|x|)) — static python int (calibration time)."""
+    m = float(jnp.max(jnp.abs(x))) if hasattr(x, "shape") else abs(float(x))
+    if m == 0.0:
+        return 7
+    return 7 - math.ceil(math.log2(m))
+
+
+def quantize(x: jax.Array, frac_bits: Optional[int] = None) -> QTensor:
+    """Eq. 4: floor(x * 2^{frac_bits}) clipped to int8."""
+    fb = frac_bits_for(x) if frac_bits is None else frac_bits
+    q = jnp.floor(x.astype(jnp.float32) * (2.0 ** fb))
+    q = jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8)
+    return QTensor(q=q, frac_bits=fb)
+
+
+def rshift_round(acc: jax.Array, shift: int) -> jax.Array:
+    """Arithmetic right shift (floor), as NNoM's ``>>``. shift may be <=0."""
+    if shift > 0:
+        return jnp.right_shift(acc, shift)
+    if shift < 0:
+        return jnp.left_shift(acc, -shift)
+    return acc
+
+
+def requantize(acc: jax.Array, acc_frac_bits: int, out_frac_bits: int) -> jax.Array:
+    """int32 accumulator -> int8 at the output scale (Algorithm 1, line 3)."""
+    shifted = rshift_round(acc, acc_frac_bits - out_frac_bits)
+    return jnp.clip(shifted, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1 (left): multiplicative inner loop  out = (i*w) >> shift
+# --------------------------------------------------------------------------
+
+def mac_inner(x_q: jax.Array, w_q: jax.Array, fb_x: int, fb_w: int, fb_y: int):
+    """Reference integer inner loop for one (input, weight) pair.
+
+    Accumulator frac bits = fb_x + fb_w; output shift = fb_x + fb_w - fb_y.
+    """
+    acc = x_q.astype(jnp.int32) * w_q.astype(jnp.int32)
+    return requantize(acc, fb_x + fb_w, fb_y)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1 (right): additive (AdderNet) inner loop.
+# Operands must sit on a COMMON scale before |i - w|; align the coarser one
+# by a left shift, accumulate at max(fb_x, fb_w) fractional bits.
+# --------------------------------------------------------------------------
+
+def addmac_align(x_q: jax.Array, w_q: jax.Array, fb_x: int, fb_w: int):
+    """Return int32 operands aligned to a common scale + that scale's fb."""
+    shift = abs(fb_x - fb_w)
+    xi = x_q.astype(jnp.int32)
+    wi = w_q.astype(jnp.int32)
+    if fb_x > fb_w:        # weight is coarser: w << shift
+        wi = jnp.left_shift(wi, shift)
+        fb = fb_x
+    elif fb_w > fb_x:      # input is coarser: i << shift
+        xi = jnp.left_shift(xi, shift)
+        fb = fb_w
+    else:
+        fb = fb_x
+    return xi, wi, fb
+
+
+def addmac_inner(x_q, w_q, fb_x: int, fb_w: int, fb_y: int):
+    xi, wi, fb = addmac_align(x_q, w_q, fb_x, fb_w)
+    acc = -jnp.abs(xi - wi)
+    return requantize(acc, fb, fb_y)
+
+
+# --------------------------------------------------------------------------
+# Calibration helper: run a float fn on sample data, pick output frac bits.
+# --------------------------------------------------------------------------
+
+def calibrate(fn, *sample_args) -> int:
+    out = fn(*sample_args)
+    return frac_bits_for(out)
+
+
+def quantize_params(params, frac_bits: Optional[dict] = None):
+    """Quantize a pytree of float weights leaf-by-leaf (per-tensor scales)."""
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    out = []
+    for leaf in flat:
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            out.append(quantize(leaf))
+        else:                      # e.g. shift tables stay int
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot spots (see EXAMPLE.md).
+
+conv_im2col : standard/grouped conv -> lazy-im2col MXU matmuls (SIMD path)
+conv_dw     : depthwise conv on the VPU
+conv_shift  : shift conv, shifts fused into the im2col sampling (paper §3.3)
+conv_add    : AdderNet L1 conv — VPU only, no MXU analogue (paper: no SIMD)
+conv1d_causal: Mamba/Jamba depthwise causal conv1d (paper primitive in LMs)
+matmul_q8   : tiled MXU matmul with int8 power-of-two requantization
+"""
+from .ops import (conv2d, depthwise2d, shift_conv2d, add_conv2d,
+                  causal_conv1d, matmul)

@@ -1,0 +1,60 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+TPU target, CPU-validated: kernels are written against the TPU memory
+hierarchy (HBM -> VMEM BlockSpecs -> MXU/VPU) and validated on CPU with
+``interpret=True``. ``use_interpret()`` auto-selects interpret mode when no
+TPU is present so the same call sites run everywhere.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+# MXU native tile: 128x128 systolic; VPU lanes (8, 128).
+MXU = 128
+SUBLANE = 8
+
+
+def use_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "auto")
+    if env in ("1", "true"):
+        return True
+    if env in ("0", "false"):
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def pad_dim(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    """Zero-pad one axis up to a multiple (wrapper-level tile alignment)."""
+    size = x.shape[axis]
+    target = round_up(size, multiple)
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads)
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Largest power-of-two block <= preferred that is used with a cdiv grid
+    + wrapper padding, so any dim works while MXU-aligned dims stay aligned."""
+    b = min(preferred, dim)
+    # round up small dims to themselves; keep pow2-ish blocks otherwise
+    p = 1
+    while p * 2 <= b:
+        p *= 2
+    return p if dim >= preferred else round_up(dim, SUBLANE) if dim % SUBLANE else dim
+
+
+def acc_dtype(dtype) -> jnp.dtype:
+    return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else jnp.float32

@@ -1,0 +1,79 @@
+"""Add (AdderNet) convolution Pallas kernel — VPU only, by necessity.
+
+The paper could not give add-conv a SIMD path because no __SMLAD-like
+instruction exists for |a-b| accumulation (§3.3). The same holds on TPU:
+the MXU computes contractions (sum of products), and L1 distance
+-Σ|w - x| is not a contraction, so the systolic array is unusable. This
+kernel is the TPU-faithful equivalent: broadcast |patch - w| tiles on the
+8x128 VPU with VMEM-blocked filters, accumulating in int32/f32. Its
+per-MAC cost is intrinsically higher than the MXU paths — reproducing the
+paper's measured add-conv penalty at the architectural level.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import acc_dtype
+
+
+def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift,
+            x_preshift, w_preshift):
+    adt = acc_dtype(x_ref.dtype)
+    cx = x_ref.shape[-1]
+    bco = w_ref.shape[-1]
+    acc = jnp.zeros((hout * wout, bco), adt)
+    for i in range(hk):
+        for j in range(hk):
+            patch = x_ref[0, i:i + hout, j:j + wout, :].astype(adt)
+            if x_preshift:                  # Algorithm 1 (right): align scales
+                patch = jnp.left_shift(patch, x_preshift)
+            wv = w_ref[i, j].astype(adt)    # (Cx, BCO)
+            if w_preshift:
+                wv = jnp.left_shift(wv, w_preshift)
+            a = patch.reshape(hout * wout, cx)
+            # -Σ_c |a[:, c] - w[c, n]| : VPU broadcast, no MXU analogue
+            acc = acc - jnp.sum(jnp.abs(a[:, :, None] - wv[None, :, :]), axis=1)
+    if requant_shift is not None:
+        if requant_shift > 0:
+            acc = jnp.right_shift(acc, requant_shift)
+        elif requant_shift < 0:
+            acc = jnp.left_shift(acc, -requant_shift)
+        acc = jnp.clip(acc, -128, 127)
+    o_ref[0] = acc.reshape(hout, wout, bco).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_co", "requant_shift",
+                                             "x_preshift", "w_preshift",
+                                             "out_dtype", "interpret"))
+def add_conv2d(x: jax.Array, w: jax.Array, *, block_co: int = 8,
+               requant_shift: int | None = None, x_preshift: int = 0,
+               w_preshift: int = 0, out_dtype=None,
+               interpret: bool = True) -> jax.Array:
+    """SAME stride-1 AdderNet conv (Eq. 3). x: (N,H,W,Cx); w: (HK,HK,Cx,Cy)."""
+    n, h, wd, cx = x.shape
+    hk, _, _, cy = w.shape
+    out_dtype = out_dtype or (jnp.int8 if requant_shift is not None else x.dtype)
+    ph, pw = hk // 2, (hk - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (ph, pw), (ph, pw), (0, 0)))
+    hp, wp = xp.shape[1], xp.shape[2]
+    bco = min(block_co, cy)
+    while cy % bco:
+        bco -= 1
+    kern = functools.partial(_kernel, hk=hk, hout=h, wout=wd,
+                             out_dtype=out_dtype, requant_shift=requant_shift,
+                             x_preshift=x_preshift, w_preshift=w_preshift)
+    return pl.pallas_call(
+        kern,
+        grid=(n, cy // bco),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, cx), lambda b, cb: (b, 0, 0, 0)),
+            pl.BlockSpec((hk, hk, cx, bco), lambda b, cb: (0, 0, 0, cb)),
+        ],
+        out_specs=pl.BlockSpec((1, h, wd, bco), lambda b, cb: (b, 0, 0, cb)),
+        out_shape=jax.ShapeDtypeStruct((n, h, wd, cy), out_dtype),
+        interpret=interpret,
+    )(xp, w)

@@ -1,0 +1,67 @@
+"""Depthwise convolution Pallas kernel (VPU path).
+
+Depthwise conv has no channel contraction, so the MXU is idle — like the
+paper's observation (via Jeon & Kim) that depthwise is *slower per MAC*
+than pointwise on real hardware despite fewer MACs. On TPU it runs on the
+8x128 VPU as HK^2 shifted element-wise multiply-accumulates; channels map
+to the 128-lane dimension. Used standalone (dws primitive, stage 1) and as
+the reference pattern for the Mamba causal conv1d kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import acc_dtype
+
+
+def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift):
+    adt = acc_dtype(x_ref.dtype)
+    bc = w_ref.shape[-1]
+    acc = jnp.zeros((hout, wout, bc), adt)
+    for i in range(hk):
+        for j in range(hk):
+            acc = acc + (x_ref[0, i:i + hout, j:j + wout, :].astype(adt)
+                         * w_ref[i, j].astype(adt)[None, None, :])
+    if requant_shift is not None:
+        if requant_shift > 0:
+            acc = jnp.right_shift(acc, requant_shift)
+        elif requant_shift < 0:
+            acc = jnp.left_shift(acc, -requant_shift)
+        acc = jnp.clip(acc, -128, 127)
+    o_ref[0] = acc.astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "requant_shift",
+                                             "out_dtype", "interpret"))
+def depthwise2d(x: jax.Array, w_dw: jax.Array, *, block_c: int = 128,
+                requant_shift: int | None = None, out_dtype=None,
+                interpret: bool = True) -> jax.Array:
+    """SAME stride-1 depthwise conv. x: (N,H,W,C); w_dw: (HK,HK,C)."""
+    n, h, wd, c = x.shape
+    hk = w_dw.shape[0]
+    if w_dw.ndim == 4:                       # accept (HK,HK,C,1) layout
+        w_dw = w_dw[..., 0]
+    out_dtype = out_dtype or (jnp.int8 if requant_shift is not None else x.dtype)
+    ph, pw = hk // 2, (hk - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (ph, pw), (ph, pw), (0, 0)))
+    hp, wp = xp.shape[1], xp.shape[2]
+    bc = min(block_c, c)
+    while c % bc:
+        bc -= 1
+    kern = functools.partial(_kernel, hk=hk, hout=h, wout=wd,
+                             out_dtype=out_dtype, requant_shift=requant_shift)
+    return pl.pallas_call(
+        kern,
+        grid=(n, c // bc),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, bc), lambda b, cb: (b, 0, 0, cb)),
+            pl.BlockSpec((hk, hk, bc), lambda b, cb: (0, 0, cb)),
+        ],
+        out_specs=pl.BlockSpec((1, h, wd, bc), lambda b, cb: (b, 0, 0, cb)),
+        out_shape=jax.ShapeDtypeStruct((n, h, wd, c), out_dtype),
+        interpret=interpret,
+    )(xp, w_dw)

@@ -1,0 +1,87 @@
+"""Shift convolution Pallas kernel: fused shifted-gather + pointwise MXU matmul.
+
+The paper modifies im2col's *sampling step* to read each channel at its own
+(alpha, beta) offset (§3.3) — the shift itself is free pointer arithmetic.
+TPU-native translation: shifts are static layer parameters, so the wrapper
+groups channels by identical shift (<= HK^2 distinct values), permutes the
+channel axis so groups are contiguous, and the kernel accumulates one
+statically-shifted (H*W, C_grp) x (C_grp, BCO) MXU matmul per group —
+the shifted intermediate map I (Eq. 2) is never materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .common import acc_dtype
+
+
+def _kernel(x_ref, w_ref, o_ref, *, groups, hout, wout, pad, out_dtype,
+            requant_shift):
+    adt = acc_dtype(x_ref.dtype)
+    bco = w_ref.shape[-1]
+    acc = jnp.zeros((hout * wout, bco), adt)
+    for start, size, (da, db) in groups:     # static unroll over shift groups
+        r0, c0 = pad + da, pad + db
+        patch = x_ref[0, r0:r0 + hout, c0:c0 + wout, start:start + size]
+        acc = acc + jnp.dot(patch.reshape(hout * wout, size).astype(adt),
+                            w_ref[start:start + size, :].astype(adt),
+                            preferred_element_type=adt)
+    if requant_shift is not None:
+        if requant_shift > 0:
+            acc = jnp.right_shift(acc, requant_shift)
+        elif requant_shift < 0:
+            acc = jnp.left_shift(acc, -requant_shift)
+        acc = jnp.clip(acc, -128, 127)
+    o_ref[0] = acc.reshape(hout, wout, bco).astype(out_dtype)
+
+
+def shift_conv2d(x: jax.Array, shifts, w_pw: jax.Array, *, block_co: int = 128,
+                 requant_shift: int | None = None, out_dtype=None,
+                 interpret: bool = True) -> jax.Array:
+    """x: (N,H,W,C); shifts: (C,2) static ints; w_pw: (C,Cy) or (1,1,C,Cy)."""
+    if w_pw.ndim == 4:
+        w_pw = w_pw[0, 0]
+    n, h, wd, c = x.shape
+    cy = w_pw.shape[-1]
+    out_dtype = out_dtype or (jnp.int8 if requant_shift is not None else x.dtype)
+
+    shifts_np = np.asarray(shifts)
+    pad = max(1, int(np.abs(shifts_np).max()))
+    # group channels by identical shift; permute so groups are contiguous
+    order = np.lexsort((shifts_np[:, 1], shifts_np[:, 0]))
+    groups = []
+    i = 0
+    while i < c:
+        da, db = shifts_np[order[i]]
+        j = i
+        while j < c and shifts_np[order[j], 0] == da and shifts_np[order[j], 1] == db:
+            j += 1
+        groups.append((i, j - i, (int(da), int(db))))
+        i = j
+    groups = tuple(groups)
+
+    xp = jnp.pad(x[..., order], ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    wp = w_pw[order, :]
+    hp, wpd = xp.shape[1], xp.shape[2]
+    bco = min(block_co, cy)
+    while cy % bco:
+        bco -= 1
+
+    kern = functools.partial(_kernel, groups=groups, hout=h, wout=wd, pad=pad,
+                             out_dtype=out_dtype, requant_shift=requant_shift)
+    return pl.pallas_call(
+        kern,
+        grid=(n, cy // bco),
+        in_specs=[
+            pl.BlockSpec((1, hp, wpd, c), lambda b, cb: (b, 0, 0, 0)),
+            pl.BlockSpec((c, bco), lambda b, cb: (0, cb)),
+        ],
+        out_specs=pl.BlockSpec((1, h, wd, bco), lambda b, cb: (b, 0, 0, cb)),
+        out_shape=jax.ShapeDtypeStruct((n, h, wd, cy), out_dtype),
+        interpret=interpret,
+    )(xp, wp)

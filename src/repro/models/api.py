@@ -1,0 +1,123 @@
+"""Unified model API: init / loss / prefill / decode / input_specs per family.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that (arch x shape) cell — the dry-run lowers against these
+without allocating anything. Modality frontends (vlm/audio) are STUBS: the
+specs include precomputed patch/frame embeddings, per the assignment.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+from . import encdec as E
+from . import transformer as T
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.family == "encdec":
+        return E.init_encdec(cfg, key)
+    return T.init_lm(cfg, key)
+
+
+def param_specs(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return E.encdec_param_specs(cfg)
+    return T.lm_param_specs(cfg)
+
+
+def loss_fn(cfg: ModelConfig, *, attn_impl="full", remat="full"):
+    if cfg.family == "encdec":
+        return functools.partial(E.encdec_loss, cfg=cfg, attn_impl=attn_impl,
+                                 remat=remat)
+    return functools.partial(T.lm_loss, cfg=cfg, attn_impl=attn_impl,
+                             remat=remat)
+
+
+def prefill_fn(cfg: ModelConfig, max_len: int, *, attn_impl="flash"):
+    if cfg.family == "encdec":
+        def fn(params, batch):
+            return E.encdec_prefill(params, batch["frames"], batch["tokens"],
+                                    cfg, max_len, attn_impl=attn_impl)
+    else:
+        def fn(params, batch):
+            return T.prefill(params, batch["tokens"], cfg, max_len,
+                             embeds=batch.get("embeds"), attn_impl=attn_impl)
+    return fn
+
+
+def decode_fn(cfg: ModelConfig, *, sp_axis: Optional[str] = None):
+    if cfg.family == "encdec":
+        return functools.partial(E.encdec_decode_step, cfg=cfg, sp_axis=sp_axis)
+    return functools.partial(T.decode_step, cfg=cfg, sp_axis=sp_axis)
+
+
+def cache_specs(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return E.encdec_cache_specs()
+    return T.cache_specs(cfg)
+
+
+# ------------------------------------------------------------ input specs --
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for the cell's step function inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            p = cfg.frontend_positions
+            return {"tokens": _sds((b, s - p), jnp.int32),
+                    "embeds": _sds((b, p, cfg.d_model), cdt)}
+        if cfg.family == "encdec":
+            # split budget: encoder frames S, decoder tokens S (paper-style AST)
+            return {"frames": _sds((b, s, cfg.d_model), cdt),
+                    "tokens": _sds((b, s), jnp.int32)}
+        return {"tokens": _sds((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            p = cfg.frontend_positions
+            return {"tokens": _sds((b, s - p), jnp.int32),
+                    "embeds": _sds((b, p, cfg.d_model), cdt)}
+        if cfg.family == "encdec":
+            return {"frames": _sds((b, s, cfg.d_model), cdt),
+                    "tokens": _sds((b, 128), jnp.int32)}
+        return {"tokens": _sds((b, s), jnp.int32)}
+    # decode: one new token against a cache of seq_len
+    specs = {"token": _sds((b, 1), jnp.int32)}
+    specs["cache"] = cache_structs(cfg, b, s)
+    return specs
+
+
+def cache_structs(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    # eval_shape: never allocates (decode caches reach tens of GiB)
+    if cfg.family != "encdec":
+        return jax.eval_shape(
+            lambda: T.init_cache(cfg, batch, max_len, dtype))
+    return jax.eval_shape(lambda: _encdec_cache_struct(cfg, batch, max_len))
+
+
+def _encdec_cache_struct(cfg: ModelConfig, batch: int, max_len: int):
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    L = cfg.n_layers
+    z = jnp.zeros
+    return {"k": z((L, batch, max_len, hkv, dh), jnp.bfloat16),
+            "v": z((L, batch, max_len, hkv, dh), jnp.bfloat16),
+            "xk": z((L, batch, max_len, hkv, dh), jnp.bfloat16),
+            "xv": z((L, batch, max_len, hkv, dh), jnp.bfloat16),
+            "len": z((), jnp.int32)}
+
+
+def param_structs(cfg: ModelConfig):
+    """ShapeDtypeStructs of the parameter tree (eval_shape; no allocation)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))

@@ -1,0 +1,233 @@
+"""GQA attention: full (training), flash-scan (prefill), sharded-KV decode (SP).
+
+Memory posture per shape cell (DESIGN.md §5):
+  * train_4k   -> ``full`` einsum attention inside a remat'd layer; S=4k
+                  scores fit VMEM/HBM budgets and stay differentiable.
+  * prefill_32k-> ``flash``: lax.scan over KV blocks with online softmax;
+                  O(S·block) memory, no S×S materialization. Inference-only,
+                  so no custom VJP is needed.
+  * decode_*   -> one-token attention against the KV cache; with SP the
+                  cache's seq dim is sharded over "data" and partial
+                  (m, l, o) statistics are combined with psum/pmax — the
+                  collective payload is O(heads·d) not O(S).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,Hkv,G,D); k: (B,Sk,Hkv,D) -> (B,Hkv,G,Sq,Sk) f32."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _split_gqa(q, n_kv):
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, d)
+
+
+def full_attention(q, k, v, *, causal: bool, q_offset=0):
+    """Einsum attention. q:(B,Sq,Hq,D), k/v:(B,Sk,Hkv,D) -> (B,Sq,Hq,D)."""
+    b, sq, hq, d = q.shape
+    n_kv = k.shape[2]
+    qg = _split_gqa(q, n_kv) * (d ** -0.5)
+    s = _gqa_scores(qg, k)
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(b, sq, hq, d)
+
+
+def _flash_fwd_scan(qg, k, v, *, causal, bk, q_offset):
+    b, sq = qg.shape[0], qg.shape[1]
+    n_kv, g, d = qg.shape[2], qg.shape[3], qg.shape[-1]
+    sk = k.shape[1]
+    nb = sk // bk
+    qpos = q_offset + jnp.arange(sq)
+    kb = jnp.moveaxis(k.reshape(b, nb, bk, n_kv, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, bk, n_kv, d), 1, 0)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, kk = blk
+        s = _gqa_scores(qg, kc)                       # (B,Hkv,G,Sq,bk) f32
+        if causal:
+            kpos = kk * bk + jnp.arange(bk)
+            s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None, None],
+                          s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(kc.dtype), vc).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, n_kv, g, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, n_kv, g, sq), jnp.float32),
+            jnp.zeros((b, n_kv, g, sq, d), jnp.float32))
+    (m, l, acc), _ = lax.scan(step, init, (kb, vb, jnp.arange(nb)))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))          # (B,Hkv,G,Sq)
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash(q, k, v, causal, bk, q_offset):
+    qg = _split_gqa(q, k.shape[2]) * (q.shape[-1] ** -0.5)
+    o, _ = _flash_fwd_scan(qg, k, v, causal=causal, bk=bk, q_offset=q_offset)
+    b, sq, hq, d = q.shape
+    return jnp.moveaxis(o, 3, 1).reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def _flash_vjp_fwd(q, k, v, causal, bk, q_offset):
+    qg = _split_gqa(q, k.shape[2]) * (q.shape[-1] ** -0.5)
+    o, lse = _flash_fwd_scan(qg, k, v, causal=causal, bk=bk, q_offset=q_offset)
+    b, sq, hq, d = q.shape
+    out = jnp.moveaxis(o, 3, 1).reshape(b, sq, hq, d).astype(q.dtype)
+    return out, (q, k, v, o, lse)
+
+
+def _flash_vjp_bwd(causal, bk, q_offset, res, do):
+    """FlashAttention-style backward: re-scan KV blocks, recompute p from
+    the saved logsumexp; O(Sq*bk) transient memory, no S^2 residuals."""
+    q, k, v, o, lse = res
+    b, sq, hq, d = q.shape
+    n_kv = k.shape[2]
+    g = hq // n_kv
+    sk = k.shape[1]
+    nb = sk // bk
+    scale = d ** -0.5
+    qg = (_split_gqa(q, n_kv) * scale).astype(jnp.float32)
+    qg = jnp.moveaxis(qg, 1, 3)                        # (B,Hkv,G,Sq,D)
+    dog = jnp.moveaxis(_split_gqa(do, n_kv), 1, 3).astype(jnp.float32)
+    delta = jnp.sum(dog * o, axis=-1)                  # (B,Hkv,G,Sq)
+    qpos = q_offset + jnp.arange(sq)
+    kb = jnp.moveaxis(k.reshape(b, nb, bk, n_kv, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, bk, n_kv, d), 1, 0)
+
+    def step(dq, blk):
+        kc, vc, kk = blk
+        s = jnp.einsum("bhgqd,bkhd->bhgqk", qg, kc.astype(jnp.float32))
+        if causal:
+            kpos = kk * bk + jnp.arange(bk)
+            s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None, None],
+                          s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                # (B,Hkv,G,Sq,bk)
+        dv = jnp.einsum("bhgqk,bhgqd->bkhd", p, dog).astype(v.dtype)
+        dp = jnp.einsum("bhgqd,bkhd->bhgqk", dog, vc.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        dq_new = dq + jnp.einsum("bhgqk,bkhd->bhgqd", ds,
+                                 kc.astype(jnp.float32)) * scale
+        dk = jnp.einsum("bhgqk,bhgqd->bkhd", ds, qg).astype(k.dtype)
+        return dq_new, (dk, dv)
+
+    dq0 = jnp.zeros((b, n_kv, g, sq, d), jnp.float32)
+    dq, (dks, dvs) = lax.scan(step, dq0, (kb, vb, jnp.arange(nb)))
+    dq = jnp.moveaxis(dq, 3, 1).reshape(b, sq, hq, d).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, sk, n_kv, d)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(b, sk, n_kv, d)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool, block_k: int = 256,
+                    q_offset=0):
+    """Blockwise online-softmax attention (differentiable, custom VJP)."""
+    sk = k.shape[1]
+    bk = min(block_k, sk)
+    while sk % bk:
+        bk -= 1
+    return _flash(q, k, v, causal, bk, q_offset)
+
+
+def flash_attention_tri(q, k, v, *, block_k: int = 256, n_chunks: int = 8):
+    """Causal flash with a static TRIANGLE schedule: q is split into
+    n_chunks python-unrolled chunks; chunk i only visits KV blocks
+    [0, (i+1)*Sq/n_chunks) — the fully-masked upper-rectangle work of the
+    plain scan (≈2x FLOPs at long S) is never issued. §Perf lever."""
+    b, sq, hq, d = q.shape
+    nc = n_chunks
+    while sq % nc:
+        nc -= 1
+    cq = sq // nc
+    outs = []
+    for i in range(nc):
+        qc = q[:, i * cq:(i + 1) * cq]
+        kv_end = (i + 1) * cq
+        outs.append(flash_attention(qc, k[:, :kv_end], v[:, :kv_end],
+                                    causal=True, block_k=min(block_k, kv_end),
+                                    q_offset=i * cq))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(q, k, v, *, causal: bool, impl: str = "full", q_offset=0,
+              block_k: int = 256):
+    if impl == "flash_tri" and causal and q.shape[1] == k.shape[1]:
+        return flash_attention_tri(q, k, v, block_k=block_k)
+    if impl in ("flash", "flash_tri"):
+        return flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                               block_k=block_k)
+    return full_attention(q, k, v, causal=causal, q_offset=q_offset)
+
+
+# ------------------------------------------------------------- decoding ---
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """One-token attention over a (possibly longer-than-filled) cache.
+
+    q: (B,1,Hq,D); caches: (B,S,Hkv,D); cache_len: () int32 — positions
+    >= cache_len are masked out.
+    """
+    b, _, hq, d = q.shape
+    n_kv = k_cache.shape[2]
+    s = k_cache.shape[1]
+    qg = _split_gqa(q, n_kv) * (d ** -0.5)
+    sc = _gqa_scores(qg, k_cache)                       # (B,Hkv,G,1,S)
+    mask = jnp.arange(s) < cache_len
+    sc = jnp.where(mask[None, None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache)
+    return o.reshape(b, 1, hq, d)
+
+
+def decode_attention_partial(q, k_shard, v_shard, valid_mask):
+    """Per-shard flash statistics for SP decode: returns (m, l, o_unnorm)."""
+    n_kv = k_shard.shape[2]
+    d = q.shape[-1]
+    qg = _split_gqa(q, n_kv) * (d ** -0.5)
+    sc = _gqa_scores(qg, k_shard)                       # (B,Hkv,G,1,Sloc)
+    sc = jnp.where(valid_mask[None, None, None, None], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1)
+    p = jnp.exp(sc - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype), v_shard)
+    return m, l, o.astype(jnp.float32)
+
+
+def sp_combine(m, l, o, axis_name: str):
+    """Combine per-shard (m, l, o·l-weighted) stats across the SP axis.
+
+    Collective payload: 2 scalars + d floats per (head, query) — O(S/shards)
+    compute, O(d) comms. This is the decode-side analogue of flash's online
+    softmax, distributed over the mesh.
+    """
+    m_glob = lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_glob)
+    l_glob = lax.psum(l * corr, axis_name)
+    o_glob = lax.psum(o * corr[..., None], axis_name)
+    return o_glob / jnp.maximum(l_glob, 1e-30)[..., None]

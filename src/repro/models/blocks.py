@@ -1,0 +1,120 @@
+"""Shared model blocks: norms, MLPs, embeddings, RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+
+def rmsnorm(x, w, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def mlp(h, p, act: str, cdt):
+    """SwiGLU (3 mats) or GELU (2 mats) feed-forward."""
+    h = h.astype(cdt)
+    if act == "silu":
+        g = h @ p["w_gate"].astype(cdt)
+        u = h @ p["w_up"].astype(cdt)
+        z = jax.nn.silu(g) * u
+    else:
+        u = h @ p["w_up"].astype(cdt)
+        z = jax.nn.gelu(u)
+    z = constrain(z, "batch", "seq", "ffn")
+    return z @ p["w_down"].astype(cdt)
+
+
+def init_mlp(key, d, ff, act, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    p = {"w_up": jax.random.normal(k1, (d, ff), dtype) * s_in,
+         "w_down": jax.random.normal(k2, (ff, d), dtype) * s_out}
+    if act == "silu":
+        p["w_gate"] = jax.random.normal(k3, (d, ff), dtype) * s_in
+    return p
+
+
+def mlp_specs(act, prefix_layers=True):
+    L = ("layers",) if prefix_layers else ()
+    p = {"w_up": L + ("embed", "ffn"), "w_down": L + ("ffn", "embed")}
+    if act == "silu":
+        p["w_gate"] = L + ("embed", "ffn")
+    return p
+
+
+# ----------------------------------------------------------------- RoPE ---
+def rope(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: (..., S). Rotates pairs (d, d+Dh/2)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq        # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token CE in f32; labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    valid = (labels >= 0) if mask is None else mask
+    lab = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def chunked_softmax_ce(h, w_unembed, labels, *, chunk: int = 512,
+                       z_loss: float = 1e-4):
+    """CE over a huge vocab without materializing (B, S, V) logits.
+
+    Scans remat'd chunks of the sequence: each chunk computes its logits,
+    reduces to (nll_sum, z_sum, count), and the (B, chunk, V) tensor is
+    recomputed in the backward pass. Peak memory drops from O(S·V) to
+    O(chunk·V) per device — mandatory at vocab 150k+ x 1M tokens.
+    """
+    b, s, d = h.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = (s + pad) // c
+    hc = jnp.moveaxis(h.reshape(b, n, c, d), 1, 0)          # (n, B, c, d)
+    yc = jnp.moveaxis(labels.reshape(b, n, c), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h_c, y_c = xs
+        logits = h_c.astype(jnp.float32) @ w_unembed.astype(jnp.float32)
+        logits = constrain(logits, "batch", None, "vocab")
+        valid = y_c >= 0
+        lab = jnp.maximum(y_c, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = jnp.sum((lse - ll) * valid)
+        zs = jnp.sum(jnp.square(lse) * valid)
+        cnt = jnp.sum(valid)
+        l_sum, z_sum, n_sum = carry
+        return (l_sum + nll, z_sum + zs, n_sum + cnt), None
+
+    (l_sum, z_sum, n_sum), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(()), jnp.zeros((), jnp.int32)),
+        (hc, yc))
+    denom = jnp.maximum(n_sum, 1).astype(jnp.float32)
+    return l_sum / denom + z_loss * z_sum / denom

@@ -1,0 +1,141 @@
+"""Paper-side CNN: a small image classifier where EVERY conv block's
+primitive is selectable (standard / grouped / dws / shift / add), exactly
+the way the paper swaps NNoM layer implementations. Runs on the float
+primitives for training and on the integer-only Algorithm-1 path (with BN
+folding where applicable) after PTQ. `method="pallas"` routes the forward
+through the TPU kernels."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ConvSpec, apply, apply_block, batchnorm_apply, fold,
+                        frac_bits_for, init_block, quantize)
+from repro.core.qconv import qconv_apply, quantize_conv_params
+from repro.kernels import ops as K
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    primitive: str = "standard"
+    groups: int = 2
+    widths: tuple = (16, 32, 64)
+    kernel_size: int = 3
+    num_classes: int = 10
+    in_channels: int = 3
+    image_size: int = 32
+
+
+def _specs(cfg: CNNConfig):
+    specs = []
+    cin = cfg.in_channels
+    for w in cfg.widths:
+        prim = cfg.primitive
+        groups = cfg.groups if prim == "grouped" else 1
+        if prim == "grouped" and (cin % groups or w % groups):
+            prim, groups = "standard", 1      # first layer: 3 channels
+        if prim in ("dws", "shift") and cin < 4:
+            prim = "standard"                 # stem stays standard (paperlike)
+        specs.append(ConvSpec(primitive=prim, in_channels=cin, out_channels=w,
+                              kernel_size=cfg.kernel_size, groups=groups))
+        cin = w
+    return specs
+
+
+def init_cnn(cfg: CNNConfig, key):
+    specs = _specs(cfg)
+    ks = jax.random.split(key, len(specs) + 1)
+    params = {"blocks": [init_block(ks[i], s, with_bn=True)
+                         for i, s in enumerate(specs)],
+              "head": jax.random.normal(ks[-1], (cfg.widths[-1], cfg.num_classes))
+              * cfg.widths[-1] ** -0.5}
+    return params
+
+
+def cnn_forward(params, x, cfg: CNNConfig, *, train: bool = False):
+    specs = _specs(cfg)
+    h = x
+    for p, s in zip(params["blocks"], specs):
+        stats = {} if train else None
+        h = apply_block(p, h, s, train_stats=stats)
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ params["head"]
+
+
+def cnn_loss(params, batch, cfg: CNNConfig):
+    logits = cnn_forward(params, batch["images"], cfg, train=True)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return nll, acc
+
+
+# ---------------------------------------------------- BN re-estimation ---
+
+def calibrate_bn(params, cfg: CNNConfig, calib_x):
+    """Deployment-time BN statistics re-estimation: run calibration data
+    through the network and write each block's activation mean/var into the
+    inference BN buffers (training normalizes with batch stats; the EMA is
+    owned by this calibration pass)."""
+    specs = _specs(cfg)
+    h = calib_x
+    new_blocks = []
+    for p, s in zip(params["blocks"], specs):
+        y = apply(p["conv"], h, s)
+        bn = dict(p["bn"],
+                  mean=jnp.mean(y, axis=(0, 1, 2)).astype(jnp.float32),
+                  var=jnp.var(y, axis=(0, 1, 2)).astype(jnp.float32))
+        p = dict(p, bn=bn)
+        new_blocks.append(p)
+        h = jax.nn.relu(batchnorm_apply(bn, y))
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+    return dict(params, blocks=new_blocks)
+
+
+# ------------------------------------------------------------------ PTQ ---
+
+def quantize_cnn(params, cfg: CNNConfig, calib_x):
+    """Post-training quantization (paper scheme): re-estimate BN stats,
+    BN-fold the foldable blocks, pick power-of-two scales from calibration
+    activations, return an integer-only forward closure."""
+    params = calibrate_bn(params, cfg, calib_x)
+    specs = _specs(cfg)
+    h = calib_x
+    qblocks = []
+    for p, s in zip(params["blocks"], specs):
+        float_out = apply_block(p, h, s)
+        if s.primitive != "add":
+            folded = fold(p["conv"], p["bn"], s)
+            qp = quantize_conv_params(folded, s)
+            bn = None
+        else:                                  # paper: add-conv keeps BN
+            qp = quantize_conv_params(p["conv"], s)
+            bn = p["bn"]
+        ofb = frac_bits_for(float_out)
+        qblocks.append(dict(qp=qp, spec=s, out_fb=ofb, bn=bn))
+        h = jax.lax.reduce_window(float_out, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    head = params["head"]
+
+    def int_forward(x):
+        xq = quantize(x)
+        for blk in qblocks:
+            yq = qconv_apply(blk["qp"], xq, blk["spec"], blk["out_fb"])
+            y = yq.dequantize()
+            if blk["bn"] is not None:
+                y = batchnorm_apply(blk["bn"], y)
+            y = jax.nn.relu(y)
+            y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                      (1, 2, 2, 1), "VALID")
+            xq = quantize(y)
+        h2 = jnp.mean(xq.dequantize(), axis=(1, 2))
+        return h2 @ head
+
+    return int_forward

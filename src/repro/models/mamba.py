@@ -1,0 +1,182 @@
+"""Mamba-1 block: depthwise causal conv1d (paper primitive, Pallas kernel)
++ selective state-space scan.
+
+The conv1d stage runs on ``kernels/conv1d_causal.py`` — the paper's
+depthwise convolution adapted to the LM stack (DESIGN.md §Arch-applicability).
+
+The selective scan is chunked: a sequential ``lax.scan`` over chunks carries
+the (B, d_inner, d_state) state; inside each chunk an
+``associative_scan`` computes the recurrence in parallel. Chunking bounds
+the backward-pass residuals to O(n_chunks · state) instead of O(L · state),
+and each chunk body is remat'd.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MambaConfig
+from repro.kernels.ops import causal_conv1d
+from repro.parallel.sharding import constrain
+
+
+def init_mamba(key, d: int, m: MambaConfig, dtype):
+    di = m.expand * d
+    rank = m.rank(d)
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    p = {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (m.d_conv, di), dtype) * (m.d_conv ** -0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": jax.random.normal(ks[2], (di, rank + 2 * m.d_state), dtype) * (di ** -0.5),
+        "dt_proj": jax.random.normal(ks[3], (rank, di), dtype) * (rank ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(jnp.clip(
+            jnp.exp(jax.random.uniform(ks[4], (di,)) * 7.0 - 7.0) * 0.099 + 0.001,
+            1e-4))).astype(dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, m.d_state + 1, dtype=jnp.float32),
+                                  (di, 1))).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[5], (di, d), dtype) * (di ** -0.5),
+    }
+    return p
+
+
+def mamba_specs(prefix_layers=True):
+    L = ("layers",) if prefix_layers else ()
+    return {
+        "in_proj": L + ("embed", "d_inner"),
+        "conv_w": L + (None, "d_inner"),
+        "conv_b": L + ("d_inner",),
+        "x_proj": L + ("d_inner", None),
+        "dt_proj": L + (None, "d_inner"),
+        "dt_bias": L + ("d_inner",),
+        "A_log": L + ("d_inner", None),
+        "D": L + ("d_inner",),
+        "out_proj": L + ("d_inner", "embed"),
+    }
+
+
+def _ssm_chunk(h0, a_c, b_c, c_t):
+    """One chunk of the selective scan.
+
+    h0: (B, dI, N); a_c/b_c: (B, Lc, dI, N); c_t: (B, Lc, N).
+    Returns (h_last, y (B, Lc, dI)).
+    """
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    cum_a, cum_b = lax.associative_scan(comb, (a_c, b_c), axis=1)
+    h = cum_a * h0[:, None] + cum_b                        # (B, Lc, dI, N)
+    y = jnp.einsum("blds,bls->bld", h, c_t)
+    return h[:, -1], y
+
+
+def mamba_scan(x_c, dt, A, B_t, C_t, *, chunk: int = 256, h0=None):
+    """Selective scan. x_c, dt: (B,L,dI); A: (dI,N); B_t, C_t: (B,L,N).
+
+    Discretization (a = exp(dt*A), b = dt*B*x) happens LAZILY inside each
+    remat'd chunk: only (B, chunk, dI, N) f32 tensors ever materialize —
+    never (B, L, dI, N) — which keeps the per-layer footprint at
+    O(L/chunk) of the naive formulation.
+    """
+    b, l, di = x_c.shape
+    n = A.shape[-1]
+    ch = min(chunk, l)
+    while l % ch:
+        ch -= 1
+    nchunks = l // ch
+    A32 = A.astype(jnp.float32)
+
+    def chunked(t):
+        return jnp.moveaxis(t.reshape(b, nchunks, ch, t.shape[-1]), 1, 0)
+
+    @jax.checkpoint
+    def step(h, inp):
+        dt_c, x_cc, b_c, c_c = inp
+        dt32 = dt_c.astype(jnp.float32)
+        a_c = jnp.exp(dt32[..., None] * A32[None, None])       # (B,ch,dI,N)
+        bx_c = (dt32 * x_cc.astype(jnp.float32))[..., None] \
+            * b_c.astype(jnp.float32)[:, :, None, :]
+        return _ssm_chunk(h, a_c, bx_c, c_c.astype(jnp.float32))
+
+    h_init = jnp.zeros((b, di, n), jnp.float32) if h0 is None else h0
+    h_last, ys = lax.scan(step, h_init,
+                          (chunked(dt), chunked(x_c), chunked(B_t),
+                           chunked(C_t)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, di)
+    return y.astype(x_c.dtype), h_last
+
+
+def _resolve_conv_method(method: str) -> str:
+    """'auto': the Pallas kernel on single-device runs (exercises the paper
+    primitive); the XLA path under a mesh — an opaque pallas_call would
+    force its operands replicated under SPMD partitioning (DESIGN.md)."""
+    if method != "auto":
+        return method
+    from repro.parallel.sharding import current_mesh
+    return "xla" if current_mesh() is not None else "pallas"
+
+
+def mamba_forward(p, x, m: MambaConfig, cdt, *, chunk: int = 256,
+                  conv_method: str = "auto"):
+    """Full-sequence Mamba block. x: (B, L, d) -> (B, L, d)."""
+    di = p["conv_w"].shape[-1]
+    rank = p["dt_proj"].shape[0]
+    n = p["A_log"].shape[-1]
+    xz = x @ p["in_proj"].astype(cdt)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = constrain(x_in, "batch", None, "d_inner")
+    x_c = causal_conv1d(x_in, p["conv_w"].astype(cdt), method=conv_method)
+    x_c = jax.nn.silu(x_c + p["conv_b"].astype(cdt))
+    dbc = x_c @ p["x_proj"].astype(cdt)
+    dt_low, b_t, c_t = jnp.split(dbc, [rank, rank + n], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"].astype(cdt)
+                         + p["dt_bias"].astype(cdt))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = mamba_scan(x_c, dt, A, b_t, c_t, chunk=chunk)
+    y = y + p["D"].astype(cdt) * x_c
+    y = y * jax.nn.silu(z)
+    y = constrain(y, "batch", None, "d_inner")
+    return y @ p["out_proj"].astype(cdt)
+
+
+# ---------------------------------------------------------------- decode ---
+
+def mamba_init_state(cfg_d: int, m: MambaConfig, batch: int, dtype=jnp.float32):
+    di = m.expand * cfg_d
+    return {"conv": jnp.zeros((batch, m.d_conv - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, m.d_state), jnp.float32)}
+
+
+def mamba_decode_step(p, x_t, state, m: MambaConfig, cdt):
+    """One token. x_t: (B, 1, d); state: {conv (B,K-1,dI), ssm (B,dI,N)}."""
+    rank = p["dt_proj"].shape[0]
+    n = p["A_log"].shape[-1]
+    xz = x_t @ p["in_proj"].astype(cdt)
+    x_in, z = jnp.split(xz, 2, axis=-1)                    # (B,1,dI)
+    window = jnp.concatenate([state["conv"].astype(cdt), x_in], axis=1)
+    w = p["conv_w"].astype(cdt)                            # (K, dI)
+    x_c = jnp.einsum("bkd,kd->bd", window, w)[:, None] + p["conv_b"].astype(cdt)
+    x_c = jax.nn.silu(x_c)
+    dbc = x_c @ p["x_proj"].astype(cdt)
+    dt_low, b_t, c_t = jnp.split(dbc, [rank, rank + n], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"].astype(cdt)
+                         + p["dt_bias"].astype(cdt))       # (B,1,dI)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt.astype(jnp.float32)[0 if False else ...][..., None] * A[None, None])
+    a = a[:, 0]                                            # (B,dI,N)
+    bx = (dt.astype(jnp.float32) * x_c.astype(jnp.float32))[:, 0, :, None] \
+        * b_t.astype(jnp.float32)[:, 0, None, :]
+    h = a * state["ssm"] + bx
+    y = jnp.einsum("bds,bs->bd", h, c_t.astype(jnp.float32)[:, 0])[:, None]
+    y = y.astype(cdt) + p["D"].astype(cdt) * x_c
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(cdt)
+    new_state = {"conv": window[:, 1:].astype(state["conv"].dtype), "ssm": h}
+    return out, new_state

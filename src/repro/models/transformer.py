@@ -1,0 +1,568 @@
+"""Decoder-only LM covering the dense / moe / vlm / ssm / hybrid families.
+
+Layers are scanned with stacked parameters (HLO size is O(1) in depth; FSDP
+all-gathers happen per scan step so XLA's latency-hiding scheduler can
+overlap them with compute). The hybrid (Jamba) family scans over
+super-blocks of ``attn_period`` sublayers (7 mamba + 1 attention, MoE on
+every other FFN) so the heterogeneous interleave stays scan-friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
+
+from . import attention as A
+from .blocks import cross_entropy, init_mlp, mlp, mlp_specs, rmsnorm, rope
+from .mamba import (init_mamba, mamba_decode_step, mamba_forward,
+                    mamba_init_state, mamba_specs)
+from .moe import init_moe, moe_ffn, moe_specs
+
+
+def _cdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ===================================================================== init
+
+def init_attn(key, cfg: ModelConfig, dtype):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {"wq": jax.random.normal(ks[0], (d, hq * dh), dtype) * s,
+         "wk": jax.random.normal(ks[1], (d, hkv * dh), dtype) * s,
+         "wv": jax.random.normal(ks[2], (d, hkv * dh), dtype) * s,
+         "wo": jax.random.normal(ks[3], (hq * dh, d), dtype) * (hq * dh) ** -0.5}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def attn_specs(cfg: ModelConfig, prefix_layers=True):
+    L = ("layers",) if prefix_layers else ()
+    p = {"wq": L + ("embed", "heads"), "wk": L + ("embed", "kv_heads"),
+         "wv": L + ("embed", "kv_heads"), "wo": L + ("heads", "embed")}
+    if cfg.qkv_bias:
+        p.update({"bq": L + ("heads",), "bk": L + ("kv_heads",),
+                  "bv": L + ("kv_heads",)})
+    return p
+
+
+def _stack_init(key, n: int, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_lm(cfg: ModelConfig, key) -> dict:
+    pdt = _pdt(cfg)
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    params: dict = {
+        "embed": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), pdt) * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,), pdt),
+    }
+    if not cfg.tied_embeddings:
+        params["unembed"] = jax.random.normal(
+            k_out, (cfg.d_model, cfg.vocab), pdt) * (cfg.d_model ** -0.5)
+
+    if cfg.family == "ssm":
+        def one(k):
+            km, = jax.random.split(k, 1)
+            return {"ln": jnp.ones((cfg.d_model,), pdt),
+                    "mamba": init_mamba(km, cfg.d_model, cfg.mamba, pdt)}
+        params["layers"] = _stack_init(k_layers, cfg.n_layers, one)
+    elif cfg.family == "hybrid":
+        params["blocks"] = _init_hybrid_blocks(cfg, k_layers, pdt)
+    else:
+        def one(k):
+            ka, kf = jax.random.split(k)
+            lp = {"ln1": jnp.ones((cfg.d_model,), pdt),
+                  "ln2": jnp.ones((cfg.d_model,), pdt),
+                  "attn": init_attn(ka, cfg, pdt)}
+            if cfg.moe is not None:
+                lp["moe"] = init_moe(kf, cfg.d_model, cfg.moe, cfg.act, pdt)
+                if cfg.moe.dense_residual:
+                    lp["mlp"] = init_mlp(jax.random.fold_in(kf, 1),
+                                         cfg.d_model, cfg.d_ff, cfg.act, pdt)
+            else:
+                lp["mlp"] = init_mlp(kf, cfg.d_model, cfg.d_ff, cfg.act, pdt)
+            return lp
+        params["layers"] = _stack_init(k_layers, cfg.n_layers, one)
+    return params
+
+
+def _init_hybrid_blocks(cfg: ModelConfig, key, pdt):
+    """Jamba super-blocks: per block `period` sublayers; index `offset` is
+    attention, the rest mamba; odd sublayers use MoE FFN, even use dense."""
+    period = cfg.attn_period
+    n_blocks = cfg.n_layers // period
+    n_mamba = period - 1
+    n_moe = period // cfg.moe.every_n_layers
+    n_dense = period - n_moe
+
+    def one(k):
+        ks = jax.random.split(k, 6)
+        return {
+            "ln_mix": jnp.ones((period, cfg.d_model), pdt),
+            "ln_ffn": jnp.ones((period, cfg.d_model), pdt),
+            "mamba": _stack_init(ks[0], n_mamba,
+                                 lambda kk: init_mamba(kk, cfg.d_model, cfg.mamba, pdt)),
+            "attn": init_attn(ks[1], cfg, pdt),
+            "moe": _stack_init(ks[2], n_moe,
+                               lambda kk: init_moe(kk, cfg.d_model, cfg.moe, cfg.act, pdt)),
+            "mlp": _stack_init(ks[3], n_dense,
+                               lambda kk: init_mlp(kk, cfg.d_model, cfg.d_ff, cfg.act, pdt)),
+        }
+    return _stack_init(key, n_blocks, one)
+
+
+def lm_param_specs(cfg: ModelConfig) -> dict:
+    specs: dict = {"embed": ("vocab", "embed_table"),
+                   "final_norm": (None,)}
+    if not cfg.tied_embeddings:
+        specs["unembed"] = ("embed_table", "vocab")
+    if cfg.family == "ssm":
+        specs["layers"] = {"ln": ("layers", None),
+                           "mamba": mamba_specs()}
+    elif cfg.family == "hybrid":
+        ms = {k: ("layers", None) + v[1:] for k, v in mamba_specs().items()}
+        specs["blocks"] = {
+            "ln_mix": ("layers", None, None), "ln_ffn": ("layers", None, None),
+            "mamba": ms,
+            "attn": {k: ("layers",) + v[1:] for k, v in attn_specs(cfg).items()},
+            "moe": {k: ("layers", None) + v[1:] for k, v in moe_specs(cfg.act).items()},
+            "mlp": {k: ("layers", None) + v[1:] for k, v in mlp_specs(cfg.act).items()},
+        }
+    else:
+        lp = {"ln1": ("layers", None), "ln2": ("layers", None),
+              "attn": attn_specs(cfg)}
+        if cfg.moe is not None:
+            lp["moe"] = moe_specs(cfg.act)
+            if cfg.moe.dense_residual:
+                lp["mlp"] = mlp_specs(cfg.act)
+        else:
+            lp["mlp"] = mlp_specs(cfg.act)
+        specs["layers"] = lp
+    return specs
+
+
+# ==================================================================== layers
+
+def _qkv(lp, x, cfg: ModelConfig, cdt, positions):
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ lp["wq"].astype(cdt)
+    k = x @ lp["wk"].astype(cdt)
+    v = x @ lp["wv"].astype(cdt)
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"].astype(cdt), k + lp["bk"].astype(cdt), v + lp["bv"].astype(cdt)
+    # constrain the FLAT head dims (hq*dh, hkv*dh are mesh-divisible for
+    # every assigned arch even when head counts are not — see make_rules)
+    q = constrain(q, "batch", "seq", "heads").reshape(b, s, hq, dh)
+    k = constrain(k, "batch", "seq", "kv_heads").reshape(b, s, hkv, dh)
+    v = constrain(v, "batch", "seq", "kv_heads").reshape(b, s, hkv, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(lp, x, cfg: ModelConfig, cdt, *, impl: str, q_offset=0):
+    b, s, _ = x.shape
+    positions = q_offset + jnp.arange(s)[None, :]
+    q, k, v = _qkv(lp, x, cfg, cdt, positions)
+    o = A.attention(q, k, v, causal=True, impl=impl)
+    o = constrain(o.reshape(b, s, cfg.n_heads * cfg.head_dim),
+                  "batch", "seq", "heads")
+    out = o @ lp["wo"].astype(cdt)
+    return constrain(out, "batch", "seq", None), (k, v)
+
+
+def attn_decode(lp, x, cfg: ModelConfig, cdt, k_cache, v_cache, cache_len,
+                *, sp_axis: Optional[str] = None):
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cache_len, jnp.int32)
+    q, k, v = _qkv(lp, x, cfg, cdt, positions)
+    k_cache = lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype),
+                                              cache_len, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype),
+                                              cache_len, axis=1)
+    if sp_axis is None:
+        o = A.decode_attention(q, k_cache, v_cache, cache_len + 1)
+    else:
+        o = _sp_decode(q, k_cache, v_cache, cache_len + 1, sp_axis)
+    out = o.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ lp["wo"].astype(cdt)
+    return out, k_cache, v_cache
+
+
+def _sp_decode(q, k_cache, v_cache, n_valid, axis: str):
+    """Sequence-parallel decode: KV cache sharded over `axis` along seq;
+    batch stays on its DP axes. Per-shard flash statistics are combined with
+    a psum whose payload is O(heads · head_dim), not O(S)."""
+    from jax.experimental.shard_map import shard_map
+    from repro.parallel.sharding import active_rules, current_mesh
+    mesh = current_mesh()
+    if mesh is None or mesh.shape.get(axis, 1) == 1:
+        return A.decode_attention(q, k_cache, v_cache, n_valid)
+    rules = active_rules()
+    s_loc = k_cache.shape[1] // mesh.shape[axis]
+    q_spec = rules.spec("batch", None, None, None)
+    kv_spec = rules.spec("batch", "kv_seq", None, None)
+
+    def body(qb, kb, vb, nv):
+        i = lax.axis_index(axis)
+        pos = i * s_loc + jnp.arange(s_loc)
+        m, l, o = A.decode_attention_partial(qb, kb, vb, pos < nv)
+        o = A.sp_combine(m, l, o, axis)
+        b = qb.shape[0]
+        return jnp.moveaxis(o, 3, 1).reshape(b, 1, -1, qb.shape[-1]).astype(qb.dtype)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(q_spec, kv_spec, kv_spec, jax.sharding.PartitionSpec()),
+        out_specs=q_spec, check_rep=False)(q, k_cache, v_cache, n_valid)
+
+
+def ffn_forward(lp, x, cfg: ModelConfig, cdt):
+    if cfg.moe is not None and "moe" in lp:
+        y = moe_ffn(x, lp["moe"], cfg.moe, cfg.act, cdt)
+        if cfg.moe.dense_residual:
+            y = y + mlp(x, lp["mlp"], cfg.act, cdt)
+        return y
+    return mlp(x, lp["mlp"], cfg.act, cdt)
+
+
+def dense_layer(h, lp, cfg: ModelConfig, cdt, *, impl: str):
+    a, _ = attn_forward(lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                        cfg, cdt, impl=impl)
+    h = h + a
+    f = ffn_forward(lp, rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg, cdt)
+    # residual-stream constraint: the scan carry is the per-layer activation
+    # checkpoint; sharding its d_model over "model" (when rules say so)
+    # divides the dominant training-memory term by the TP degree
+    return constrain(h + f, "batch", "seq", "d_model_act")
+
+
+def ssm_layer(h, lp, cfg: ModelConfig, cdt, conv_method="auto"):
+    y = mamba_forward(lp["mamba"], rmsnorm(h, lp["ln"], cfg.norm_eps),
+                      cfg.mamba, cdt, conv_method=conv_method)
+    return constrain(h + y, "batch", "seq", "d_model_act")
+
+
+def hybrid_block(h, bp, cfg: ModelConfig, cdt, *, impl: str):
+    period = cfg.attn_period
+    m_idx = moe_idx = mlp_idx = 0
+    for i in range(period):
+        x = rmsnorm(h, bp["ln_mix"][i], cfg.norm_eps)
+        if i == cfg.attn_offset:
+            a, _ = attn_forward(bp["attn"], x, cfg, cdt, impl=impl)
+            h = h + a
+        else:
+            lp = jax.tree_util.tree_map(lambda v, j=m_idx: v[j], bp["mamba"])
+            h = h + mamba_forward(lp, x, cfg.mamba, cdt)
+            m_idx += 1
+        f_in = rmsnorm(h, bp["ln_ffn"][i], cfg.norm_eps)
+        if i % cfg.moe.every_n_layers == 1:
+            mp = jax.tree_util.tree_map(lambda v, j=moe_idx: v[j], bp["moe"])
+            h = h + moe_ffn(f_in, mp, cfg.moe, cfg.act, cdt)
+            moe_idx += 1
+        else:
+            dp = jax.tree_util.tree_map(lambda v, j=mlp_idx: v[j], bp["mlp"])
+            h = h + mlp(f_in, dp, cfg.act, cdt)
+            mlp_idx += 1
+    return constrain(h, "batch", None, "d_model_act")
+
+
+# =================================================================== forward
+
+def _remat(fn, mode: str):
+    if mode == "full":
+        return jax.checkpoint(fn, prevent_cse=False)
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            prevent_cse=False)
+    return fn
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig, cdt):
+    e = params["embed"][tokens]
+    return e.astype(cdt)
+
+
+def unembed(params, h, cfg: ModelConfig):
+    w = params["embed"].T if cfg.tied_embeddings else params["unembed"]
+    logits = h.astype(jnp.float32) @ w.astype(jnp.float32)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def forward_hidden(params, tokens, cfg: ModelConfig, *, embeds=None,
+                   attn_impl: str = "full", remat: str = "full"):
+    """Final hidden states (post final-norm), before the unembedding."""
+    cdt = _cdt(cfg)
+    h = embed_tokens(params, tokens, cfg, cdt)
+    if embeds is not None:
+        h = jnp.concatenate([embeds.astype(cdt), h], axis=1)
+    h = constrain(h, "batch", "seq", None)
+
+    if cfg.family == "hybrid":
+        body = _remat(lambda hh, bp: (hybrid_block(hh, bp, cfg, cdt,
+                                                   impl=attn_impl), None), remat)
+        h, _ = lax.scan(body, h, params["blocks"])
+    elif cfg.family == "ssm":
+        body = _remat(lambda hh, lp: (ssm_layer(hh, lp, cfg, cdt), None), remat)
+        h, _ = lax.scan(body, h, params["layers"])
+    else:
+        body = _remat(lambda hh, lp: (dense_layer(hh, lp, cfg, cdt,
+                                                  impl=attn_impl), None), remat)
+        h, _ = lax.scan(body, h, params["layers"])
+
+    return rmsnorm(h, params["final_norm"], cfg.norm_eps)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, embeds=None,
+            attn_impl: str = "full", remat: str = "full"):
+    """tokens: (B, S_txt) int32; embeds (vlm/audio stub): (B, P, d_model)."""
+    h = forward_hidden(params, tokens, cfg, embeds=embeds,
+                       attn_impl=attn_impl, remat=remat)
+    return unembed(params, h, cfg)
+
+
+def lm_loss(params, batch, cfg: ModelConfig, *, attn_impl="full", remat="full",
+            z_loss: float = 1e-4, loss_chunk: int = 512):
+    from .blocks import chunked_softmax_ce
+    tokens = batch["tokens"]
+    h = forward_hidden(params, tokens[:, :-1], cfg,
+                       embeds=batch.get("embeds"), attn_impl=attn_impl,
+                       remat=remat)
+    n_img = 0 if batch.get("embeds") is None else batch["embeds"].shape[1]
+    w = params["embed"].T if cfg.tied_embeddings else params["unembed"]
+    return chunked_softmax_ce(h[:, n_img:], w, tokens[:, 1:],
+                              chunk=loss_chunk, z_loss=z_loss)
+
+
+# ==================================================================== decode
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    if cfg.family == "ssm":
+        st = mamba_init_state(cfg.d_model, cfg.mamba, batch)
+        return {"conv": jnp.zeros((cfg.n_layers,) + st["conv"].shape, dtype),
+                "ssm": jnp.zeros((cfg.n_layers,) + st["ssm"].shape, jnp.float32),
+                "len": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        nb = cfg.n_layers // cfg.attn_period
+        nm = cfg.attn_period - 1
+        st = mamba_init_state(cfg.d_model, cfg.mamba, batch)
+        return {"k": jnp.zeros((nb, batch, max_len, hkv, dh), dtype),
+                "v": jnp.zeros((nb, batch, max_len, hkv, dh), dtype),
+                "conv": jnp.zeros((nb, nm) + st["conv"].shape, dtype),
+                "ssm": jnp.zeros((nb, nm) + st["ssm"].shape, jnp.float32),
+                "len": jnp.zeros((), jnp.int32)}
+    return {"k": jnp.zeros((cfg.n_layers, batch, max_len, hkv, dh), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, max_len, hkv, dh), dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig):
+    """Logical sharding for the cache (SP shards kv_seq over data)."""
+    if cfg.family == "ssm":
+        return {"conv": (None, "batch", None, "d_inner"),
+                "ssm": (None, "batch", "d_inner", None), "len": ()}
+    kv = (None, "batch", "kv_seq", "kv_heads", None)
+    if cfg.family == "hybrid":
+        return {"k": kv, "v": kv,
+                "conv": (None, None, "batch", None, "d_inner"),
+                "ssm": (None, None, "batch", "d_inner", None), "len": ()}
+    return {"k": kv, "v": kv, "len": ()}
+
+
+def decode_step(params, token, cache, cfg: ModelConfig, *,
+                sp_axis: Optional[str] = None):
+    """One-token serve step. token: (B, 1) int32."""
+    cdt = _cdt(cfg)
+    h = embed_tokens(params, token, cfg, cdt)
+    clen = cache["len"]
+    new_cache = dict(cache)
+
+    if cfg.family == "ssm":
+        def body(hh, xs):
+            lp, conv, ssm = xs
+            x = rmsnorm(hh, lp["ln"], cfg.norm_eps)
+            y, st = mamba_decode_step(lp["mamba"], x, {"conv": conv, "ssm": ssm},
+                                      cfg.mamba, cdt)
+            return hh + y, (st["conv"], st["ssm"])
+        h, (conv_new, ssm_new) = lax.scan(body, h,
+                                          (params["layers"], cache["conv"],
+                                           cache["ssm"]))
+        new_cache.update(conv=conv_new, ssm=ssm_new)
+    elif cfg.family == "hybrid":
+        def body(hh, xs):
+            bp, kc, vc, conv, ssm = xs
+            period = cfg.attn_period
+            m_idx = moe_idx = mlp_idx = 0
+            convs, ssms = [], []
+            for i in range(period):
+                x = rmsnorm(hh, bp["ln_mix"][i], cfg.norm_eps)
+                if i == cfg.attn_offset:
+                    a, kc, vc = attn_decode(bp["attn"], x, cfg, cdt, kc, vc,
+                                            clen, sp_axis=sp_axis)
+                    hh = hh + a
+                else:
+                    lp = jax.tree_util.tree_map(lambda v, j=m_idx: v[j], bp["mamba"])
+                    y, st = mamba_decode_step(
+                        lp, x, {"conv": conv[m_idx], "ssm": ssm[m_idx]},
+                        cfg.mamba, cdt)
+                    hh = hh + y
+                    convs.append(st["conv"]); ssms.append(st["ssm"])
+                    m_idx += 1
+                f_in = rmsnorm(hh, bp["ln_ffn"][i], cfg.norm_eps)
+                if i % cfg.moe.every_n_layers == 1:
+                    mp = jax.tree_util.tree_map(lambda v, j=moe_idx: v[j], bp["moe"])
+                    hh = hh + moe_ffn(f_in, mp, cfg.moe, cfg.act, cdt)
+                    moe_idx += 1
+                else:
+                    dp = jax.tree_util.tree_map(lambda v, j=mlp_idx: v[j], bp["mlp"])
+                    hh = hh + mlp(f_in, dp, cfg.act, cdt)
+                    mlp_idx += 1
+            return hh, (kc, vc, jnp.stack(convs), jnp.stack(ssms))
+        h, (k_new, v_new, conv_new, ssm_new) = lax.scan(
+            body, h, (params["blocks"], cache["k"], cache["v"],
+                      cache["conv"], cache["ssm"]))
+        new_cache.update(k=k_new, v=v_new, conv=conv_new, ssm=ssm_new)
+    else:
+        def body(hh, xs):
+            lp, kc, vc = xs
+            x = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+            a, kc, vc = attn_decode(lp["attn"], x, cfg, cdt, kc, vc, clen,
+                                    sp_axis=sp_axis)
+            hh = hh + a
+            f = ffn_forward(lp, rmsnorm(hh, lp["ln2"], cfg.norm_eps), cfg, cdt)
+            return hh + f, (kc, vc)
+        h, (k_new, v_new) = lax.scan(body, h,
+                                     (params["layers"], cache["k"], cache["v"]))
+        new_cache.update(k=k_new, v=v_new)
+
+    new_cache["len"] = clen + 1
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return unembed(params, h, cfg), new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
+            attn_impl: str = "flash"):
+    """Run the prompt, build the cache, return (last_logits, cache).
+
+    For attention families the per-layer K/V come out of the layer scan; for
+    ssm/hybrid the states come from a chunk-scan epilogue (decode-step replay
+    of the last conv window + final ssm state).
+    """
+    cdt = _cdt(cfg)
+    b = tokens.shape[0]
+    s_prompt = tokens.shape[1] + (0 if embeds is None else embeds.shape[1])
+    cache = init_cache(cfg, b, max_len)
+    h = embed_tokens(params, tokens, cfg, cdt)
+    if embeds is not None:
+        h = jnp.concatenate([embeds.astype(cdt), h], axis=1)
+
+    if cfg.family == "ssm":
+        def body(hh, lp):
+            x = rmsnorm(hh, lp["ln"], cfg.norm_eps)
+            y, st = _mamba_forward_with_state(lp["mamba"], x, cfg.mamba, cdt)
+            return hh + y, st
+        h, states = lax.scan(body, h, params["layers"])
+        cache.update(conv=states["conv"].astype(cache["conv"].dtype),
+                     ssm=states["ssm"])
+    elif cfg.family == "hybrid":
+        def body(hh, bp):
+            hh, kvs = _hybrid_block_with_state(hh, bp, cfg, cdt, attn_impl,
+                                               max_len)
+            return hh, kvs
+        h, st = lax.scan(body, h, params["blocks"])
+        cache.update(k=st["k"].astype(cache["k"].dtype),
+                     v=st["v"].astype(cache["v"].dtype),
+                     conv=st["conv"].astype(cache["conv"].dtype),
+                     ssm=st["ssm"])
+    else:
+        def body(hh, lp):
+            x = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+            a, (k, v) = attn_forward(lp["attn"], x, cfg, cdt, impl=attn_impl)
+            hh = hh + a
+            f = ffn_forward(lp, rmsnorm(hh, lp["ln2"], cfg.norm_eps), cfg, cdt)
+            k = _pad_seq(k, max_len).astype(cache["k"].dtype)
+            v = _pad_seq(v, max_len).astype(cache["v"].dtype)
+            return hh + f, (k, v)
+        h, (ks, vs) = lax.scan(body, h, params["layers"])
+        cache.update(k=ks, v=vs)
+
+    cache["len"] = jnp.array(s_prompt, jnp.int32)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return unembed(params, h[:, -1:], cfg), cache
+
+
+def _pad_seq(x, max_len):
+    pad = max_len - x.shape[1]
+    return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else x
+
+
+def _mamba_forward_with_state(p, x, m, cdt):
+    """mamba_forward that also returns final {conv, ssm} state."""
+    from .mamba import mamba_scan, _resolve_conv_method
+    from repro.kernels.ops import causal_conv1d
+    rank = p["dt_proj"].shape[0]
+    n = p["A_log"].shape[-1]
+    xz = x @ p["in_proj"].astype(cdt)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = constrain(x_in, "batch", None, "d_inner")
+    x_c = causal_conv1d(x_in, p["conv_w"].astype(cdt),
+                        method=_resolve_conv_method("auto"))
+    x_c = jax.nn.silu(x_c + p["conv_b"].astype(cdt))
+    dbc = x_c @ p["x_proj"].astype(cdt)
+    dt_low, b_t, c_t = jnp.split(dbc, [rank, rank + n], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"].astype(cdt) + p["dt_bias"].astype(cdt))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_last = mamba_scan(x_c, dt, A, b_t, c_t)
+    y = y + p["D"].astype(cdt) * x_c
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(cdt)
+    k = p["conv_w"].shape[0]
+    conv_state = x_in[:, -(k - 1):, :]
+    return out, {"conv": conv_state, "ssm": h_last}
+
+
+def _hybrid_block_with_state(h, bp, cfg, cdt, attn_impl, max_len):
+    period = cfg.attn_period
+    m_idx = moe_idx = mlp_idx = 0
+    convs, ssms, kv = [], [], None
+    for i in range(period):
+        x = rmsnorm(h, bp["ln_mix"][i], cfg.norm_eps)
+        if i == cfg.attn_offset:
+            a, (k, v) = attn_forward(bp["attn"], x, cfg, cdt, impl=attn_impl)
+            h = h + a
+            kv = (_pad_seq(k, max_len), _pad_seq(v, max_len))
+        else:
+            lp = jax.tree_util.tree_map(lambda v_, j=m_idx: v_[j], bp["mamba"])
+            y, st = _mamba_forward_with_state(lp, x, cfg.mamba, cdt)
+            h = h + y
+            convs.append(st["conv"]); ssms.append(st["ssm"])
+            m_idx += 1
+        f_in = rmsnorm(h, bp["ln_ffn"][i], cfg.norm_eps)
+        if i % cfg.moe.every_n_layers == 1:
+            mp = jax.tree_util.tree_map(lambda v_, j=moe_idx: v_[j], bp["moe"])
+            h = h + moe_ffn(f_in, mp, cfg.moe, cfg.act, cdt)
+            moe_idx += 1
+        else:
+            dp = jax.tree_util.tree_map(lambda v_, j=mlp_idx: v_[j], bp["mlp"])
+            h = h + mlp(f_in, dp, cfg.act, cdt)
+            mlp_idx += 1
+    return h, {"k": kv[0], "v": kv[1],
+               "conv": jnp.stack(convs), "ssm": jnp.stack(ssms)}

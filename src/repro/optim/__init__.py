@@ -1,0 +1,3 @@
+from .optimizer import (OptConfig, apply_updates, clip_by_global_norm,
+                        global_norm, init_opt_state, schedule)
+from .compression import allreduce_compressed, compress, init_errors

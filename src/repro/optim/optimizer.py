@@ -1,0 +1,122 @@
+"""Optimizers (AdamW, SGD-momentum), LR schedules, global-norm clipping.
+
+Optimizer state inherits the parameter sharding (ZeRO by construction when
+FSDP rules shard the weights). ``state_dtype`` lets very large archs
+(arctic-480b) hold m/v in bf16 — the 8-bit-optimizer-class memory tradeoff,
+sized in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: Optional[str] = None     # None -> same as params
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _is_float(x):
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree) if _is_float(x)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda x: x * scale.astype(x.dtype) if _is_float(x) else x, grads), g
+
+
+def init_opt_state(params, cfg: OptConfig):
+    sdt = cfg.state_dtype
+    def zeros_like(p):
+        dt = jnp.dtype(sdt) if sdt else p.dtype
+        return jnp.zeros(p.shape, dt)
+    if cfg.name == "adamw":
+        return {"m": jax.tree_util.tree_map(zeros_like, params),
+                "v": jax.tree_util.tree_map(zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+    if cfg.name == "sgdm":
+        return {"m": jax.tree_util.tree_map(zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.name)
+
+
+def apply_updates(params, grads, state, cfg: OptConfig):
+    """One optimizer step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+
+    if cfg.name == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            if not _is_float(p):          # int params (e.g. shift tables)
+                return (p, m, v)
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                    m32.astype(m.dtype), v32.astype(v.dtype))
+
+        out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": new_m, "v": new_v, "step": step}, \
+            {"lr": lr, "grad_norm": gnorm}
+
+    if cfg.name == "sgdm":
+        def upd(p, g, m):
+            if not _is_float(p):
+                return (p, m)
+            m32 = 0.9 * m.astype(jnp.float32) + g.astype(jnp.float32)
+            return ((p.astype(jnp.float32)
+                     - lr * (m32 + cfg.weight_decay * p.astype(jnp.float32))
+                     ).astype(p.dtype), m32.astype(m.dtype))
+        out = jax.tree_util.tree_map(upd, params, grads, state["m"])
+        new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": new_m, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+    raise ValueError(cfg.name)

@@ -1,0 +1,3 @@
+from .sharding import (ShardingRules, active_rules, axis_size, constrain,
+                       current_mesh, named_sharding, rules_for, tree_shardings,
+                       use_rules)

@@ -1,0 +1,196 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP) for the mesh
+axes ("pod", "data", "model").
+
+Models annotate tensors with *logical* axis names; the active
+:class:`ShardingRules` maps those to mesh axes. This is the single place
+where the parallelism layout is decided, so hillclimbing a different
+layout (§Perf) is a one-line rules change, not a model edit.
+
+Conventions:
+  batch    -> ("pod", "data")       pure DP (pod axis only carries DP/DCN)
+  heads/ffn/vocab/experts -> "model"  TP / EP
+  embed    -> "data" when fsdp=True   ZeRO-3 weight sharding (all-gather
+              per scanned layer, reduce-scatter of grads — XLA-inserted)
+  kv_seq   -> "data" for SP decode cells (sharded KV cache + online-softmax
+              combine, see models/attention.py::decode_attention_sp)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+from jax.interpreters import pxla
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    batch: tuple | str | None = ("pod", "data")
+    seq: tuple | str | None = None            # activations' seq dim (training)
+    kv_seq: tuple | str | None = None         # KV-cache seq dim (SP decode)
+    heads: tuple | str | None = "model"       # flattened hq*dh weight dim
+    kv_heads: tuple | str | None = "model"    # flattened hkv*dh weight dim
+    ffn: tuple | str | None = "model"
+    ffn_expert: tuple | str | None = None     # expert hidden dim (2nd shard)
+    vocab: tuple | str | None = "model"
+    experts: tuple | str | None = "model"
+    embed: tuple | str | None = None          # d_model dim of weights (FSDP)
+    embed_table: tuple | str | None = None    # d_model dim of the embed table
+    d_inner: tuple | str | None = "model"     # mamba inner dim
+    layers: tuple | str | None = None         # stacked-layer dim
+    d_model_act: tuple | str | None = None    # activations' feature dim
+
+    def spec(self, *names: Optional[str]) -> P:
+        entries = []
+        for n in names:
+            if n is None:
+                entries.append(None)
+            else:
+                entries.append(getattr(self, n))
+        return P(*entries)
+
+
+# Default rule sets ---------------------------------------------------------
+
+def rules_for(family: str, *, fsdp: bool = False, sp: bool = False) -> ShardingRules:
+    kw = {}
+    if fsdp:
+        kw["embed"] = "data"
+    if sp:
+        kw["kv_seq"] = "data"
+    return ShardingRules(**kw)
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def make_rules(mesh, cfg, kind: str, *, fsdp: bool = False,
+               sp: bool = False, shard_residuals: bool = False) -> ShardingRules:
+    """Mesh- and arch-aware rules. Every assignment is divisibility-checked
+    so any (arch x shape x mesh) cell lowers; the key semantic choices:
+
+    * attention TP only with WHOLE-head divisibility (n_heads % model == 0);
+      sub-head sharding would psum O(S^2) score tensors. Archs with odd head
+      counts (qwen2 14H, qwen1.5 40H, arctic 56H) run attention replicated
+      across "model" (flash keeps memory bounded); FFN/experts stay TP/EP.
+      The replicated-attention waste shows up in the roofline ratio and is
+      hillclimb material (§Perf).
+    * k/v head TP only when n_kv_heads % model == 0; GQA k/v are small, so
+      replication is cheap.
+    * FSDP ("embed" -> DP axes) combines with TP dims into 2-D weight
+      sharding; optimizer state inherits it (ZeRO-3).
+    * decode cells shard the KV-cache seq dim over "model" (and "data" too
+      when the batch cannot use it) with online-softmax SP combine.
+
+    kind: train | prefill | decode.
+    """
+    names = mesh.axis_names
+    nm = mesh.shape.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in names)
+
+    def pick(dim: int, axis="model"):
+        return axis if _div(dim, nm) else None
+
+    kw = dict(
+        heads="model" if _div(cfg.n_heads, nm) else None,
+        kv_heads="model" if _div(cfg.n_kv_heads, nm) else None,
+        ffn=pick(cfg.d_ff) if cfg.d_ff else None,
+        vocab=pick(cfg.vocab),
+        experts=pick(cfg.moe.num_experts) if cfg.moe else None,
+        ffn_expert=None,
+        d_inner=pick(cfg.mamba.expand * cfg.d_model) if cfg.mamba else None,
+        batch=dp_axes if dp_axes else None,
+    )
+    if cfg.moe and kw["experts"] is None:
+        kw["ffn_expert"] = pick(cfg.moe.d_ff)
+    if fsdp:
+        kw["embed"] = dp_axes or None
+        kw["embed_table"] = dp_axes or None
+    if sp and kind in ("decode", "prefill"):
+        kw["kv_seq"] = "model"      # cache seq sharded; prefill writes it
+        kw["kv_heads"] = None       # cache spec cannot use "model" twice
+    if shard_residuals and _div(cfg.d_model, nm):
+        # residual-stream activations (the per-layer scan checkpoints, the
+        # dominant training-memory term at depth) shard d_model over
+        # "model"; XLA re-gathers per layer — memory for collectives.
+        kw["d_model_act"] = "model"
+    return ShardingRules(**kw)
+
+
+def prune_batch_axes(mesh, rules: ShardingRules, global_batch: int) -> ShardingRules:
+    """Drop batch axes that do not divide the global batch."""
+    axes = rules.batch
+    if axes is None:
+        return rules
+    if isinstance(axes, str):
+        axes = (axes,)
+    kept = []
+    size = 1
+    for a in axes:
+        if global_batch % (size * mesh.shape[a]) == 0:
+            kept.append(a)
+            size *= mesh.shape[a]
+    return dataclasses.replace(rules, batch=tuple(kept) if kept else None)
+
+
+_ACTIVE: list[ShardingRules] = [ShardingRules()]
+
+
+def active_rules() -> ShardingRules:
+    return _ACTIVE[-1]
+
+
+class use_rules:
+    def __init__(self, rules: ShardingRules):
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _ACTIVE.pop()
+
+
+def current_mesh() -> Optional[Mesh]:
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+def axis_size(name) -> int:
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        size = 1
+        for n in name:
+            size *= mesh.shape.get(n, 1)
+        return size
+    return mesh.shape.get(name, 1)
+
+
+def constrain(x, *names: Optional[str]):
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = active_rules().spec(*names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*names: Optional[str], mesh: Optional[Mesh] = None):
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, active_rules().spec(*names))
+
+
+def tree_shardings(tree_of_name_tuples, mesh: Optional[Mesh] = None):
+    """Map a pytree of logical-name tuples to NamedShardings."""
+    mesh = mesh or current_mesh()
+    rules = active_rules()
+    return jax.tree_util.tree_map(
+        lambda names: NamedSharding(mesh, rules.spec(*names)),
+        tree_of_name_tuples, is_leaf=lambda v: isinstance(v, tuple) or v is None)

@@ -1,0 +1,276 @@
+"""Post-SPMD HLO analysis with while-loop trip-count multipliers.
+
+``compiled.cost_analysis()`` counts each while body ONCE (verified on this
+backend), so scanned-layer models would be undercounted by n_layers. This
+module re-walks the HLO text: it splits computations, resolves operand
+shapes through a per-computation symbol table, builds the call graph
+(while bodies weighted by ``known_trip_count``) and accumulates per-device
+
+  * dot_flops          — 2 * prod(result dims) * prod(lhs contracting dims)
+  * collective_bytes   — operand bytes of all-gather / all-reduce /
+                         reduce-scatter / all-to-all / collective-permute,
+                         split ICI vs DCN by whether a replica group crosses
+                         the pod boundary (device_id // pod_size differs)
+  * out_bytes          — Σ op output bytes (HBM-traffic proxy)
+
+Everything is parsed from ``compiled.as_text()``; nothing is allocated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(([^)]*)\)")
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(seg: str) -> float:
+    return float(sum(_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+                     for dt, dims in _SHAPE_RE.findall(seg)))
+
+
+def _iota_groups(spec: str):
+    """Parse v2 iota replica groups: [G,S]<=[dims]T(perm) -> (G,S) ids."""
+    m = re.match(r"\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", spec)
+    if not m:
+        return None
+    g, s = int(m.group(1)), int(m.group(2))
+    dims = [int(x) for x in m.group(3).split(",")]
+    ids = np.arange(int(np.prod(dims))).reshape(dims)
+    if m.group(4):
+        ids = ids.transpose([int(x) for x in m.group(4).split(",")])
+    return ids.reshape(g, s)
+
+
+def _crosses_pod(line: str, pod_size: int) -> bool:
+    if pod_size <= 0:
+        return False
+    m = re.search(r"replica_groups=(\{\{[0-9,{} ]*\}\}|"
+                  r"\[[0-9,]+\]<=\[[0-9,]+\](?:T\([0-9,]+\))?)", line)
+    if not m:
+        return False
+    spec = m.group(1)
+    if spec.startswith("{{"):
+        for grp in re.findall(r"\{([0-9,]+)\}", spec):
+            ids = [int(x) for x in grp.split(",")]
+            if len({i // pod_size for i in ids}) > 1:
+                return True
+        return False
+    groups = _iota_groups(spec)
+    if groups is None:
+        return False
+    pods = groups // pod_size
+    return bool(np.any(pods.max(axis=1) != pods.min(axis=1)))
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    coll_ici: float = 0.0
+    coll_dcn: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    out_bytes: float = 0.0
+    calls: list = dataclasses.field(default_factory=list)
+
+
+def analyze_hlo(txt: str, *, pod_size: int = 0) -> dict:
+    # ---- split into computations -----------------------------------------
+    comps: dict[str, list[str]] = {}
+    headers: dict[str, str] = {}
+    cur, buf = None, []
+    for line in txt.splitlines():
+        m = _HDR_RE.match(line)
+        if m and "->" in line:
+            if cur:
+                comps[cur] = buf
+            cur, buf = m.group(2), []
+            headers[cur] = line
+        elif line.strip() == "}":
+            if cur:
+                comps[cur] = buf
+                cur, buf = None, []
+        elif cur is not None:
+            buf.append(line)
+    if cur:
+        comps[cur] = buf
+
+    stats: dict[str, CompStats] = {}
+    for name, lines in comps.items():
+        st = CompStats()
+        # symbol table: op name -> result type string (first shapes on rhs)
+        sym: dict[str, str] = {}
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            opname, rhs = dm.group(1), dm.group(2)
+            tmatch = re.match(r"^(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)",
+                              rhs)
+            if tmatch:
+                sym[opname] = tmatch.group(1)
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            rhs = dm.group(2)
+            ttype = sym.get(dm.group(1), "")
+            st.out_bytes += _shapes_bytes(ttype)
+            # dot flops: 2 * result elems * contracted size (from lhs shape)
+            if re.search(r"\bdot\(", rhs):
+                dmatch = re.search(r"\bdot\(([^)]*)\)", rhs)
+                res_elems = sum(_elems(d) for _, d in _SHAPE_RE.findall(ttype))
+                contract = 1
+                opnds = [o.strip().lstrip("%") for o in dmatch.group(1).split(",")]
+                lhs_type = sym.get(opnds[0], "") if opnds else ""
+                lhs_shapes = _SHAPE_RE.findall(lhs_type)
+                lhs_dims = [int(x) for x in lhs_shapes[0][1].split(",")] \
+                    if lhs_shapes and lhs_shapes[0][1] else []
+                mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+                if mc and mc.group(1):
+                    for i in mc.group(1).split(","):
+                        if int(i) < len(lhs_dims):
+                            contract *= lhs_dims[int(i)]
+                st.dot_flops += 2.0 * res_elems * contract
+            elif re.search(r"\bconvolution\(", rhs):
+                cm = re.search(r"\bconvolution\(([^)]*)\)", rhs)
+                res_elems = sum(_elems(d) for _, d in _SHAPE_RE.findall(ttype))
+                opnds = [o.strip().lstrip("%") for o in cm.group(1).split(",")]
+                k_type = sym.get(opnds[1], "") if len(opnds) > 1 else ""
+                ks = _SHAPE_RE.findall(k_type)
+                k_elems = _elems(ks[0][1]) if ks else 1
+                res_dims = _SHAPE_RE.findall(ttype)
+                out_feat = int(res_dims[0][1].split(",")[-1]) \
+                    if res_dims and res_dims[0][1] else 1
+                st.dot_flops += 2.0 * res_elems * k_elems / max(out_feat, 1)
+            # collectives
+            mcoll = _COLL_RE.search(rhs)
+            if mcoll and not rhs.lstrip().startswith(("all-reduce-done",
+                                                      "all-gather-done",
+                                                      "collective-permute-done")):
+                kind = mcoll.group(1)
+                nbytes = 0.0
+                for o in mcoll.group(3).split(","):
+                    o = o.strip().lstrip("%")
+                    nbytes += _shapes_bytes(sym.get(o, ""))
+                if _crosses_pod(rhs, pod_size):
+                    st.coll_dcn += nbytes
+                else:
+                    st.coll_ici += nbytes
+                st.coll_by_kind[kind] = st.coll_by_kind.get(kind, 0.0) + nbytes
+            # call-graph edges
+            if re.search(r"\bwhile\(", rhs):
+                trip = 1
+                mt = re.search(r'known_trip_count[^}]*?"n":"(\d+)"', rhs)
+                if mt:
+                    trip = int(mt.group(1))
+                mb = re.search(r"body=%?([\w.\-]+)", rhs)
+                mc2 = re.search(r"condition=%?([\w.\-]+)", rhs)
+                if mb:
+                    st.calls.append((mb.group(1), trip))
+                if mc2:
+                    st.calls.append((mc2.group(1), trip + 1))
+            else:
+                for attr in ("to_apply", "called_computations", "true_computation",
+                             "false_computation", "branch_computations", "calls"):
+                    for mm in re.finditer(r"\b" + attr + r"=\{?%?([\w.\-]+)", rhs):
+                        st.calls.append((mm.group(1), 1))
+        stats[name] = st
+
+    # ---- multiplier propagation (Kahn toposort over the call DAG) --------
+    called = {c for st in stats.values() for c, _ in st.calls}
+    roots = [n for n in stats if n not in called]
+    indeg = {n: 0 for n in stats}
+    for st in stats.values():
+        for c, _ in st.calls:
+            if c in indeg:
+                indeg[c] += 1
+    mult = {n: 0.0 for n in stats}
+    for r in roots:
+        mult[r] = 1.0
+    queue = [n for n in stats if indeg[n] == 0]
+    visited = 0
+    while queue:
+        name = queue.pop()
+        visited += 1
+        for callee, k in stats[name].calls:
+            if callee in indeg:
+                mult[callee] += mult[name] * k
+                indeg[callee] -= 1
+                if indeg[callee] == 0:
+                    queue.append(callee)
+    # any cycle remnants (shouldn't exist in HLO) keep multiplier 0
+
+    # CPU-backend artifact accounting: XLA-CPU lowers bf16 dots by upcasting
+    # operands to f32; LICM hoists whole-tensor f32 copies of loop-invariant
+    # (weight/residual) operands to the top level. A TPU (native-bf16 MXU)
+    # never materializes these. Sum big top-level bf16->f32 same-shape
+    # converts so the dry-run can report a TPU-corrected peak.
+    upcast = 0.0
+    roots_set = set(roots)
+    for name in roots_set:
+        lines = comps.get(name, [])
+        sym: dict[str, str] = {}
+        # ENTRY parameters are typed in the computation header
+        for pname, ptype in re.findall(r"%?([\w.\-]+):\s*([a-z0-9]+\[[0-9,]*\])",
+                                       headers.get(name, "")):
+            sym[pname] = ptype
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm:
+                t = re.match(r"^(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)",
+                             dm.group(2))
+                if t:
+                    sym[dm.group(1)] = t.group(1)
+        seen_src = set()
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            rhs = dm.group(2)
+            mm = re.match(r"^f32\[([0-9,]+)\][^ ]* (?:convert|fusion)\(%?([\w.\-]+)\)",
+                          rhs)
+            if mm:
+                dims = mm.group(1)
+                nbytes = _elems(dims) * 4
+                opnd_t = sym.get(mm.group(2), "")
+                # dedupe per source tensor: buffer assignment reuses the
+                # converted copy; counting every mention would overstate
+                if nbytes >= 2 ** 26 and f"bf16[{dims}]" in opnd_t \
+                        and mm.group(2) not in seen_src:
+                    seen_src.add(mm.group(2))
+                    upcast += nbytes
+
+    agg = dict(dot_flops=0.0, coll_bytes_ici=0.0, coll_bytes_dcn=0.0,
+               out_bytes=0.0, coll_by_kind={}, n_computations=len(stats),
+               cpu_upcast_bytes=upcast)
+    for name, st in stats.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        agg["dot_flops"] += m * st.dot_flops
+        agg["coll_bytes_ici"] += m * st.coll_ici
+        agg["coll_bytes_dcn"] += m * st.coll_dcn
+        agg["out_bytes"] += m * st.out_bytes
+        for k, v in st.coll_by_kind.items():
+            agg["coll_by_kind"][k] = agg["coll_by_kind"].get(k, 0.0) + m * v
+    return agg

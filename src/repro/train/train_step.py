@@ -1,0 +1,78 @@
+"""Train-step builder: loss + grad + optimizer update, with microbatch
+gradient accumulation and optional int8 error-feedback grad compression."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.optim import OptConfig, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    remat: str = "full"                 # full | dots | none
+    attn_impl: str = "full"
+    microbatches: int = 1               # grad accumulation steps
+    compress_grads: bool = False        # int8 EF all-reduce on DP axes
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = api.loss_fn(cfg, attn_impl=tcfg.attn_impl, remat=tcfg.remat)
+
+    def grads_of(params, batch):
+        if tcfg.microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        n = tcfg.microbatches
+
+        def micro(carry, mb):
+            acc_loss, acc_g = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (acc_loss + l,
+                    jax.tree_util.tree_map(jnp.add, acc_g, g)), None
+
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+        # accumulate in the param dtype: f32 archs get f32 accumulation;
+        # bf16-param archs (arctic) trade accumulation precision for memory
+        zero_g = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, p.dtype), params)
+        (loss, grads), _ = lax.scan(micro, (jnp.zeros(()), zero_g), mbs)
+        scale = 1.0 / n
+        return loss * scale, jax.tree_util.tree_map(
+            lambda g: g * scale, grads)
+
+    def step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        params, opt_state, om = apply_updates(params, grads, opt_state, tcfg.opt)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return step
+
+
+def estimate_model_flops(cfg: ModelConfig, tokens: int, kind: str = "train") -> float:
+    """MODEL_FLOPS: 6·N·D train (2·N·D serve), N = active params (MoE)."""
+    n = cfg.param_count()
+    if cfg.moe is not None:
+        moe = cfg.moe
+        act = moe.top_k / moe.num_experts
+        n_mat = 3 if cfg.act == "silu" else 2
+        expert_params = n_mat * cfg.d_model * moe.d_ff * moe.num_experts
+        if cfg.family == "moe":
+            n_moe_layers = cfg.n_layers
+        else:                       # hybrid
+            n_moe_layers = cfg.n_layers // moe.every_n_layers
+        total_expert = n_moe_layers * expert_params
+        n = n - total_expert + total_expert * act
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

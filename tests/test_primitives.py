@@ -1,0 +1,164 @@
+"""Unit + property tests for the five convolution primitives (core/)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ConvSpec, Primitives, apply, init, shift_channels,
+                        add_conv, standard_conv, depthwise_conv)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, key=KEY, scale=1.0):
+    return jax.random.normal(key, shape) * scale
+
+
+# ---------------------------------------------------------------- shapes ---
+@pytest.mark.parametrize("prim", Primitives)
+@pytest.mark.parametrize("hk", [1, 3, 5])
+def test_output_shape(prim, hk):
+    if prim in ("dws", "shift") and hk == 1 and prim == "shift":
+        pass
+    spec = ConvSpec(primitive=prim, in_channels=6, out_channels=10,
+                    kernel_size=hk, groups=2 if prim == "grouped" else 1)
+    p = init(KEY, spec)
+    y = apply(p, rand((2, 9, 9, 6)), spec)
+    assert y.shape == (2, 9, 9, 10)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+# ------------------------------------------------------- reference math ---
+def naive_conv(x, w):
+    """Direct NHWC loop conv, SAME padding, stride 1 (paper Eq. 1)."""
+    b, h, wd, cx = x.shape
+    hk = w.shape[0]
+    cy = w.shape[3]
+    ph = hk // 2
+    xp = np.pad(np.asarray(x), ((0, 0), (ph, (hk - 1) // 2), (ph, (hk - 1) // 2), (0, 0)))
+    out = np.zeros((b, h, wd, cy), np.float32)
+    for i in range(hk):
+        for j in range(hk):
+            patch = xp[:, i:i + h, j:j + wd, :]
+            out += np.einsum("bhwc,cn->bhwn", patch, np.asarray(w[i, j]))
+    return out
+
+
+def test_standard_matches_naive():
+    x, w = rand((2, 7, 7, 3)), rand((3, 3, 3, 5), jax.random.PRNGKey(1))
+    np.testing.assert_allclose(standard_conv(x, w), naive_conv(x, w), rtol=2e-5, atol=2e-5)
+
+
+def naive_add_conv(x, w):
+    b, h, wd, cx = x.shape
+    hk, _, _, cy = w.shape
+    ph = hk // 2
+    xp = np.pad(np.asarray(x), ((0, 0), (ph, (hk - 1) // 2), (ph, (hk - 1) // 2), (0, 0)))
+    out = np.zeros((b, h, wd, cy), np.float32)
+    wn = np.asarray(w)
+    for bi in range(b):
+        for k in range(h):
+            for l in range(wd):
+                patch = xp[bi, k:k + hk, l:l + hk, :]          # (hk,hk,cx)
+                out[bi, k, l] = -np.abs(patch[..., None] - wn).sum((0, 1, 2))
+    return out
+
+
+def test_add_conv_matches_naive():
+    x, w = rand((1, 5, 5, 2)), rand((3, 3, 2, 4), jax.random.PRNGKey(2))
+    np.testing.assert_allclose(add_conv(x, w), naive_add_conv(x, w), rtol=2e-5, atol=2e-5)
+
+
+def test_add_conv_always_negative():
+    x, w = rand((2, 6, 6, 3)), rand((3, 3, 3, 4), jax.random.PRNGKey(3))
+    assert bool(jnp.all(add_conv(x, w) <= 0.0)), "paper §2.2: add conv output is always negative"
+
+
+def test_shift_channels_semantics():
+    # Eq. 2: I[k,l,m] = X[k+a, l+b, m], zero outside.
+    x = jnp.arange(2 * 4 * 4 * 2, dtype=jnp.float32).reshape(2, 4, 4, 2)
+    shifts = jnp.array([[1, 0], [0, -1]], jnp.int32)
+    y = shift_channels(x, shifts)
+    np.testing.assert_allclose(y[:, :3, :, 0], x[:, 1:, :, 0])   # a=+1
+    np.testing.assert_allclose(y[:, 3, :, 0], 0.0)
+    np.testing.assert_allclose(y[:, :, 1:, 1], x[:, :, :3, 1])   # b=-1
+    np.testing.assert_allclose(y[:, :, 0, 1], 0.0)
+
+
+# ----------------------------------------------------------- properties ---
+def test_grouped_equals_concat_of_group_convs():
+    g, cx, cy = 3, 6, 9
+    spec = ConvSpec(primitive="grouped", in_channels=cx, out_channels=cy,
+                    kernel_size=3, groups=g, use_bias=False)
+    p = init(KEY, spec)
+    x = rand((2, 8, 8, cx))
+    y = apply(p, x, spec)
+    per = cy // g
+    for gi in range(g):
+        xg = x[..., gi * (cx // g):(gi + 1) * (cx // g)]
+        wg = p["w"][..., gi * per:(gi + 1) * per]
+        np.testing.assert_allclose(y[..., gi * per:(gi + 1) * per],
+                                   standard_conv(xg, wg), rtol=1e-4, atol=1e-5)
+
+
+def test_groups1_equals_standard():
+    spec_g = ConvSpec(primitive="grouped", in_channels=4, out_channels=6, groups=1, use_bias=False)
+    spec_s = ConvSpec(primitive="standard", in_channels=4, out_channels=6, use_bias=False)
+    p = init(KEY, spec_g)
+    x = rand((1, 6, 6, 4))
+    np.testing.assert_allclose(apply(p, x, spec_g), apply({"w": p["w"]}, x, spec_s), rtol=1e-5)
+
+
+def test_dws_is_depthwise_then_pointwise():
+    spec = ConvSpec(primitive="dws", in_channels=4, out_channels=8, use_bias=False)
+    p = init(KEY, spec)
+    x = rand((2, 6, 6, 4))
+    h = depthwise_conv(x, p["w_dw"])
+    ref = standard_conv(h, p["w_pw"])
+    np.testing.assert_allclose(apply(p, x, spec), ref, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(["standard", "grouped", "dws", "shift"]),
+       st.integers(1, 3))
+def test_linearity_in_input(prim, seed):
+    """Multiplicative primitives are linear maps in X (add-conv is not)."""
+    spec = ConvSpec(primitive=prim, in_channels=4, out_channels=4,
+                    groups=2 if prim == "grouped" else 1, use_bias=False)
+    p = init(jax.random.PRNGKey(seed), spec)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 100))
+    a, b = rand((1, 6, 6, 4), k1), rand((1, 6, 6, 4), k2)
+    lhs = apply(p, a + 2.0 * b, spec)
+    rhs = apply(p, a, spec) + 2.0 * apply(p, b, spec)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 5))
+def test_add_conv_triangle_bound(seed):
+    """|conv_add(x)| <= |x| L1 mass + |w| L1 mass * Hy^2 — sanity envelope."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x, w = rand((1, 5, 5, 3), k1), rand((3, 3, 3, 2), k2)
+    y = add_conv(x, w)
+    bound = jnp.sum(jnp.abs(x)) + 25 * jnp.sum(jnp.abs(w))
+    assert bool(jnp.all(-y <= bound + 1e-3))
+
+
+# ------------------------------------------------ Table 1 analytic check ---
+@pytest.mark.parametrize("prim,expect_params", [
+    ("standard", 3 * 3 * 16 * 32),
+    ("grouped", 3 * 3 * 8 * 32),
+    ("dws", 16 * (9 + 32)),
+    ("shift", 16 * (2 + 32)),
+    ("add", 3 * 3 * 16 * 32),
+])
+def test_param_count_matches_table1(prim, expect_params):
+    spec = ConvSpec(primitive=prim, in_channels=16, out_channels=32,
+                    kernel_size=3, groups=2 if prim == "grouped" else 1,
+                    use_bias=False)
+    assert spec.param_count() == expect_params
+    p = init(KEY, spec)
+    actual = sum(int(np.prod(v.shape)) for k, v in p.items()
+                 if k != "shifts") + (2 * 16 if prim == "shift" else 0)
+    assert actual == expect_params

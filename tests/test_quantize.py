@@ -1,0 +1,112 @@
+"""Tests for the power-of-two quantization scheme (Eq. 4, Algorithm 1)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ConvSpec, Primitives, apply, init, quantize,
+                        frac_bits_for, mac_inner, addmac_inner)
+from repro.core.folding import fold, FOLDABLE
+from repro.core.primitives import init_block, batchnorm_apply
+from repro.core.qconv import qconv_apply, quantize_conv_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_eq4_scale_is_power_of_two():
+    x = jax.random.normal(KEY, (64,)) * 3.7
+    qt = quantize(x)
+    assert math.log2(1.0 / qt.scale) == qt.frac_bits
+    m = float(jnp.max(jnp.abs(x)))
+    assert qt.frac_bits == 7 - math.ceil(math.log2(m))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-100.0, 100.0, allow_nan=False).filter(lambda v: abs(v) > 1e-3))
+def test_quantize_roundtrip_error_bounded(v):
+    qt = quantize(jnp.array([v]))
+    err = abs(float(qt.dequantize()[0]) - v)
+    assert err <= qt.scale + 1e-9          # floor => one ULP at that scale
+
+
+def test_quantize_int8_range():
+    x = jnp.array([-1e6, 1e6, 0.0])
+    qt = quantize(x, frac_bits=7)
+    assert int(qt.q.min()) >= -128 and int(qt.q.max()) <= 127
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(-128, 127), st.integers(-128, 127),
+       st.integers(2, 7), st.integers(2, 7))
+def test_algorithm1_left_matches_float(xq, wq, fb_x, fb_w):
+    fb_y = max(fb_x + fb_w - 8, 0)
+    x_f, w_f = xq * 2.0 ** -fb_x, wq * 2.0 ** -fb_w
+    got = int(mac_inner(jnp.array(xq, jnp.int8), jnp.array(wq, jnp.int8),
+                        fb_x, fb_w, fb_y))
+    want = x_f * w_f * 2.0 ** fb_y
+    assert abs(got - want) <= 1.0 + abs(want) * 0.01 or got in (-128, 127)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(-100, 100), st.integers(-100, 100),
+       st.integers(2, 6), st.integers(2, 6))
+def test_algorithm1_right_matches_float(xq, wq, fb_x, fb_w):
+    """Add-conv integer loop == -|x-w| computed in float, at the out scale."""
+    fb_y = min(fb_x, fb_w)
+    x_f, w_f = xq * 2.0 ** -fb_x, wq * 2.0 ** -fb_w
+    got = int(addmac_inner(jnp.array(xq, jnp.int8), jnp.array(wq, jnp.int8),
+                           fb_x, fb_w, fb_y))
+    want = -abs(x_f - w_f) * 2.0 ** fb_y
+    assert abs(got - want) <= 2.0 + abs(want) * 0.02 or got == -128
+
+
+@pytest.mark.parametrize("prim", Primitives)
+def test_quantized_layer_close_to_float(prim):
+    spec = ConvSpec(primitive=prim, in_channels=8, out_channels=12,
+                    kernel_size=3, groups=4 if prim == "grouped" else 1)
+    p = init(KEY, spec)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 10, 10, 8)) * 0.5
+    yf = apply(p, x, spec)
+    yq = qconv_apply(quantize_conv_params(p, spec), quantize(x), spec,
+                     frac_bits_for(yf))
+    rel = float(jnp.mean(jnp.abs(yq.dequantize() - yf)) / jnp.mean(jnp.abs(yf)))
+    assert rel < 0.12, f"{prim}: quantized path diverged, rel {rel}"
+
+
+def test_quantized_conv_is_integer_only():
+    """The int path must never touch floats between input and output q."""
+    spec = ConvSpec(primitive="standard", in_channels=4, out_channels=4)
+    p = init(KEY, spec)
+    qp = quantize_conv_params(p, spec)
+    xq = quantize(jax.random.normal(KEY, (1, 6, 6, 4)))
+    jaxpr = jax.make_jaxpr(lambda q: qconv_apply(qp, type(xq)(q, xq.frac_bits),
+                                                 spec, 4).q)(xq.q)
+    for eqn in jaxpr.jaxpr.eqns:
+        for var in eqn.outvars:
+            assert not jnp.issubdtype(var.aval.dtype, jnp.floating), str(eqn)
+
+
+# ------------------------------------------------------------- folding ---
+@pytest.mark.parametrize("prim", FOLDABLE)
+def test_bn_folding_exact(prim):
+    spec = ConvSpec(primitive=prim, in_channels=6, out_channels=8,
+                    groups=2 if prim == "grouped" else 1)
+    params = init_block(jax.random.PRNGKey(3), spec, with_bn=True)
+    params["bn"]["mean"] = jax.random.normal(KEY, (8,)) * 0.3
+    params["bn"]["var"] = jax.nn.softplus(jax.random.normal(KEY, (8,))) + 0.1
+    params["bn"]["gamma"] = jax.random.normal(jax.random.PRNGKey(9), (8,)) + 1.0
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 7, 7, 6))
+    want = batchnorm_apply(params["bn"], apply(params["conv"], x, spec))
+    folded = fold(params["conv"], params["bn"], spec)
+    got = apply(folded, x, spec)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-5)
+
+
+def test_bn_folding_rejects_add():
+    spec = ConvSpec(primitive="add", in_channels=4, out_channels=4)
+    params = init_block(KEY, spec, with_bn=True)
+    with pytest.raises(ValueError):
+        fold(params["conv"], params["bn"], spec)
