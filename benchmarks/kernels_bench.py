@@ -1,5 +1,6 @@
 """Per-kernel microbench: Pallas (interpret on CPU; the TPU kernel) next to
-the pure-jnp oracle, plus the int8 MXU-path variants."""
+the pure-jnp oracle, plus the int8 MXU-path variants and a tuned-vs-default
+schedule comparison (repro.tune)."""
 from __future__ import annotations
 
 import functools
@@ -7,6 +8,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import tune
 from repro.kernels import ref
 from repro.kernels.conv_im2col import conv2d_im2col
 from repro.kernels.conv_dw import depthwise2d
@@ -66,6 +68,37 @@ def main():
          time_fn(functools.partial(matmul, bm=128, bn=128, bk=128,
                                    requant_shift=7, interpret=True), aq, aq,
                  reps=2, warmup=1), "int8_pow2_requant")
+
+    tuned_vs_default()
+
+
+def tuned_vs_default():
+    """Autotune a few representative shapes in-process and report how the
+    measured winner compares to the hard-coded default schedule (the cache
+    committed by scripts/tune.py makes these wins transparent at dispatch)."""
+    xw = jax.random.normal(KEY, (1, 10, 10, 128))
+    ww = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 128, 64))
+    xa = jax.random.normal(KEY, (1, 16, 16, 16))
+    wa = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 16, 16))
+    a = jax.random.normal(KEY, (512, 512), jnp.bfloat16)
+    combos = [
+        # wide-channel conv: filter-block size trades weight reuse vs steps
+        ("conv2d", tune.sig_conv2d(1, 10, 10, 128, 64, 3), (xw, ww)),
+        # VPU add-conv: the |a-b| broadcast intermediate scales with block_co
+        ("add_conv2d", tune.sig_add_conv2d(1, 16, 16, 16, 16, 3), (xa, wa)),
+        # 512^3 matmul: the default 256x256 output blocking runs 4 grid
+        # steps where a 512-wide block runs 1 — a real schedule gap
+        ("matmul", tune.sig_matmul(512, 512, 512), (a, a)),
+    ]
+    for kernel, sig, args in combos:
+        best, best_us, results = tune.autotune(kernel, sig, args,
+                                               reps=3, warmup=1)
+        default_us = next(us for cfg, us in results
+                          if cfg == tune.default_config(kernel))
+        emit(f"kernels/tune/{kernel}/{sig.key()}", best_us,
+             f"default_us={default_us:.1f} best={best} "
+             f"speedup={default_us / max(best_us, 1e-9):.2f} "
+             f"tuned_beats_default={best_us < default_us}")
 
 
 if __name__ == "__main__":

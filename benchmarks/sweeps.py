@@ -81,7 +81,8 @@ def direct_forward(params, x, spec: ConvSpec):
         return jnp.sum(h[..., None] * params["w_pw"][0, 0][None, None, None],
                        axis=3)
     if p == "shift":
-        s = shift_channels(x, params["shifts"])
+        s = shift_channels(x, params["shifts"],
+                           max_shift=spec.kernel_size // 2)
         return jnp.sum(s[..., None] * params["w_pw"][0, 0][None, None, None],
                        axis=3)
     if p == "add":

@@ -1,0 +1,154 @@
+"""Pre-tune the Pallas kernels over the paper's Table-2 sweep shapes and
+commit a persistent config cache.
+
+    PYTHONPATH=src python scripts/tune.py --shapes table2 --out tuned.json
+
+The resulting JSON can be installed for the dispatch layer either by saving
+it to artifacts/tune_cache.json (the default lookup location) or by
+pointing REPRO_TUNE_CACHE at it. Without any cache, kernels run on the
+analytic-fallback schedule — this script is an optimization, never a
+requirement.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro import tune
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _f32(shape):
+    return jax.random.normal(KEY, shape, jnp.float32)
+
+
+def _i8(shape):
+    return jax.random.randint(KEY, shape, -100, 100, jnp.int32).astype(jnp.int8)
+
+
+def _conv2d(n, h, w, ci, co, k, g=1, dtype="float32"):
+    mk = _i8 if dtype == "int8" else _f32
+    return ("conv2d", tune.sig_conv2d(n, h, w, ci, co, k, g),
+            (mk((n, h, w, ci)), mk((k, k, ci // g, co))), dtype,
+            {"groups": g})
+
+
+def _depthwise(n, h, w, c, k):
+    return ("depthwise2d", tune.sig_depthwise2d(n, h, w, c, k),
+            (_f32((n, h, w, c)), _f32((k, k, c))), "float32")
+
+
+def _shift(n, h, w, c, co):
+    shifts = jnp.array([[(i % 3) - 1, ((i // 3) % 3) - 1] for i in range(c)],
+                       jnp.int32)
+    return ("shift_conv2d", tune.sig_shift_conv2d(n, h, w, c, co),
+            (_f32((n, h, w, c)), shifts, _f32((c, co))), "float32")
+
+
+def _add(n, h, w, ci, co, k):
+    return ("add_conv2d", tune.sig_add_conv2d(n, h, w, ci, co, k),
+            (_f32((n, h, w, ci)), _f32((k, k, ci, co))), "float32")
+
+
+def _c1d(b, l, d, k):
+    return ("causal_conv1d", tune.sig_causal_conv1d(b, l, d, k),
+            (_f32((b, l, d)), _f32((k, d))), "float32")
+
+
+def _matmul(m, k, n, dtype="float32"):
+    mk = _i8 if dtype == "int8" else _f32
+    return ("matmul", tune.sig_matmul(m, k, n), (mk((m, k)), mk((k, n))), dtype)
+
+
+def shapes_table2():
+    """The paper's Table-2 sweep plan, one tuning job per (primitive, axis
+    extreme): groups / kernel size / width / cin / cout, plus the LM-side
+    shapes (matmul_q8, Mamba causal conv1d) the kernels also serve."""
+    return [
+        # exp1 groups sweep @ w=10, ci=128, co=64, k=3
+        _conv2d(1, 10, 10, 128, 64, 3, 1),
+        _conv2d(1, 10, 10, 128, 64, 3, 4),
+        # exp2 kernel-size sweep @ w=32, ci=co=16
+        _conv2d(1, 32, 32, 16, 16, 3),
+        _conv2d(1, 32, 32, 16, 16, 7),
+        # exp3/4/5 width / cin / cout extremes
+        _conv2d(1, 8, 8, 16, 16, 3),
+        _conv2d(1, 32, 32, 32, 32, 3),
+        # non-standard primitives at the sweep's center point
+        _depthwise(1, 32, 32, 64, 3),
+        _shift(1, 32, 32, 64, 64),
+        _add(1, 10, 10, 16, 16, 3),
+        # LM-side kernels
+        _c1d(2, 512, 256, 4),
+        _matmul(256, 512, 256),
+        _matmul(512, 512, 512),
+        _matmul(256, 256, 256, dtype="int8"),
+    ]
+
+
+def shapes_smoke():
+    """Tiny job list for CI / fast sanity runs."""
+    return [
+        _conv2d(1, 8, 8, 8, 16, 3),
+        _depthwise(1, 8, 8, 16, 3),
+        _add(1, 6, 6, 4, 8, 3),
+        _matmul(64, 64, 64),
+    ]
+
+
+SHAPE_SETS = {"table2": shapes_table2, "smoke": shapes_smoke}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shapes", choices=sorted(SHAPE_SETS), default="table2")
+    ap.add_argument("--out", default="tuned.json")
+    ap.add_argument("--kernels", default="",
+                    help="comma-separated kernel filter (default: all)")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--max-candidates", type=int, default=None)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    jobs = SHAPE_SETS[args.shapes]()
+    if args.kernels:
+        keep = set(args.kernels.split(","))
+        jobs = [j for j in jobs if j[0] in keep]
+
+    cache = tune.TuneCache(None)
+    backend = tune.backend_tag()
+    print(f"# tuning {len(jobs)} (kernel, shape) jobs on backend={backend}")
+    wins = 0
+    for job in jobs:
+        kernel, sig, arrays, dtype = job[:4]
+        kwargs = job[4] if len(job) > 4 else None
+        best, best_us = tune.autotune_into(
+            cache, kernel, sig, arrays, dtype, kwargs=kwargs, reps=args.reps,
+            warmup=args.warmup, max_candidates=args.max_candidates,
+            verbose=args.verbose)
+        entry = cache.get(tune.cache_key(kernel, sig.key(), dtype, backend))
+        d_us = entry.get("default_us")
+        sp = (d_us / best_us) if (d_us and best_us) else float("nan")
+        tag = "TUNED-WIN" if d_us and best_us < d_us else "default-best"
+        wins += tag == "TUNED-WIN"
+        print(f"{kernel}/{sig.key()}/{dtype}: best={best} {best_us:.1f}us "
+              f"default={d_us and round(d_us, 1)}us speedup={sp:.2f}x [{tag}]")
+
+    cache.save(args.out)
+    print(f"# wrote {len(cache)} entries -> {args.out} "
+          f"({wins}/{len(jobs)} shapes improved over the default schedule)")
+    print(f"# install: cp {args.out} artifacts/tune_cache.json  "
+          f"(or REPRO_TUNE_CACHE={args.out})")
+
+
+if __name__ == "__main__":
+    main()

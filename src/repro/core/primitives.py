@@ -150,18 +150,33 @@ def depthwise_conv(x, w_dw, *, stride=1, padding="SAME", preferred=None):
     )
 
 
-def shift_channels(x, shifts):
+def shift_channels(x, shifts, *, max_shift: Optional[int] = None):
     """Per-channel spatial shift (Eq. 2): I[k,l,m] = X[k+a_m, l+b_m, m].
 
     Zero padding at the borders, matching the paper's SAME-padded reading.
     Implemented as a gather on a padded tensor so it vmaps/shards cleanly.
+
+    The padding bound must be a Python int. With a concrete shift table it
+    is read off the table; under tracing (jit) callers must pass
+    ``max_shift`` (``spec.kernel_size // 2`` for the paper's assignment) —
+    a silent fixed bound would corrupt results for larger displacements.
     """
     b, h, w, c = x.shape
     try:                      # concrete shift table: tight padding bound
         pad = max(1, int(jnp.max(jnp.abs(shifts))) if shifts.size else 1)
     except (jax.errors.TracerArrayConversionError,
             jax.errors.ConcretizationTypeError):
-        pad = 8               # traced table: conservative static bound
+        if max_shift is None:
+            raise ValueError(
+                "shift_channels: the shift table is traced, so the padding "
+                "bound cannot be derived from its values; pass "
+                "max_shift=spec.kernel_size // 2 (the maximum |shift| the "
+                "table can contain).")
+        pad = max(1, int(max_shift))
+    if max_shift is not None and pad > max(1, int(max_shift)):
+        raise ValueError(
+            f"shift_channels: shift table contains |shift|={pad} exceeding "
+            f"the declared max_shift={int(max_shift)}")
     xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
     rows = jnp.arange(h)[:, None, None] + pad + shifts[None, None, :, 0]
     cols = jnp.arange(w)[None, :, None] + pad + shifts[None, None, :, 1]
@@ -197,7 +212,7 @@ def apply(params: dict, x: jax.Array, spec: ConvSpec) -> jax.Array:
         h = depthwise_conv(x, params["w_dw"], stride=spec.stride, padding=spec.padding)
         y = standard_conv(h, params["w_pw"], stride=1, padding="SAME")
     elif p == "shift":
-        h = shift_channels(x, params["shifts"])
+        h = shift_channels(x, params["shifts"], max_shift=spec.kernel_size // 2)
         y = standard_conv(h, params["w_pw"], stride=spec.stride, padding="SAME")
     elif p == "add":
         y = add_conv(x, params["w"], padding=spec.padding)

@@ -63,7 +63,8 @@ def qconv_apply(qparams: dict, x: QTensor, spec: ConvSpec, out_frac_bits: int) -
 
     if p == "shift":
         # shift is pure data movement: exact in integer domain (paper's point)
-        shifted = shift_channels(x.q, qparams["shifts"])
+        shifted = shift_channels(x.q, qparams["shifts"],
+                                 max_shift=spec.kernel_size // 2)
         w_pw = qparams["w_pw"]
         acc_fb = x.frac_bits + w_pw.frac_bits
         acc = _conv_int(shifted, w_pw.q, stride=spec.stride, padding="SAME")

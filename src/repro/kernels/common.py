@@ -58,3 +58,14 @@ def pick_block(dim: int, preferred: int) -> int:
 
 def acc_dtype(dtype) -> jnp.dtype:
     return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else jnp.float32
+
+
+def effective_block(dim: int, block: int) -> int:
+    """The block size a divisor-gridded kernel actually runs: the largest
+    divisor of ``dim`` that is <= ``block``. Single source of truth shared by
+    the kernel wrappers, the tuner's search space, and its cost model — two
+    configs with the same effective block are the same schedule."""
+    b = max(1, min(block, dim))
+    while dim % b:
+        b -= 1
+    return b

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, cdiv
+from .common import acc_dtype, cdiv, effective_block
 
 
 def _kernel(xa_ref, xb_ref, w_ref, o_ref, *, k, bl, out_dtype):
@@ -33,20 +33,29 @@ def _kernel(xa_ref, xb_ref, w_ref, o_ref, *, k, bl, out_dtype):
     o_ref[0] = acc.astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_l", "block_c", "interpret"))
 def causal_conv1d(x: jax.Array, w: jax.Array, *, block_l: int = 512,
-                  block_c: int = 512, interpret: bool = True) -> jax.Array:
-    """out[b,l,d] = sum_k w[k,d] * x[b, l-K+1+k, d]. x: (B,L,D); w: (K,D)."""
+                  block_c: int = 512, interpret: bool = True,
+                  config: dict | None = None) -> jax.Array:
+    """out[b,l,d] = sum_k w[k,d] * x[b, l-K+1+k, d]. x: (B,L,D); w: (K,D).
+
+    ``config`` (a repro.tune schedule dict) overrides the block parameters.
+    """
+    if config:
+        block_l = int(config.get("block_l", block_l))
+        block_c = int(config.get("block_c", block_c))
+    return _causal_conv1d(x, w, block_l=block_l, block_c=block_c,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "block_c", "interpret"))
+def _causal_conv1d(x: jax.Array, w: jax.Array, *, block_l: int = 512,
+                   block_c: int = 512, interpret: bool = True) -> jax.Array:
     b, l, d = x.shape
     k = w.shape[0]
     if w.ndim == 3:                           # accept (K, 1, D)
         w = w[:, 0]
-    bl = min(block_l, l)
-    while l % bl:
-        bl -= 1
-    bc = min(block_c, d)
-    while d % bc:
-        bc -= 1
+    bl = effective_block(l, block_l)
+    bc = effective_block(d, block_c)
     nl = l // bl
     # left halo pad (K-1) + one trailing zero block for the i+1 lookahead ref
     xp = jnp.pad(x, ((0, 0), (k - 1, bl), (0, 0)))

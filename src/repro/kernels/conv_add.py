@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype
+from .common import acc_dtype, effective_block
 
 
 def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift,
@@ -46,23 +46,35 @@ def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift,
     o_ref[0] = acc.reshape(hout, wout, bco).astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_co", "requant_shift",
-                                             "x_preshift", "w_preshift",
-                                             "out_dtype", "interpret"))
 def add_conv2d(x: jax.Array, w: jax.Array, *, block_co: int = 8,
                requant_shift: int | None = None, x_preshift: int = 0,
                w_preshift: int = 0, out_dtype=None,
-               interpret: bool = True) -> jax.Array:
-    """SAME stride-1 AdderNet conv (Eq. 3). x: (N,H,W,Cx); w: (HK,HK,Cx,Cy)."""
+               interpret: bool = True, config: dict | None = None) -> jax.Array:
+    """SAME stride-1 AdderNet conv (Eq. 3). x: (N,H,W,Cx); w: (HK,HK,Cx,Cy).
+
+    ``config`` (a repro.tune schedule dict) overrides the block parameters.
+    """
+    if config:
+        block_co = int(config.get("block_co", block_co))
+    return _add_conv2d(x, w, block_co=block_co, requant_shift=requant_shift,
+                       x_preshift=x_preshift, w_preshift=w_preshift,
+                       out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_co", "requant_shift",
+                                             "x_preshift", "w_preshift",
+                                             "out_dtype", "interpret"))
+def _add_conv2d(x: jax.Array, w: jax.Array, *, block_co: int = 8,
+                requant_shift: int | None = None, x_preshift: int = 0,
+                w_preshift: int = 0, out_dtype=None,
+                interpret: bool = True) -> jax.Array:
     n, h, wd, cx = x.shape
     hk, _, _, cy = w.shape
     out_dtype = out_dtype or (jnp.int8 if requant_shift is not None else x.dtype)
     ph, pw = hk // 2, (hk - 1) // 2
     xp = jnp.pad(x, ((0, 0), (ph, pw), (ph, pw), (0, 0)))
     hp, wp = xp.shape[1], xp.shape[2]
-    bco = min(block_co, cy)
-    while cy % bco:
-        bco -= 1
+    bco = effective_block(cy, block_co)
     kern = functools.partial(_kernel, hk=hk, hout=h, wout=wd,
                              out_dtype=out_dtype, requant_shift=requant_shift,
                              x_preshift=x_preshift, w_preshift=w_preshift)

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype
+from .common import acc_dtype, effective_block
 
 
 def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift):
@@ -35,12 +35,24 @@ def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift):
     o_ref[0] = acc.astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_c", "requant_shift",
-                                             "out_dtype", "interpret"))
 def depthwise2d(x: jax.Array, w_dw: jax.Array, *, block_c: int = 128,
                 requant_shift: int | None = None, out_dtype=None,
-                interpret: bool = True) -> jax.Array:
-    """SAME stride-1 depthwise conv. x: (N,H,W,C); w_dw: (HK,HK,C)."""
+                interpret: bool = True, config: dict | None = None) -> jax.Array:
+    """SAME stride-1 depthwise conv. x: (N,H,W,C); w_dw: (HK,HK,C).
+
+    ``config`` (a repro.tune schedule dict) overrides the block parameters.
+    """
+    if config:
+        block_c = int(config.get("block_c", block_c))
+    return _depthwise2d(x, w_dw, block_c=block_c, requant_shift=requant_shift,
+                        out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "requant_shift",
+                                             "out_dtype", "interpret"))
+def _depthwise2d(x: jax.Array, w_dw: jax.Array, *, block_c: int = 128,
+                 requant_shift: int | None = None, out_dtype=None,
+                 interpret: bool = True) -> jax.Array:
     n, h, wd, c = x.shape
     hk = w_dw.shape[0]
     if w_dw.ndim == 4:                       # accept (HK,HK,C,1) layout
@@ -49,9 +61,7 @@ def depthwise2d(x: jax.Array, w_dw: jax.Array, *, block_c: int = 128,
     ph, pw = hk // 2, (hk - 1) // 2
     xp = jnp.pad(x, ((0, 0), (ph, pw), (ph, pw), (0, 0)))
     hp, wp = xp.shape[1], xp.shape[2]
-    bc = min(block_c, c)
-    while c % bc:
-        bc -= 1
+    bc = effective_block(c, block_c)
     kern = functools.partial(_kernel, hk=hk, hout=h, wout=wd,
                              out_dtype=out_dtype, requant_shift=requant_shift)
     return pl.pallas_call(

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype
+from .common import acc_dtype, effective_block
 
 
 def _kernel(x_ref, w_ref, o_ref, *, hk: int, hout: int, wout: int,
@@ -52,16 +52,28 @@ def _kernel(x_ref, w_ref, o_ref, *, hk: int, hout: int, wout: int,
     o_ref[0] = acc.reshape(hout, wout, bco).astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("groups", "block_co", "requant_shift",
-                                             "out_dtype", "interpret"))
 def conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
                   block_co: int = 128, requant_shift: int | None = None,
-                  out_dtype=None, interpret: bool = True) -> jax.Array:
+                  out_dtype=None, interpret: bool = True,
+                  config: dict | None = None) -> jax.Array:
     """SAME-padded stride-1 conv. x: (N,H,W,Cx); w: (HK,HK,Cx/g,Cy).
 
     int8 x int8 -> int8 when ``requant_shift`` is given (int32 accumulate);
-    float paths accumulate in f32.
+    float paths accumulate in f32. ``config`` (a repro.tune schedule dict)
+    overrides the block parameters.
     """
+    if config:
+        block_co = int(config.get("block_co", block_co))
+    return _conv2d_im2col(x, w, bias, groups=groups, block_co=block_co,
+                          requant_shift=requant_shift, out_dtype=out_dtype,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("groups", "block_co", "requant_shift",
+                                             "out_dtype", "interpret"))
+def _conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
+                   block_co: int = 128, requant_shift: int | None = None,
+                   out_dtype=None, interpret: bool = True) -> jax.Array:
     n, h, wd, cx = x.shape
     hk, _, cxg, cy = w.shape
     assert cx == cxg * groups and cy % groups == 0
@@ -71,9 +83,7 @@ def conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
     hp, wp = xp.shape[1], xp.shape[2]
 
     co_per_g = cy // groups
-    bco = min(block_co, co_per_g)
-    while co_per_g % bco:
-        bco -= 1                              # largest divisor <= block_co
+    bco = effective_block(co_per_g, block_co)
     n_co = co_per_g // bco
 
     kern = functools.partial(_kernel, hk=hk, hout=h, wout=wd,

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype
+from .common import acc_dtype, effective_block
 
 
 def _kernel(x_ref, w_ref, o_ref, *, groups, hout, wout, pad, out_dtype,
@@ -42,8 +42,13 @@ def _kernel(x_ref, w_ref, o_ref, *, groups, hout, wout, pad, out_dtype,
 
 def shift_conv2d(x: jax.Array, shifts, w_pw: jax.Array, *, block_co: int = 128,
                  requant_shift: int | None = None, out_dtype=None,
-                 interpret: bool = True) -> jax.Array:
-    """x: (N,H,W,C); shifts: (C,2) static ints; w_pw: (C,Cy) or (1,1,C,Cy)."""
+                 interpret: bool = True, config: dict | None = None) -> jax.Array:
+    """x: (N,H,W,C); shifts: (C,2) static ints; w_pw: (C,Cy) or (1,1,C,Cy).
+
+    ``config`` (a repro.tune schedule dict) overrides the block parameters.
+    """
+    if config:
+        block_co = int(config.get("block_co", block_co))
     if w_pw.ndim == 4:
         w_pw = w_pw[0, 0]
     n, h, wd, c = x.shape
@@ -68,9 +73,7 @@ def shift_conv2d(x: jax.Array, shifts, w_pw: jax.Array, *, block_co: int = 128,
     xp = jnp.pad(x[..., order], ((0, 0), (pad, pad), (pad, pad), (0, 0)))
     wp = w_pw[order, :]
     hp, wpd = xp.shape[1], xp.shape[2]
-    bco = min(block_co, cy)
-    while cy % bco:
-        bco -= 1
+    bco = effective_block(cy, block_co)
 
     kern = functools.partial(_kernel, groups=groups, hout=h, wout=wd, pad=pad,
                              out_dtype=out_dtype, requant_shift=requant_shift)

@@ -53,12 +53,26 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk, out_dtype, requant_shift):
         o_ref[...] = acc.astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "requant_shift",
-                                             "out_dtype", "interpret"))
 def matmul(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
            bk: int = 512, requant_shift: int | None = None, out_dtype=None,
-           interpret: bool = True) -> jax.Array:
-    """a: (M, K) @ b: (K, N). int8 inputs + requant_shift -> int8 output."""
+           interpret: bool = True, config: dict | None = None) -> jax.Array:
+    """a: (M, K) @ b: (K, N). int8 inputs + requant_shift -> int8 output.
+
+    ``config`` (a repro.tune schedule dict) overrides the block parameters.
+    """
+    if config:
+        bm = int(config.get("bm", bm))
+        bn = int(config.get("bn", bn))
+        bk = int(config.get("bk", bk))
+    return _matmul(a, b, bm=bm, bn=bn, bk=bk, requant_shift=requant_shift,
+                   out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "requant_shift",
+                                             "out_dtype", "interpret"))
+def _matmul(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
+            bk: int = 512, requant_shift: int | None = None, out_dtype=None,
+            interpret: bool = True) -> jax.Array:
     m, k = a.shape
     k2, n = b.shape
     assert k == k2

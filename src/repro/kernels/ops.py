@@ -3,9 +3,16 @@
 ``method='pallas'`` runs the TPU kernels (interpret=True automatically off
 TPU); ``method='xla'`` runs the pure-jnp oracle (the direct / no-SIMD
 baseline). Models and benchmarks call these, never pallas_call directly.
+
+Schedule selection: every Pallas path consults the ``repro.tune`` subsystem
+unless an explicit ``config=`` dict is passed — persistent cache entries
+(committed by ``scripts/tune.py``) win, otherwise the analytic fallback
+cost model picks the schedule. Lookups are memoized in-process, so the
+per-call overhead after the first trace is one dict probe.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -21,59 +28,103 @@ from .conv1d_causal import causal_conv1d as _c1d_pallas
 from .matmul_q8 import matmul as _mm_pallas
 
 
+def _check_method(method: str, allowed=("pallas", "xla")):
+    if method not in allowed:
+        raise ValueError(f"unknown method {method!r}; expected one of {allowed}")
+
+
+def _tuned(sig_fn, *dims, dtype):
+    """Cache/analytic schedule lookup; lazy import avoids a module cycle
+    (repro.tune.runner measures through these very kernels)."""
+    from repro import tune
+    return tune.get_config(sig_fn(*dims), str(dtype))
+
+
 def conv2d(x, w, bias=None, *, groups: int = 1, method: str = "pallas",
-           requant_shift: Optional[int] = None):
+           requant_shift: Optional[int] = None, config: Optional[dict] = None):
+    _check_method(method)
     if method == "xla":
         if requant_shift is not None:
             return ref.conv2d_q8_ref(x, w, bias, groups=groups,
                                      requant_shift=requant_shift)
         return ref.conv2d_ref(x, w, bias, groups=groups)
+    if config is None:
+        from repro.tune import sig_conv2d
+        n, h, wd, cx = x.shape
+        config = _tuned(sig_conv2d, n, h, wd, cx, w.shape[-1], w.shape[0],
+                        groups, dtype=x.dtype)
     return _conv_pallas(x, w, bias, groups=groups, requant_shift=requant_shift,
-                        interpret=use_interpret())
+                        interpret=use_interpret(), config=config)
 
 
-def depthwise2d(x, w_dw, *, method: str = "pallas"):
+def depthwise2d(x, w_dw, *, method: str = "pallas",
+                config: Optional[dict] = None):
+    _check_method(method)
     if method == "xla":
         return ref.depthwise2d_ref(x, w_dw)
-    return _dw_pallas(x, w_dw, interpret=use_interpret())
+    if config is None:
+        from repro.tune import sig_depthwise2d
+        n, h, wd, c = x.shape
+        config = _tuned(sig_depthwise2d, n, h, wd, c, w_dw.shape[0],
+                        dtype=x.dtype)
+    return _dw_pallas(x, w_dw, interpret=use_interpret(), config=config)
 
 
 def shift_conv2d(x, shifts, w_pw, *, method: str = "pallas",
-                 requant_shift: Optional[int] = None):
+                 requant_shift: Optional[int] = None,
+                 config: Optional[dict] = None,
+                 max_shift: Optional[int] = None):
+    """``max_shift`` bounds |shift| when the table is traced (jit): pass
+    ``kernel_size // 2``; unused when the table is concrete."""
+    _check_method(method)
     if method == "xla":
-        return ref.shift_conv2d_ref(x, shifts, w_pw)
+        return ref.shift_conv2d_ref(x, shifts, w_pw, max_shift=max_shift)
+    if config is None:
+        from repro.tune import sig_shift_conv2d
+        n, h, wd, c = x.shape
+        config = _tuned(sig_shift_conv2d, n, h, wd, c, w_pw.shape[-1],
+                        dtype=x.dtype)
     return _shift_pallas(x, shifts, w_pw, requant_shift=requant_shift,
-                         interpret=use_interpret())
+                         interpret=use_interpret(), config=config)
 
 
 def add_conv2d(x, w, *, method: str = "pallas",
                requant_shift: Optional[int] = None,
-               x_preshift: int = 0, w_preshift: int = 0):
+               x_preshift: int = 0, w_preshift: int = 0,
+               config: Optional[dict] = None):
+    _check_method(method)
     if method == "xla":
         return ref.add_conv2d_ref(x, w)
+    if config is None:
+        from repro.tune import sig_add_conv2d
+        n, h, wd, cx = x.shape
+        config = _tuned(sig_add_conv2d, n, h, wd, cx, w.shape[-1], w.shape[0],
+                        dtype=x.dtype)
     return _add_pallas(x, w, requant_shift=requant_shift,
                        x_preshift=x_preshift, w_preshift=w_preshift,
-                       interpret=use_interpret())
+                       interpret=use_interpret(), config=config)
 
 
-@jax.custom_vjp
-def _causal_conv1d_diff(x, w):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _causal_conv1d_diff(x, w, block_l, block_c):
     """Pallas forward + analytic jnp backward (pallas_call has no AD rule).
 
     bwd: dx is the anti-causal conv of g with the same taps (flip-conv-flip);
     dw[k,d] = sum_{b,l} g[b,l,d] * x_leftpad[b,l+k,d].
     """
-    return _c1d_pallas(x, w, interpret=use_interpret())
+    return _c1d_pallas(x, w, block_l=block_l, block_c=block_c,
+                       interpret=use_interpret())
 
 
-def _c1d_fwd(x, w):
-    return _causal_conv1d_diff(x, w), (x, w)
+def _c1d_fwd(x, w, block_l, block_c):
+    return _causal_conv1d_diff(x, w, block_l, block_c), (x, w)
 
 
-def _c1d_bwd(res, g):
+def _c1d_bwd(block_l, block_c, res, g):
     x, w = res
     k = w.shape[0]
-    gx = jnp.flip(_causal_conv1d_diff(jnp.flip(g, axis=1), w), axis=1)
+    gx = jnp.flip(_causal_conv1d_diff(jnp.flip(g, axis=1), w,
+                                      block_l, block_c), axis=1)
     xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
     l = x.shape[1]
     dw = jnp.stack([jnp.einsum("bld,bld->d", g.astype(jnp.float32),
@@ -85,21 +136,42 @@ def _c1d_bwd(res, g):
 _causal_conv1d_diff.defvjp(_c1d_fwd, _c1d_bwd)
 
 
-def causal_conv1d(x, w, *, method: str = "auto"):
+def causal_conv1d(x, w, *, method: str = "auto",
+                  config: Optional[dict] = None):
     """method='auto': Pallas kernel off-mesh (exercises the paper primitive);
     XLA path under SPMD — an opaque pallas_call would force its operands to
     be gathered/replicated by the partitioner."""
+    _check_method(method, ("auto", "pallas", "xla"))
     if method == "auto":
         from repro.parallel.sharding import current_mesh
         method = "xla" if current_mesh() is not None else "pallas"
     if method == "xla":
         return ref.causal_conv1d_ref(x, w)
-    return _causal_conv1d_diff(x, w)
+    if config is None:
+        from repro.tune import sig_causal_conv1d
+        b, l, d = x.shape
+        config = _tuned(sig_causal_conv1d, b, l, d, w.shape[0], dtype=x.dtype)
+    from repro.tune import default_config
+    base = default_config("causal_conv1d")
+    return _causal_conv1d_diff(x, w,
+                               int(config.get("block_l", base["block_l"])),
+                               int(config.get("block_c", base["block_c"])))
 
 
 def matmul(a, b, *, method: str = "pallas", requant_shift: Optional[int] = None,
-           bm: int = 256, bn: int = 256, bk: int = 512):
+           bm: Optional[int] = None, bn: Optional[int] = None,
+           bk: Optional[int] = None, config: Optional[dict] = None):
+    """Explicit bm/bn/bk win over ``config``, which wins over the tuner."""
+    _check_method(method)
     if method == "xla":
         return ref.matmul_ref(a, b, requant_shift=requant_shift)
-    return _mm_pallas(a, b, bm=bm, bn=bn, bk=bk, requant_shift=requant_shift,
-                      interpret=use_interpret())
+    if config is None and None in (bm, bn, bk):
+        from repro.tune import sig_matmul
+        config = _tuned(sig_matmul, a.shape[0], a.shape[1], b.shape[1],
+                        dtype=a.dtype)
+    config = dict(config or {})
+    for name, val in (("bm", bm), ("bn", bn), ("bk", bk)):
+        if val is not None:
+            config[name] = val
+    return _mm_pallas(a, b, requant_shift=requant_shift,
+                      interpret=use_interpret(), config=config)

@@ -34,9 +34,10 @@ def depthwise2d_ref(x, w_dw):
     return P.depthwise_conv(x, w4)
 
 
-def shift_conv2d_ref(x, shifts, w_pw):
+def shift_conv2d_ref(x, shifts, w_pw, *, max_shift=None):
     w4 = w_pw[None, None] if w_pw.ndim == 2 else w_pw
-    return P.standard_conv(P.shift_channels(x, jnp.asarray(shifts)), w4)
+    return P.standard_conv(
+        P.shift_channels(x, jnp.asarray(shifts), max_shift=max_shift), w4)
 
 
 def add_conv2d_ref(x, w):

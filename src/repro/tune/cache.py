@@ -1,0 +1,142 @@
+"""Persistent autotuning config cache.
+
+JSON on disk, keyed by ``(kernel, shape, dtype, backend)``, with a schema
+version so stale caches from older tuner revisions are ignored rather than
+misapplied (an AutoTVM log-file lesson: configs are only valid against the
+search space that produced them). An in-process memo layer sits in front of
+the file so the dispatch hot path never re-reads or re-parses JSON.
+
+Cache resolution order used by the kernel dispatch layer:
+
+  1. in-process memo (includes analytic-fallback results)
+  2. entries of the loaded persistent cache (``REPRO_TUNE_CACHE`` env var,
+     else ``<repo>/artifacts/tune_cache.json`` if present)
+  3. analytic fallback cost model (runner.analytic_config), memoized
+
+so models / serve / benchmarks always get *some* schedule with zero setup,
+and get measured schedules transparently once a cache has been committed.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, Optional
+
+SCHEMA_VERSION = 1
+
+# repo root = .../src/repro/tune/cache.py -> four levels up
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+DEFAULT_CACHE_PATH = os.path.join(_REPO_ROOT, "artifacts", "tune_cache.json")
+
+
+def cache_key(kernel: str, shape_key: str, dtype: str, backend: str) -> str:
+    return "|".join((kernel, shape_key, dtype, backend))
+
+
+class TuneCache:
+    """One JSON cache file: {schema_version, entries: {key: entry}}.
+
+    An *entry* is ``{"config": {...}, "us": float|None, "source":
+    "measured"|"analytic", ...}``. Unknown extra fields round-trip untouched.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.entries: Dict[str, dict] = {}
+        self.stale = False          # True if an on-disk schema mismatched
+        self._lock = threading.Lock()
+        if path:
+            self._load(path)
+
+    def _load(self, path: str):
+        if not os.path.exists(path):
+            return
+        try:
+            with open(path) as f:
+                blob = json.load(f)
+        except (OSError, ValueError):
+            self.stale = True
+            return
+        if blob.get("schema_version") != SCHEMA_VERSION:
+            # Old/foreign schema: ignore entries entirely (never misapply a
+            # config searched over a different space), but keep the path so
+            # a subsequent save() rewrites the file at the current version.
+            self.stale = True
+            return
+        entries = blob.get("entries", {})
+        if isinstance(entries, dict):
+            self.entries = entries
+
+    def get(self, key: str) -> Optional[dict]:
+        return self.entries.get(key)
+
+    def put(self, key: str, config: dict, *, us: Optional[float] = None,
+            source: str = "measured", **meta):
+        with self._lock:
+            self.entries[key] = dict(config=dict(config), us=us,
+                                     source=source, **meta)
+
+    def save(self, path: Optional[str] = None):
+        path = path or self.path
+        if not path:
+            raise ValueError("TuneCache.save: no path given or bound")
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        blob = {"schema_version": SCHEMA_VERSION, "entries": self.entries}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        self.path = path
+
+    def __len__(self):
+        return len(self.entries)
+
+
+# --------------------------------------------------------------------------
+# Process-wide default cache + memo (the dispatch hot path)
+# --------------------------------------------------------------------------
+
+_default_cache: Optional[TuneCache] = None
+_memo: Dict[str, dict] = {}
+_memo_lock = threading.Lock()
+
+
+def default_cache_path() -> Optional[str]:
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return env
+    if os.path.exists(DEFAULT_CACHE_PATH):
+        return DEFAULT_CACHE_PATH
+    return None
+
+
+def get_default_cache() -> Optional[TuneCache]:
+    global _default_cache
+    if _default_cache is None:
+        path = default_cache_path()
+        _default_cache = TuneCache(path) if path else TuneCache(None)
+    return _default_cache
+
+
+def set_default_cache(cache: Optional[TuneCache]):
+    """Install a cache for the dispatch layer (tests / scripts); clears memo."""
+    global _default_cache
+    with _memo_lock:
+        _default_cache = cache
+        _memo.clear()
+
+
+def reset():
+    """Drop the default cache and memo (re-reads env/disk on next lookup)."""
+    set_default_cache(None)
+
+
+def memo_get(key: str) -> Optional[dict]:
+    return _memo.get(key)
+
+
+def memo_put(key: str, entry: dict):
+    with _memo_lock:
+        _memo[key] = entry

@@ -1,0 +1,288 @@
+"""Measured autotuner + analytic fallback cost model.
+
+Two ways to pick a schedule, mirroring AutoTVM's measured-log / fallback
+split (microtvm-blogpost-eval; "Not All Ops Are Created Equal!" motivates
+the analytic half — MAC count alone misranks schedules, so the model scores
+*data movement and occupancy*, not just arithmetic):
+
+* :func:`autotune` — run every feasible config from ``space.candidates``
+  through the real kernel, timing median-of-k with warmup. When the Pallas
+  interpreter is active (no TPU) the measurement still ranks configs by the
+  work the schedule issues, but the backend tag records the interpret mode
+  so a TPU run never consumes interpreter numbers (the interpret-mode
+  guard).
+
+* :func:`analytic_config` — no measurement: a first-order TPU cost model
+  built from the paper's analytic machinery (``ConvSpec.mac_count`` for
+  arithmetic, ``core.energy.TPUv5e`` for peak FLOPs / HBM bandwidth / VMEM
+  capacity) plus schedule-dependent terms: per-grid-step overhead, HBM
+  traffic as a function of blocking, VPU/MXU lane utilization, and a hard
+  VMEM-overflow penalty.
+
+:func:`get_config` is the dispatch-layer entry point: memo -> persistent
+cache -> analytic fallback.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.energy import TPUv5e
+from repro.core.primitives import ConvSpec
+
+from . import cache as _cache
+from . import space as _space
+from .space import ShapeSig, effective_config
+
+TPU = TPUv5e()
+
+# First-order schedule constants (relative scoring is what matters).
+GRID_STEP_OVERHEAD_S = 2e-6          # per grid step: DMA setup + dispatch
+VPU_DERATE = 1.0 / 64.0              # VPU peak vs MXU peak (8x128 vs 128x128)
+VMEM_PENALTY = 1e3                   # multiplier when a schedule overflows VMEM
+LANE = 128
+SUBLANE = 8
+
+
+def backend_tag() -> str:
+    """Cache-key backend tag; marks interpret mode so interpreter timings are
+    never consumed by a real-TPU run (and vice versa)."""
+    import jax
+    from repro.kernels.common import use_interpret
+    tag = jax.default_backend()
+    if use_interpret():
+        tag += "+interpret"
+    return tag
+
+
+# --------------------------------------------------------------------------
+# Analytic fallback cost model
+# --------------------------------------------------------------------------
+
+def _util(block: int, tile: int = LANE) -> float:
+    """Fraction of compute lanes a block of this width keeps busy."""
+    if block <= 0:
+        return 1e-9
+    full = -(-block // tile) * tile
+    return block / full
+
+
+def _bytes_of(dtype: str) -> int:
+    return {"int8": 1, "uint8": 1, "bfloat16": 2, "float16": 2}.get(dtype, 4)
+
+
+def _vmem_cost(footprint_bytes: float) -> float:
+    return VMEM_PENALTY if footprint_bytes > TPU.vmem_bytes else 1.0
+
+
+def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
+    """Estimated seconds for one kernel invocation under ``config``."""
+    k = sig.kernel
+    eb = _bytes_of(dtype)
+    ab = 4                                           # int32/f32 accumulator
+
+    if k == "conv2d":
+        n, h, w = sig.get("n"), sig.get("h"), sig.get("w")
+        ci, co, hk, g = (sig.get("ci"), sig.get("co"), sig.get("k"),
+                         max(sig.get("g"), 1))
+        cxg, cog = ci // g, co // g
+        bco = effective_config(sig, config)["block_co"]
+        steps = n * g * (cog // bco)
+        spec = ConvSpec(primitive="grouped" if g > 1 else "standard",
+                        in_channels=ci, out_channels=co, kernel_size=hk,
+                        groups=g, use_bias=False)
+        flops = 2.0 * n * spec.mac_count(w)
+        img = (h + hk) * (w + hk) * cxg * eb         # padded image block
+        wts = hk * hk * cxg * bco * eb
+        out = h * w * bco * eb
+        traffic = steps * (img + wts + out)
+        vmem = img + wts + h * w * bco * ab
+        compute = flops / (TPU.peak_bf16_flops * _util(bco) * _util(cxg))
+        return (_vmem_cost(vmem)
+                * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
+
+    if k == "depthwise2d":
+        n, h, w, c, hk = (sig.get("n"), sig.get("h"), sig.get("w"),
+                          sig.get("c"), sig.get("k"))
+        bc = effective_config(sig, config)["block_c"]
+        steps = n * (c // bc)
+        flops = 2.0 * n * h * w * c * hk * hk
+        img = (h + hk) * (w + hk) * bc * eb
+        traffic = steps * (img + hk * hk * bc * eb + h * w * bc * eb)
+        vmem = img + h * w * bc * ab
+        compute = flops / (TPU.peak_bf16_flops * VPU_DERATE * _util(bc))
+        return (_vmem_cost(vmem)
+                * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
+
+    if k == "shift_conv2d":
+        n, h, w, c, co = (sig.get("n"), sig.get("h"), sig.get("w"),
+                          sig.get("c"), sig.get("co"))
+        bco = effective_config(sig, config)["block_co"]
+        steps = n * (co // bco)
+        flops = 2.0 * n * h * w * c * co
+        img = (h + 2) * (w + 2) * c * eb             # whole image per step
+        traffic = steps * (img + c * bco * eb + h * w * bco * eb)
+        vmem = img + c * bco * eb + h * w * bco * ab
+        compute = flops / (TPU.peak_bf16_flops * _util(bco) * _util(c))
+        return (_vmem_cost(vmem)
+                * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
+
+    if k == "add_conv2d":
+        n, h, w = sig.get("n"), sig.get("h"), sig.get("w")
+        ci, co, hk = sig.get("ci"), sig.get("co"), sig.get("k")
+        bco = effective_config(sig, config)["block_co"]
+        steps = n * (co // bco)
+        # |a-b| broadcast: the (H*W, Cx, BCO) intermediate is the VMEM hog
+        flops = 3.0 * n * h * w * ci * co * hk * hk  # sub+abs+add per tap
+        img = (h + hk) * (w + hk) * ci * eb
+        traffic = steps * (img + hk * hk * ci * bco * eb + h * w * bco * eb)
+        vmem = img + h * w * ci * bco * ab + h * w * bco * ab
+        compute = flops / (TPU.peak_bf16_flops * VPU_DERATE * _util(bco, SUBLANE))
+        return (_vmem_cost(vmem)
+                * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
+
+    if k == "causal_conv1d":
+        b, l, d, kk = (sig.get("b"), sig.get("l"), sig.get("d"), sig.get("k"))
+        eff = effective_config(sig, config)
+        bl, bc = eff["block_l"], eff["block_c"]
+        steps = b * (l // bl) * (d // bc)
+        flops = 2.0 * b * l * d * kk
+        blk = 2 * bl * bc * eb + kk * bc * eb        # current + lookahead block
+        traffic = steps * (blk + bl * bc * eb)
+        vmem = blk + bl * bc * ab
+        compute = flops / (TPU.peak_bf16_flops * VPU_DERATE * _util(bc))
+        return (_vmem_cost(vmem)
+                * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
+
+    if k == "matmul":
+        m, kk, n = sig.get("m"), sig.get("k"), sig.get("n")
+        eff = effective_config(sig, config)
+        bm, bn, bk = eff["bm"], eff["bn"], eff["bk"]
+        gi, gj, gk = -(-m // bm), -(-n // bn), -(-kk // bk)
+        steps = gi * gj * gk
+        flops = 2.0 * m * n * kk
+        traffic = steps * (bm * bk + bk * bn) * eb + gi * gj * bm * bn * eb
+        vmem = (bm * bk + bk * bn) * eb + bm * bn * ab
+        compute = flops / (TPU.peak_bf16_flops
+                           * _util(bn) * _util(bk) * _util(bm, SUBLANE))
+        return (_vmem_cost(vmem)
+                * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
+
+    raise ValueError(f"unknown kernel {k!r}")
+
+
+def analytic_config(sig: ShapeSig, dtype: str = "float32") -> Dict[str, int]:
+    """Best config under the analytic model (no measurement)."""
+    best, best_s = None, float("inf")
+    for cfg in _space.candidates(sig):
+        s = estimate_s(sig, cfg, dtype)
+        if s < best_s:
+            best, best_s = cfg, s
+    assert best is not None
+    return best
+
+
+# --------------------------------------------------------------------------
+# Measured autotuner
+# --------------------------------------------------------------------------
+
+def time_config(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock microseconds per call (same protocol as
+    benchmarks/common.time_fn; duplicated so src/ never imports benchmarks/)."""
+    import jax
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def _kernel_call(kernel: str) -> Callable:
+    """Kernel entry point taking (*arrays, config=...) — imported lazily to
+    keep repro.tune importable without pulling the whole kernel layer."""
+    from repro.kernels.common import use_interpret
+    interp = use_interpret()
+    if kernel == "conv2d":
+        from repro.kernels.conv_im2col import conv2d_im2col as fn
+    elif kernel == "depthwise2d":
+        from repro.kernels.conv_dw import depthwise2d as fn
+    elif kernel == "shift_conv2d":
+        from repro.kernels.conv_shift import shift_conv2d as fn
+    elif kernel == "add_conv2d":
+        from repro.kernels.conv_add import add_conv2d as fn
+    elif kernel == "causal_conv1d":
+        from repro.kernels.conv1d_causal import causal_conv1d as fn
+    elif kernel == "matmul":
+        from repro.kernels.matmul_q8 import matmul as fn
+    else:
+        raise ValueError(f"unknown kernel {kernel!r}")
+    return lambda args, cfg, kw: fn(*args, interpret=interp, config=cfg, **kw)
+
+
+def autotune(kernel: str, sig: ShapeSig, args: Tuple, *,
+             kwargs: Optional[dict] = None, reps: int = 5, warmup: int = 2,
+             max_candidates: Optional[int] = None,
+             verbose: bool = False) -> Tuple[Dict[str, int], float, list]:
+    """Measure every candidate config on real arrays; return
+    (best_config, best_us, [(config, us), ...]). ``kwargs`` are non-schedule
+    kernel arguments (e.g. groups=, requant_shift=) held fixed across
+    candidates."""
+    from repro.kernels.common import use_interpret
+    if use_interpret() and reps > 3:
+        reps = 3                     # interpret-mode guard: interpreter is
+        warmup = min(warmup, 1)      # slow & deterministic; fewer reps suffice
+    call = _kernel_call(kernel)
+    kw = kwargs or {}
+    # throwaway pass: absorb process-level one-time costs (thread pools,
+    # dtype-specific backend init) so the first timed candidate — always the
+    # default schedule — is not systematically penalized
+    call(args, _space.default_config(kernel), kw)
+    results = []
+    for i, cfg in enumerate(_space.candidates(sig)):
+        if max_candidates is not None and i >= max_candidates:
+            break
+        us = time_config(lambda a=args, c=cfg: call(a, c, kw),
+                         reps=reps, warmup=warmup)
+        results.append((cfg, us))
+        if verbose:
+            print(f"  {kernel}/{sig.key()} {cfg} -> {us:.1f}us")
+    best, best_us = min(results, key=lambda t: t[1])
+    return best, best_us, results
+
+
+def autotune_into(cache: _cache.TuneCache, kernel: str, sig: ShapeSig,
+                  args: Tuple, dtype: str, **kw) -> Tuple[Dict[str, int], float]:
+    """Autotune one (kernel, shape) and record the winner in ``cache``."""
+    best, best_us, results = autotune(kernel, sig, args, **kw)
+    default_us = next((us for cfg, us in results
+                       if cfg == _space.default_config(kernel)), None)
+    key = _cache.cache_key(kernel, sig.key(), dtype, backend_tag())
+    cache.put(key, best, us=best_us, source="measured",
+              default_us=default_us, n_candidates=len(results))
+    return best, best_us
+
+
+# --------------------------------------------------------------------------
+# Dispatch-layer lookup: memo -> persistent cache -> analytic fallback
+# --------------------------------------------------------------------------
+
+def get_config(sig: ShapeSig, dtype: str) -> Dict[str, int]:
+    key = _cache.cache_key(sig.kernel, sig.key(), str(dtype), backend_tag())
+    hit = _cache.memo_get(key)
+    if hit is not None:
+        return hit["config"]
+    pc = _cache.get_default_cache()
+    entry = pc.get(key) if pc is not None else None
+    if entry is None:
+        entry = {"config": analytic_config(sig, str(dtype)),
+                 "us": None, "source": "analytic"}
+    _cache.memo_put(key, entry)
+    return entry["config"]

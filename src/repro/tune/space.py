@@ -1,0 +1,180 @@
+"""Per-kernel search-space definitions for the autotuner.
+
+Each Pallas kernel exposes a small set of schedule knobs (block/tile sizes,
+grid shape by implication). The paper's NNoM kernels are hand-scheduled per
+Cortex-M target; the TPU analogue is a per-(kernel, shape, dtype) config
+search over these knobs — the AutoTVM recipe from the microtvm-blogpost-eval
+reference, shrunk to the handful of parameters our kernels actually expose.
+
+A *config* is a plain dict of kwargs understood by the kernel wrapper
+(e.g. ``{"block_co": 64}``). :func:`candidates` enumerates the feasible
+configs for a concrete shape signature; :func:`default_config` returns the
+hard-coded seed schedule (what the kernels used before this subsystem
+existed), which is always feasible and always a member of the space.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Tuple
+
+from repro.kernels.common import effective_block
+
+# Kernels the tuner knows about. Names match repro.kernels.ops entry points.
+KERNELS = ("conv2d", "depthwise2d", "shift_conv2d", "add_conv2d",
+           "causal_conv1d", "matmul")
+
+# Hard-coded schedules shipped with the seed kernels (pre-tuner behavior).
+_DEFAULTS: Dict[str, Dict[str, int]] = {
+    "conv2d": {"block_co": 128},
+    "depthwise2d": {"block_c": 128},
+    "shift_conv2d": {"block_co": 128},
+    "add_conv2d": {"block_co": 8},
+    "causal_conv1d": {"block_l": 512, "block_c": 512},
+    "matmul": {"bm": 256, "bn": 256, "bk": 512},
+}
+
+_POW2_BLOCKS = (8, 16, 32, 64, 128, 256)
+_MM_BLOCKS = (128, 256, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSig:
+    """Canonical shape signature of one kernel invocation.
+
+    ``dims`` is a tuple of named ints in kernel-specific order; it is what the
+    cache keys on and what the space enumerates against.
+    """
+
+    kernel: str
+    dims: Tuple[Tuple[str, int], ...]
+
+    def __post_init__(self):
+        if self.kernel not in KERNELS:
+            raise ValueError(f"unknown kernel {self.kernel!r}; "
+                             f"known: {KERNELS}")
+
+    def get(self, name: str) -> int:
+        for k, v in self.dims:
+            if k == name:
+                return v
+        raise KeyError(name)
+
+    def key(self) -> str:
+        return "_".join(f"{k}{v}" for k, v in self.dims)
+
+
+def sig_conv2d(n, h, w, cx, cy, hk, groups=1) -> ShapeSig:
+    return ShapeSig("conv2d", (("n", n), ("h", h), ("w", w), ("ci", cx),
+                               ("co", cy), ("k", hk), ("g", groups)))
+
+
+def sig_depthwise2d(n, h, w, c, hk) -> ShapeSig:
+    return ShapeSig("depthwise2d", (("n", n), ("h", h), ("w", w), ("c", c),
+                                    ("k", hk)))
+
+
+def sig_shift_conv2d(n, h, w, c, cy) -> ShapeSig:
+    return ShapeSig("shift_conv2d", (("n", n), ("h", h), ("w", w), ("c", c),
+                                     ("co", cy)))
+
+
+def sig_add_conv2d(n, h, w, cx, cy, hk) -> ShapeSig:
+    return ShapeSig("add_conv2d", (("n", n), ("h", h), ("w", w), ("ci", cx),
+                                   ("co", cy), ("k", hk)))
+
+
+def sig_causal_conv1d(b, l, d, k) -> ShapeSig:
+    return ShapeSig("causal_conv1d", (("b", b), ("l", l), ("d", d), ("k", k)))
+
+
+def sig_matmul(m, k, n) -> ShapeSig:
+    return ShapeSig("matmul", (("m", m), ("k", k), ("n", n)))
+
+
+def default_config(kernel: str) -> Dict[str, int]:
+    if kernel not in _DEFAULTS:
+        raise ValueError(f"unknown kernel {kernel!r}")
+    return dict(_DEFAULTS[kernel])
+
+
+def effective_config(sig: ShapeSig, cfg: Dict[str, int]) -> Dict[str, int]:
+    """The schedule the kernel actually runs for ``cfg`` on this shape.
+
+    Divisor-gridded kernels degrade blocks via ``effective_block``; matmul's
+    cdiv grid only clamps to the dimension. Two configs with equal effective
+    schedules are the same compiled kernel — the space dedupes on this, and
+    tuned-vs-default comparisons are only meaningful across distinct
+    effective schedules.
+    """
+    k = sig.kernel
+    d = default_config(k)
+
+    def get(name):
+        return int(cfg.get(name, d[name]))
+
+    if k == "conv2d":
+        co_per_g = sig.get("co") // max(sig.get("g"), 1)
+        return {"block_co": effective_block(co_per_g, get("block_co"))}
+    if k == "depthwise2d":
+        return {"block_c": effective_block(sig.get("c"), get("block_c"))}
+    if k == "shift_conv2d":
+        return {"block_co": effective_block(sig.get("co"), get("block_co"))}
+    if k == "add_conv2d":
+        return {"block_co": effective_block(sig.get("co"), get("block_co"))}
+    if k == "causal_conv1d":
+        return {"block_l": effective_block(sig.get("l"), get("block_l")),
+                "block_c": effective_block(sig.get("d"), get("block_c"))}
+    if k == "matmul":
+        return {"bm": min(get("bm"), sig.get("m")),
+                "bn": min(get("bn"), sig.get("n")),
+                "bk": min(get("bk"), sig.get("k"))}
+    raise AssertionError(k)  # pragma: no cover - ShapeSig guards kernel
+
+
+def candidates(sig: ShapeSig) -> Iterator[Dict[str, int]]:
+    """Enumerate feasible configs for one shape, default first.
+
+    Deduped by *effective* schedule, so the default's entry represents its
+    whole equivalence class and no other candidate aliases it.
+    """
+    k = sig.kernel
+    seen = set()
+    out: List[Dict[str, int]] = []
+
+    def emit(cfg: Dict[str, int]):
+        key = tuple(sorted(effective_config(sig, cfg).items()))
+        if key not in seen:
+            seen.add(key)
+            out.append(cfg)
+
+    emit(default_config(k))
+
+    if k == "conv2d":
+        for bco in _POW2_BLOCKS:
+            emit({"block_co": bco})
+    elif k == "depthwise2d":
+        for bc in _POW2_BLOCKS:
+            emit({"block_c": bc})
+    elif k == "shift_conv2d":
+        for bco in _POW2_BLOCKS:
+            emit({"block_co": bco})
+    elif k == "add_conv2d":
+        for bco in (1, 2, 4, 8, 16, 32):
+            emit({"block_co": bco})
+    elif k == "causal_conv1d":
+        for bl in (128, 256, 512, 1024):
+            for bc in (128, 256, 512):
+                emit({"block_l": bl, "block_c": bc})
+    elif k == "matmul":
+        for bm in _MM_BLOCKS:
+            for bn in _MM_BLOCKS:
+                for bk in _MM_BLOCKS:
+                    emit({"bm": bm, "bn": bn, "bk": bk})
+    else:  # pragma: no cover - KERNELS guard above
+        raise AssertionError(k)
+
+    return iter(out)
+
+
+def space_size(sig: ShapeSig) -> int:
+    return sum(1 for _ in candidates(sig))

@@ -177,3 +177,50 @@ def test_matmul_int8(shift):
     got = matmul(a, b, bm=32, bn=16, bk=32, requant_shift=shift)
     want = ref.matmul_ref(a, b, requant_shift=shift)
     np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------- shift_channels padding bound --
+def test_shift_channels_large_shift_jit():
+    """Regression: the traced-shift fallback used a hard-coded pad=8, which
+    silently corrupted results for |shift| > 8 (kernel_size > 17). With the
+    bound passed explicitly the jitted gather must match the concrete one."""
+    from repro.core.primitives import shift_channels
+    c, s = 4, 9                                  # |shift|=9 broke pad=8
+    x = rnd((1, 24, 24, c))
+    shifts = jnp.array([[s, -s], [-s, s], [s, s], [0, -s]], jnp.int32)
+    want = shift_channels(x, shifts)             # concrete: tight bound
+    got = jax.jit(lambda xx, ss: shift_channels(xx, ss, max_shift=s))(x, shifts)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_shift_channels_traced_without_bound_raises():
+    from repro.core.primitives import shift_channels
+    x = rnd((1, 8, 8, 2))
+    shifts = jnp.array([[1, 0], [0, 1]], jnp.int32)
+    with pytest.raises(ValueError, match="max_shift"):
+        jax.jit(shift_channels)(x, shifts)
+
+
+def test_shift_channels_bound_violation_raises():
+    from repro.core.primitives import shift_channels
+    x = rnd((1, 8, 8, 2))
+    shifts = jnp.array([[5, 0], [0, -5]], jnp.int32)
+    with pytest.raises(ValueError, match="exceeding"):
+        shift_channels(x, shifts, max_shift=2)
+
+
+# ----------------------------------------------- ops method= validation ---
+def test_ops_unknown_method_rejected():
+    from repro.kernels import ops
+    x = rnd((1, 8, 8, 4))
+    w = rnd((3, 3, 4, 8), key=jax.random.PRNGKey(1))
+    for fn, args in [
+        (ops.conv2d, (x, w)),
+        (ops.depthwise2d, (x, rnd((3, 3, 4)))),
+        (ops.add_conv2d, (x, w)),
+        (ops.shift_conv2d, (x, jnp.zeros((4, 2), jnp.int32), rnd((4, 8)))),
+        (ops.causal_conv1d, (rnd((1, 16, 4)), rnd((4, 4)))),
+        (ops.matmul, (rnd((8, 8)), rnd((8, 8)))),
+    ]:
+        with pytest.raises(ValueError, match="unknown method"):
+            fn(*args, method="nope")
