@@ -8,8 +8,10 @@
   table4  -> optlevel          (interpret vs compiled; O0 vs Os)
   kernels -> kernel microbench (Pallas interpret vs jnp oracle)
   roofline-> roofline_report   (from dry-run artifacts, if present)
+  serving -> serve_bench       (static-drain vs continuous batching)
 
-REPRO_BENCH_FAST=1 trims sweep points for CI.
+Section-by-section expected output shapes are documented in
+EXPERIMENTS.md. REPRO_BENCH_FAST=1 trims sweep points for CI.
 """
 from __future__ import annotations
 
@@ -19,7 +21,7 @@ import traceback
 
 def main() -> None:
     from . import (frequency, kernels_bench, memaccess, optlevel,
-                   primitive_costs, roofline_report, sweeps)
+                   primitive_costs, roofline_report, serve_bench, sweeps)
     sections = [
         ("table1", primitive_costs.main),
         ("fig2", sweeps.main),
@@ -28,6 +30,7 @@ def main() -> None:
         ("table4", optlevel.main),
         ("kernels", kernels_bench.main),
         ("roofline", roofline_report.main),
+        ("serving", serve_bench.main),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,89 @@
+"""§Serving benchmark: static-drain vs continuous slot scheduling.
+
+Workload: fixed-length prompts with SKEWED ``max_new_tokens`` (one long
+request per ``max_batch`` group, interleaved) — the regime where a static
+batch drains at the pace of its slowest member while continuous batching
+keeps retiring short sequences and refilling their slots. Prompt lengths
+are fixed so both schedulers compile the same prefill shape and the
+comparison isolates scheduling, not jit caching.
+
+Emits (EXPERIMENTS.md §Serving):
+  serve/static,<us/token>,tok_s=...;occupancy=...;ttft_ms=...;rounds=...
+  serve/continuous,<us/token>,...
+  serve/speedup,0.0,continuous_over_static=<x>
+
+Both engines are compile-warmed on a small drain and their stats reset
+before the timed run. REPRO_BENCH_FAST=1 shrinks the workload for CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve import Engine, Request, ServeConfig
+
+from .common import FAST, emit
+
+MAX_BATCH, MAX_LEN, PLEN = 4, 64, 8
+
+
+def tiny_cfg():
+    return dataclasses.replace(
+        get_config("qwen2-0.5b"), n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=256)
+
+
+def workload(n: int, seed: int, long_new: int, short_new: int):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        reqs.append(Request(
+            uid=i, prompt=rng.integers(0, 256, (PLEN,)).astype(np.int32),
+            # one long request per max_batch group: each static batch stalls
+            # on it while its short siblings' slots sit retired-but-held
+            max_new_tokens=long_new if i % MAX_BATCH == 0 else short_new))
+    return reqs
+
+
+def run_sched(scheduler: str, cfg, params, n, long_new, short_new):
+    eng = Engine(cfg, params, ServeConfig(
+        max_batch=MAX_BATCH, max_len=MAX_LEN, scheduler=scheduler,
+        prefill_bucket=PLEN))
+    for r in workload(MAX_BATCH, seed=99, long_new=2, short_new=2):
+        eng.submit(r)                   # compile warmup: prefill + decode
+    eng.run_until_drained()
+    eng.reset_stats()
+    reqs = workload(n, seed=0, long_new=long_new, short_new=short_new)
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    assert len(done) == n and toks == sum(r.max_new_tokens for r in reqs)
+    return toks / dt, toks, dt, eng.stats
+
+
+def main():
+    cfg = tiny_cfg()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    n = 8 if FAST else 16
+    long_new, short_new = (16, 4) if FAST else (32, 4)
+    tok_s = {}
+    for sched in ("static", "continuous"):
+        tok_s[sched], toks, dt, st = run_sched(
+            sched, cfg, params, n, long_new, short_new)
+        emit(f"serve/{sched}", dt * 1e6 / max(toks, 1),
+             f"tok_s={tok_s[sched]:.1f};occupancy={st['occupancy']:.2f};"
+             f"ttft_ms={st['ttft_avg_s'] * 1e3:.1f};rounds={st['decode_steps']}")
+    emit("serve/speedup", 0.0,
+         f"continuous_over_static={tok_s['continuous'] / tok_s['static']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

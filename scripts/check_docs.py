@@ -1,0 +1,114 @@
+"""Docs link-checker: the CI docs job fails on any dangling reference.
+
+Checks two classes of intra-repo references:
+
+1. Markdown links in every tracked ``*.md``: ``[text](target)`` where the
+   target is a repo-relative path (http/mailto links are skipped). The file
+   must exist; if the link carries a ``#anchor``, some heading of the target
+   file must slugify to it (GitHub-style: lowercase, punctuation stripped,
+   spaces -> dashes).
+2. ``EXPERIMENTS.md §<Section>`` citations anywhere in the repo's Python
+   sources and markdown (the contract that ``core/energy.py``,
+   ``optim/compression.py``, ``scripts/report.py`` and
+   ``scripts/hillclimb.py`` rely on): EXPERIMENTS.md must contain a heading
+   carrying that literal ``§<Section>`` anchor.
+
+Run:  python scripts/check_docs.py        (exits 1 listing dangling refs)
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+SECTION_CITE = re.compile(r"EXPERIMENTS\.md\s+§([\w-]+)")
+SKIP_DIRS = {".git", "__pycache__", ".github", "artifacts", ".claude"}
+
+
+def walk(exts):
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for f in filenames:
+            if os.path.splitext(f)[1] in exts:
+                yield os.path.join(dirpath, f)
+
+
+def strip_fences(text: str) -> str:
+    """Drop fenced code blocks: example links in snippets are not real
+    references, and '# comment' lines in bash blocks are not headings."""
+    return re.sub(r"^```.*?^```", "", text, flags=re.S | re.M)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-flavored anchor slug (ASCII subset: drop non-alnum, keep -_)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s, flags=re.A)
+    return s.replace(" ", "-")
+
+
+def headings_of(md_path: str):
+    with open(md_path, encoding="utf-8") as fh:
+        return HEADING.findall(strip_fences(fh.read()))
+
+
+def check_markdown_links() -> list:
+    errors = []
+    for path in walk({".md"}):
+        rel = os.path.relpath(path, ROOT)
+        text = strip_fences(open(path, encoding="utf-8").read())
+        for target in MD_LINK.findall(text):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, …
+                continue
+            frag = ""
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            tgt_path = path if not target else os.path.normpath(
+                os.path.join(os.path.dirname(path), target))
+            if not os.path.exists(tgt_path):
+                errors.append(f"{rel}: broken link -> {target or '#' + frag}")
+                continue
+            if frag and os.path.splitext(tgt_path)[1] == ".md":
+                slugs = {slugify(h) for h in headings_of(tgt_path)}
+                if frag.lower() not in slugs:
+                    errors.append(
+                        f"{rel}: dangling anchor -> "
+                        f"{os.path.relpath(tgt_path, ROOT)}#{frag}")
+    return errors
+
+
+def check_section_citations() -> list:
+    exp_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    if not os.path.exists(exp_path):
+        return ["EXPERIMENTS.md is missing (cited from source docstrings)"]
+    anchors = set()
+    for h in headings_of(exp_path):
+        anchors.update(re.findall(r"§([\w-]+)", h))
+    errors = []
+    for path in walk({".py", ".md"}):
+        if os.path.samefile(path, exp_path):
+            continue
+        rel = os.path.relpath(path, ROOT)
+        text = open(path, encoding="utf-8").read()
+        if path.endswith(".md"):
+            text = strip_fences(text)
+        for m in SECTION_CITE.finditer(text):
+            if m.group(1) not in anchors:
+                errors.append(f"{rel}: cites EXPERIMENTS.md §{m.group(1)} "
+                              f"but EXPERIMENTS.md has no such § heading")
+    return errors
+
+
+def main() -> int:
+    errors = check_markdown_links() + check_section_citations()
+    for e in errors:
+        print(f"DANGLING: {e}")
+    print(f"check_docs: {len(errors)} dangling reference(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,7 +47,8 @@ def prefill_fn(cfg: ModelConfig, max_len: int, *, attn_impl="flash"):
     else:
         def fn(params, batch):
             return T.prefill(params, batch["tokens"], cfg, max_len,
-                             embeds=batch.get("embeds"), attn_impl=attn_impl)
+                             embeds=batch.get("embeds"), attn_impl=attn_impl,
+                             prompt_lens=batch.get("prompt_lens"))
     return fn
 
 
@@ -61,6 +62,75 @@ def cache_specs(cfg: ModelConfig):
     if cfg.family == "encdec":
         return E.encdec_cache_specs()
     return T.cache_specs(cfg)
+
+
+# ------------------------------------------------------- KV-slot surgery --
+#
+# The continuous-batching engine (repro.serve) keeps ONE live batched decode
+# cache with per-slot sequence lengths, and splices freshly prefilled
+# requests into free slots between decode rounds. These helpers own the
+# cache-layout knowledge so the engine stays family-agnostic.
+
+
+def slot_batch_axes(cfg: ModelConfig) -> dict:
+    """Batch axis of every slotted cache leaf (``"len"`` excluded).
+
+    Dense/moe/vlm caches are {k, v} with layout (L, B, S, Hkv, Dh); ssm
+    recurrent state is (L, B, ...); hybrid stacks mamba state per super-block
+    as (nb, nm, B, ...). encdec's cross-attention cache is not slotted.
+    """
+    if cfg.family == "encdec":
+        raise NotImplementedError(
+            "slot surgery: encdec cross-attention caches are per-batch, "
+            "not per-slot; serve encdec through the static scheduler")
+    if cfg.family == "ssm":
+        return {"conv": 1, "ssm": 1}
+    if cfg.family == "hybrid":
+        return {"k": 1, "v": 1, "conv": 2, "ssm": 2}
+    return {"k": 1, "v": 1}
+
+
+def init_slot_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16):
+    """A batched decode cache with per-slot lengths.
+
+    Identical to ``transformer.init_cache`` except ``"len"`` is a (batch,)
+    int32 vector — one logical sequence length per slot. Every slot starts
+    empty: length 0 masks the entire row out of attention, so uninitialized
+    K/V never pollutes a live sequence.
+    """
+    cache = T.init_cache(cfg, batch, max_len, dtype)
+    cache["len"] = jnp.zeros((batch,), jnp.int32)
+    return cache
+
+
+def cache_write_slot(cfg: ModelConfig, live: dict, new: dict, slot,
+                     src: int = 0) -> dict:
+    """Write row ``src`` of a freshly prefilled cache into slot ``slot`` of a
+    live batched cache: K/V (and recurrent state) plus the slot's position.
+
+    ``slot`` may be a traced scalar, so a single jit of this function covers
+    every slot index. ``new["len"]`` may be the scalar a plain prefill
+    produces or the (B,) vector of a ``prompt_lens`` prefill.
+    """
+    out = dict(live)
+    for key, ax in slot_batch_axes(cfg).items():
+        row = jnp.take(new[key], src, axis=ax).astype(live[key].dtype)
+        if ax == 1:
+            out[key] = live[key].at[:, slot].set(row)
+        else:
+            out[key] = live[key].at[:, :, slot].set(row)
+    nl = jnp.asarray(new["len"])
+    if nl.ndim:
+        nl = nl[src]
+    out["len"] = live["len"].at[slot].set(nl.astype(jnp.int32))
+    return out
+
+
+def cache_free_slot(live: dict, slot) -> dict:
+    """Retire a slot by zeroing its length — the per-slot attention mask
+    makes the stale K/V unreachable, so no data movement is needed."""
+    return dict(live, len=live["len"].at[slot].set(0))
 
 
 # ------------------------------------------------------------ input specs --

@@ -190,16 +190,23 @@ def attention(q, k, v, *, causal: bool, impl: str = "full", q_offset=0,
 def decode_attention(q, k_cache, v_cache, cache_len):
     """One-token attention over a (possibly longer-than-filled) cache.
 
-    q: (B,1,Hq,D); caches: (B,S,Hkv,D); cache_len: () int32 — positions
-    >= cache_len are masked out.
+    q: (B,1,Hq,D); caches: (B,S,Hkv,D); cache_len: () int32, or (B,) int32
+    for per-slot lengths (continuous batching) — row i masks positions
+    >= cache_len[i], so stale K/V in retired/padded slots never scores.
+    A slot with length 0 attends to nothing (uniform softmax over NEG_INF
+    scores); its output is garbage but confined to its own row.
     """
     b, _, hq, d = q.shape
     n_kv = k_cache.shape[2]
     s = k_cache.shape[1]
     qg = _split_gqa(q, n_kv) * (d ** -0.5)
     sc = _gqa_scores(qg, k_cache)                       # (B,Hkv,G,1,S)
-    mask = jnp.arange(s) < cache_len
-    sc = jnp.where(mask[None, None, None, None], sc, NEG_INF)
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 0:
+        mask = (jnp.arange(s) < cl)[None, None, None, None]
+    else:
+        mask = (jnp.arange(s)[None, :] < cl[:, None])[:, None, None, None, :]
+    sc = jnp.where(mask, sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache)
     return o.reshape(b, 1, hq, d)

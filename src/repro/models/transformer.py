@@ -190,17 +190,37 @@ def attn_forward(lp, x, cfg: ModelConfig, cdt, *, impl: str, q_offset=0):
 
 def attn_decode(lp, x, cfg: ModelConfig, cdt, k_cache, v_cache, cache_len,
                 *, sp_axis: Optional[str] = None):
+    """One decode step against the KV cache.
+
+    ``cache_len`` is a () scalar for lockstep decode, or a (B,) vector for
+    per-slot decode (continuous batching): row i writes its new K/V at its
+    own position cache_len[i] and attends only its own valid prefix. The
+    sequence-parallel path (``sp_axis``) supports scalar lengths only.
+    """
     b = x.shape[0]
-    positions = jnp.full((b, 1), cache_len, jnp.int32)
-    q, k, v = _qkv(lp, x, cfg, cdt, positions)
-    k_cache = lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype),
-                                              cache_len, axis=1)
-    v_cache = lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype),
-                                              cache_len, axis=1)
-    if sp_axis is None:
-        o = A.decode_attention(q, k_cache, v_cache, cache_len + 1)
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 0:
+        positions = jnp.full((b, 1), cl, jnp.int32)
     else:
-        o = _sp_decode(q, k_cache, v_cache, cache_len + 1, sp_axis)
+        positions = cl[:, None].astype(jnp.int32)
+    q, k, v = _qkv(lp, x, cfg, cdt, positions)
+    if cl.ndim == 0:
+        k_cache = lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cl, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cl, axis=1)
+    else:
+        # per-row scatter at each slot's own length; rows whose length is
+        # past the end of the cache (retired slots) simply write nothing
+        hot = (jnp.arange(k_cache.shape[1])[None, :] == cl[:, None])
+        k_cache = jnp.where(hot[:, :, None, None], k.astype(k_cache.dtype),
+                            k_cache)
+        v_cache = jnp.where(hot[:, :, None, None], v.astype(v_cache.dtype),
+                            v_cache)
+    if sp_axis is None:
+        o = A.decode_attention(q, k_cache, v_cache, cl + 1)
+    else:
+        o = _sp_decode(q, k_cache, v_cache, cl + 1, sp_axis)
     out = o.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ lp["wo"].astype(cdt)
     return out, k_cache, v_cache
 
@@ -459,12 +479,24 @@ def decode_step(params, token, cache, cfg: ModelConfig, *,
 
 
 def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
-            attn_impl: str = "flash"):
+            attn_impl: str = "flash", prompt_lens=None):
     """Run the prompt, build the cache, return (last_logits, cache).
 
     For attention families the per-layer K/V come out of the layer scan; for
     ssm/hybrid the states come from a chunk-scan epilogue (decode-step replay
     of the last conv window + final ssm state).
+
+    With ``prompt_lens`` (a (B,) int32 vector) the batch is RIGHT-padded:
+    row i's real tokens occupy positions [0, prompt_lens[i]) — causality
+    already keeps real tokens from attending the trailing pads, pad K/V land
+    at positions >= prompt_lens[i] where the per-slot decode mask (and the
+    next writes) neutralize them, and rope positions stay 0..len-1 exactly
+    as in an unpadded prefill. Logits are gathered at each row's last real
+    position and ``cache["len"]`` becomes the per-row length vector (the
+    slot-cache convention — see models/api.init_slot_cache). Right-padding
+    is only exact for attention families; ssm/hybrid recurrences fold every
+    position into their state, so callers must pass exact lengths
+    (prompt_lens[i] == S) for those families.
     """
     cdt = _cdt(cfg)
     b = tokens.shape[0]
@@ -504,9 +536,14 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
         h, (ks, vs) = lax.scan(body, h, params["layers"])
         cache.update(k=ks, v=vs)
 
-    cache["len"] = jnp.array(s_prompt, jnp.int32)
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
-    return unembed(params, h[:, -1:], cfg), cache
+    if prompt_lens is None:
+        cache["len"] = jnp.array(s_prompt, jnp.int32)
+        return unembed(params, h[:, -1:], cfg), cache
+    pl = jnp.asarray(prompt_lens, jnp.int32)
+    cache["len"] = pl
+    h_last = jnp.take_along_axis(h, (pl - 1)[:, None, None], axis=1)
+    return unembed(params, h_last, cfg), cache
 
 
 def _pad_seq(x, max_len):

@@ -1,1 +1,6 @@
+"""Serving: continuous-batching engine over a fixed (max_batch, max_len)
+KV budget, with the legacy static drain scheduler as baseline. See
+engine.Engine / EXPERIMENTS.md §Serving."""
 from .engine import Engine, Request, ServeConfig
+
+__all__ = ["Engine", "Request", "ServeConfig"]

@@ -1,17 +1,39 @@
-"""Batched serving loop: continuous-batching-lite over a fixed KV budget.
+"""Continuous-batching serve engine over a fixed (max_batch, max_len) budget.
 
-Requests carry prompts; the engine packs up to `max_batch` of them, runs
-one prefill, then steps decode for all sequences in lockstep, retiring
-finished ones (EOS or max_new_tokens) and refilling free slots from the
-queue between decode rounds. Optional int8 power-of-two weight
-quantization (the paper's Eq. 4 scheme) for the serve path.
+Two schedulers share one ``Engine`` API; ``ServeConfig.scheduler`` picks:
+
+* ``"continuous"`` (default) — a slot-based scheduler. Each admitted request
+  is prefilled on its own (right-padded to a power-of-two length bucket so
+  jit recompiles stay O(log max_len)), and its KV cache + position are
+  surgically written into a free slot of the ONE live batched cache
+  (``models/api.cache_write_slot``). Decode then advances every occupied
+  slot one token per round with per-slot cache lengths (``cache["len"]`` is
+  a (max_batch,) vector; each row writes/attends at its own position). A
+  sequence retires the round it finishes — per-request EOS, per-request
+  ``max_new_tokens``, or the ``max_len`` KV cap — and its freed slot is
+  refilled from the queue *between decode rounds*, so the batch stays full
+  under skewed output lengths instead of draining to the slowest member.
+* ``"static"`` — the legacy drain strategy: pack up to ``max_batch``
+  requests, left-pad prompts to a common length (unmasked, the historical
+  approximation), prefill once, and decode the whole batch to completion
+  before admitting more. Kept as the baseline that
+  ``benchmarks/serve_bench.py`` measures continuous scheduling against.
+
+Sampling is greedy argmax by default; a positive temperature (per
+``ServeConfig`` with ``greedy=False``, or per-``Request`` override) switches
+that request to softmax sampling with the engine's seeded host rng.
+
+``Engine.stats`` surfaces scheduler metrics: prefill/decode-round/token
+counters, slot occupancy (occupied slot-rounds over offered slot-rounds),
+mean time-to-first-token, and decode throughput.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import queue
 import time
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,44 +45,263 @@ from repro.models import api
 
 @dataclasses.dataclass
 class Request:
+    """One generation request plus the engine-filled result/metric fields."""
     uid: int
     prompt: np.ndarray              # (S,) int32
     max_new_tokens: int = 16
+    eos_id: Optional[int] = None    # overrides ServeConfig.eos_id when set
+    temperature: Optional[float] = None  # overrides the engine default
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # engine-filled metrics
+    submit_t: float = 0.0           # wall time at Engine.submit
+    first_token_t: float = 0.0      # wall time when the prefill token landed
+    finish_t: float = 0.0
+    admit_round: int = -1           # global decode-round counter at admission
+    finish_round: int = -1          # round the request retired on
+
+    @property
+    def ttft_s(self) -> float:
+        return max(self.first_token_t - self.submit_t, 0.0)
 
 
 @dataclasses.dataclass
 class ServeConfig:
+    """Engine knobs.
+
+    max_batch:  number of decode slots — the batch dim of the KV budget.
+    max_len:    per-slot KV capacity. prompt length + generated tokens are
+                capped here; a sequence that fills its slot is retired even
+                if it has not reached ``max_new_tokens`` / EOS.
+    eos_id:     stop-token id. ``-1`` is the "never" sentinel — no token id
+                can equal it, so only ``max_new_tokens`` or the ``max_len``
+                cap retire a sequence. ``Request.eos_id`` overrides per
+                request (including overriding a real id back to -1).
+    greedy:     True -> argmax decoding (ignores ``temperature``).
+    temperature: softmax temperature used when ``greedy=False`` (or when a
+                request carries its own ``temperature`` override). <= 0
+                degrades to argmax.
+    scheduler:  "continuous" (slot refill between decode rounds) or
+                "static" (legacy drain batches).
+    prefill_bucket: floor of the power-of-two right-padding buckets used by
+                continuous prefill for attention families. ssm/hybrid
+                recurrences are position-exact, so those families always
+                prefill at the exact prompt length (one compile per
+                distinct length).
+    attn_impl:  prefill attention implementation ("flash" | "full" | ...).
+    seed:       host rng seed for temperature sampling.
+    """
     max_batch: int = 4
     max_len: int = 256
     eos_id: int = -1                # -1: never
     greedy: bool = True
+    temperature: float = 0.0
+    scheduler: str = "continuous"
+    prefill_bucket: int = 16
+    attn_impl: str = "flash"
+    seed: int = 0
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+        if scfg.scheduler not in ("continuous", "static"):
+            raise ValueError(f"unknown scheduler: {scfg.scheduler!r}")
+        if cfg.family == "encdec" and scfg.scheduler == "continuous":
+            raise NotImplementedError(
+                "continuous batching needs slotted caches; encdec is not "
+                "slotted (models/api.slot_batch_axes) — use scheduler='static'")
         self.cfg = cfg
         self.scfg = scfg
         self.params = params
-        self.prefill = jax.jit(api.prefill_fn(cfg, scfg.max_len))
-        self.decode = jax.jit(api.decode_fn(cfg))
+        self.prefill = jax.jit(
+            api.prefill_fn(cfg, scfg.max_len, attn_impl=scfg.attn_impl))
+        # donate the live cache so slot writes / decode rounds update it in
+        # place instead of copying the whole KV budget (CPU backends don't
+        # implement donation and would warn on every compile, so skip there)
+        cpu = jax.default_backend() == "cpu"
+        self.decode = jax.jit(api.decode_fn(cfg),
+                              donate_argnums=() if cpu else (2,))
+        if cfg.family != "encdec":
+            self._write_slot = jax.jit(
+                functools.partial(api.cache_write_slot, cfg),
+                donate_argnums=() if cpu else (0,))
         self.queue: "queue.Queue[Request]" = queue.Queue()
-        self.stats = dict(prefills=0, decode_steps=0, tokens_out=0)
+        self._rng = np.random.default_rng(scfg.seed)
+        self.reset_stats()
+
+    # ------------------------------------------------------------- metrics --
+
+    def reset_stats(self):
+        """Zero the counters (e.g. after a compile-warmup drain)."""
+        self._c = dict(prefills=0, decode_steps=0, tokens_out=0,
+                       requests_done=0, occupied_slot_rounds=0)
+        self._ttft: List[float] = []
+        self._decode_time = 0.0
+        self._round = 0
+
+    @property
+    def stats(self) -> dict:
+        """Counters + derived scheduler metrics (computed on access)."""
+        c = dict(self._c)
+        offered = c.pop("occupied_slot_rounds")
+        rounds = c["decode_steps"]
+        c["occupancy"] = offered / (rounds * self.scfg.max_batch) if rounds \
+            else 0.0
+        c["ttft_avg_s"] = float(np.mean(self._ttft)) if self._ttft else 0.0
+        c["decode_tok_s"] = (c["tokens_out"] / self._decode_time
+                             if self._decode_time > 0 else 0.0)
+        return c
+
+    # ----------------------------------------------------------- frontend --
 
     def submit(self, req: Request):
+        # reject oversized prompts here, not mid-drain: raising during
+        # run_until_drained would discard finished requests and strand the
+        # rest of the queue
+        if len(req.prompt) > self.scfg.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt length {len(req.prompt)} exceeds "
+                f"max_len={self.scfg.max_len}")
+        req.submit_t = time.time()
         self.queue.put(req)
 
+    def _next_request(self) -> Optional[Request]:
+        try:
+            return self.queue.get_nowait()
+        except queue.Empty:
+            return None
+
     def _take_batch(self) -> List[Request]:
-        out = []
-        while len(out) < self.scfg.max_batch and not self.queue.empty():
-            out.append(self.queue.get())
+        # get_nowait, not .empty(): .empty() is only a racy hint once a
+        # producer thread (or future async frontend) feeds the queue
+        out: List[Request] = []
+        while len(out) < self.scfg.max_batch:
+            req = self._next_request()
+            if req is None:
+                break
+            out.append(req)
         return out
 
     def run_until_drained(self) -> List[Request]:
+        if self.scfg.scheduler == "static":
+            return self._run_static()
+        return self._run_continuous()
+
+    # ----------------------------------------------------------- sampling --
+
+    def _pick(self, logits_row: np.ndarray, req: Request) -> int:
+        temp = req.temperature
+        if temp is None:
+            temp = 0.0 if self.scfg.greedy else self.scfg.temperature
+        if temp <= 0.0:
+            return int(np.argmax(logits_row))
+        z = np.asarray(logits_row, np.float64) / temp
+        z -= z.max()
+        p = np.exp(z)
+        return int(self._rng.choice(p.size, p=p / p.sum()))
+
+    def _effective_eos(self, req: Request) -> int:
+        return self.scfg.eos_id if req.eos_id is None else req.eos_id
+
+    # --------------------------------------------------------- continuous --
+
+    def _bucket_len(self, plen: int) -> int:
+        if plen > self.scfg.max_len:
+            raise ValueError(
+                f"prompt length {plen} exceeds max_len={self.scfg.max_len}")
+        if self.cfg.family in ("ssm", "hybrid"):
+            return plen                 # recurrent state is position-exact
+        b = max(self.scfg.prefill_bucket, 1)
+        while b < plen:
+            b *= 2
+        return min(b, self.scfg.max_len)
+
+    def _run_continuous(self) -> List[Request]:
+        B = self.scfg.max_batch
+        cache = api.init_slot_cache(self.cfg, B, self.scfg.max_len)
+        slots: List[Optional[Request]] = [None] * B
+        lens = [0] * B                  # host mirror of cache["len"]
+        cur = np.zeros((B, 1), np.int32)
         finished: List[Request] = []
-        while not self.queue.empty():
+
+        def admit(i: int, req: Request):
+            nonlocal cache
+            plen = len(req.prompt)
+            bucket = self._bucket_len(plen)
+            toks = np.zeros((bucket,), np.int32)
+            toks[:plen] = req.prompt    # right-pad: positions stay 0..plen-1
+            logits, fresh = self.prefill(self.params, {
+                "tokens": jnp.asarray(toks[None, :]),
+                "prompt_lens": jnp.asarray([plen], jnp.int32)})
+            self._c["prefills"] += 1
+            cache = self._write_slot(cache, fresh, jnp.int32(i))
+            t = self._pick(np.asarray(logits)[0, -1], req)
+            req.first_token_t = time.time()
+            req.admit_round = self._round
+            req.out_tokens.append(t)
+            self._c["tokens_out"] += 1
+            self._ttft.append(req.ttft_s)
+            cur[i, 0] = t
+            slots[i] = req
+            lens[i] = plen
+
+        def maybe_retire(i: int):
+            nonlocal cache
+            req = slots[i]
+            full = lens[i] >= self.scfg.max_len
+            if (req.out_tokens[-1] == self._effective_eos(req)
+                    or len(req.out_tokens) >= req.max_new_tokens or full):
+                req.done = True
+                req.finish_t = time.time()
+                req.finish_round = self._round
+                finished.append(req)
+                self._c["requests_done"] += 1
+                slots[i] = None
+                lens[i] = 0
+                cache = api.cache_free_slot(cache, i)
+
+        while True:
+            # refill free slots from the queue between decode rounds; the
+            # inner while re-admits into a slot whose request retired at
+            # admission (max_new_tokens=1 / instant EOS)
+            for i in range(B):
+                while slots[i] is None:
+                    req = self._next_request()
+                    if req is None:
+                        break
+                    admit(i, req)
+                    maybe_retire(i)
+            active = [i for i in range(B) if slots[i] is not None]
+            if not active:
+                break                   # the admit loop drained the queue
+            t0 = time.perf_counter()
+            logits, cache = self.decode(self.params, jnp.asarray(cur), cache)
+            logits = np.asarray(logits)     # blocks until the round is done
+            self._decode_time += time.perf_counter() - t0
+            self._round += 1
+            self._c["decode_steps"] += 1
+            self._c["occupied_slot_rounds"] += len(active)
+            for i in active:
+                lens[i] += 1            # this round wrote K/V at lens[i]
+                req = slots[i]
+                t = self._pick(logits[i, -1], req)
+                req.out_tokens.append(t)
+                self._c["tokens_out"] += 1
+                cur[i, 0] = t
+                maybe_retire(i)
+            # decode advanced every row's length, including retired/empty
+            # slots; re-zero them so dead rows can never drift past max_len
+            cache["len"] = jnp.asarray(np.asarray(lens, np.int32))
+        return finished
+
+    # ------------------------------------------------------------- static --
+
+    def _run_static(self) -> List[Request]:
+        finished: List[Request] = []
+        while True:
             batch = self._take_batch()
+            if not batch:
+                break
             finished.extend(self._run_batch(batch))
         return finished
 
@@ -71,28 +312,44 @@ class Engine:
         for i, r in enumerate(reqs):
             toks[i, plen - len(r.prompt):] = r.prompt      # left-pad
         logits, cache = self.prefill(self.params, {"tokens": jnp.asarray(toks)})
-        self.stats["prefills"] += 1
-        cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        for r, t in zip(reqs, np.asarray(cur)[:, 0]):
-            r.out_tokens.append(int(t))
+        self._c["prefills"] += 1
+        lg = np.asarray(logits)
+        cur = np.zeros((b, 1), np.int32)
+        now = time.time()
+        for i, r in enumerate(reqs):
+            t = self._pick(lg[i, -1], r)
+            r.first_token_t = now
+            self._ttft.append(r.ttft_s)
+            r.out_tokens.append(t)
+            self._c["tokens_out"] += 1
+            cur[i, 0] = t
+            if t == self._effective_eos(r) or r.max_new_tokens <= 1:
+                r.done = True
         steps = max(r.max_new_tokens for r in reqs) - 1
         for _ in range(max(steps, 0)):
-            logits, cache = self.decode(self.params, cur, cache)
-            self.stats["decode_steps"] += 1
-            cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-            alive = False
-            for i, r in enumerate(reqs):
-                if r.done or len(r.out_tokens) >= r.max_new_tokens:
-                    r.done = True
-                    continue
-                t = int(np.asarray(cur)[i, 0])
-                r.out_tokens.append(t)
-                self.stats["tokens_out"] += 1
-                if t == self.scfg.eos_id:
-                    r.done = True
-                alive = alive or not r.done
-            if not alive:
+            if all(r.done for r in reqs):
                 break
+            t0 = time.perf_counter()
+            logits, cache = self.decode(self.params, jnp.asarray(cur), cache)
+            lg = np.asarray(logits)
+            self._decode_time += time.perf_counter() - t0
+            self._round += 1
+            self._c["decode_steps"] += 1
+            for i, r in enumerate(reqs):
+                if r.done:
+                    continue
+                self._c["occupied_slot_rounds"] += 1
+                t = self._pick(lg[i, -1], r)
+                r.out_tokens.append(t)
+                self._c["tokens_out"] += 1
+                cur[i, 0] = t
+                if (t == self._effective_eos(r)
+                        or len(r.out_tokens) >= r.max_new_tokens):
+                    r.done = True
+        now = time.time()
         for r in reqs:
             r.done = True
+            r.finish_t = now
+            r.finish_round = self._round
+            self._c["requests_done"] += 1
         return reqs

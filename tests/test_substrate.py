@@ -195,7 +195,18 @@ def test_serve_engine_batched(tmp_path):
                               d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
                               vocab=64)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
+    # continuous (default): one per-slot prefill per admitted request
     eng = Engine(cfg, params, ServeConfig(max_batch=3, max_len=32))
+    for i in range(5):
+        eng.submit(Request(uid=i, prompt=np.arange(3 + i, dtype=np.int32),
+                           max_new_tokens=4))
+    done = eng.run_until_drained()
+    assert len(done) == 5
+    assert all(len(r.out_tokens) == 4 for r in done)
+    assert eng.stats["prefills"] == 5
+    # static drain: batched prefills
+    eng = Engine(cfg, params, ServeConfig(max_batch=3, max_len=32,
+                                          scheduler="static"))
     for i in range(5):
         eng.submit(Request(uid=i, prompt=np.arange(3 + i, dtype=np.int32),
                            max_new_tokens=4))
