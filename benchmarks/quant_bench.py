@@ -1,0 +1,95 @@
+"""Paper Tables 3-4 quantized counterpart: integer-only latency + energy per
+primitive (see EXPERIMENTS.md §Quantized).
+
+Three engines per Table-2 sweep shape, all running the SAME Algorithm-1
+arithmetic where quantized:
+
+  * pallas-int8 — ``qconv_apply(method="pallas")``: fused int8 kernels with
+    shift-requantized epilogues, the TPU analogue of the paper's CMSIS-NN
+    SIMD build (Table 4's "with SIMD" column);
+  * xla-int8    — ``qconv_apply(method="xla")``: the jnp integer oracle,
+    the direct / no-SIMD baseline (bit-exact with pallas-int8 — asserted
+    per row and reported as ``exact=``);
+  * float       — the float reference primitive.
+
+``derived`` also carries the paper-side model quantities from
+``core/energy.py`` (MCU @ 84 MHz, constants calibrated to paper Table 3):
+theoretical MACs, modeled scalar vs SIMD energy (mJ) and their ratio —
+the MACs<->energy linearity the paper validates holds per construction for
+the scalar column; the SIMD column tracks data movement instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ConvSpec, MCUModel, apply, init
+from repro.core.qconv import qconv_apply, quantize_conv_params
+from repro.core.quantize import QTensor, frac_bits_for, quantize
+
+from .common import FAST, emit, time_fn
+
+# Table-2 sweep points: the center cell per primitive plus the structural
+# extremes the paper sweeps (groups / kernel / cin). FAST trims to the five
+# center cells at a smaller width.
+def _shapes():
+    w = 16 if FAST else 32
+    pts = [
+        ("standard", ConvSpec("standard", 16, 16, 3), w),
+        ("grouped", ConvSpec("grouped", 16, 16, 3, groups=2), w),
+        ("dws", ConvSpec("dws", 16, 16, 3), w),
+        ("shift", ConvSpec("shift", 16, 16, 3), w),
+        ("add", ConvSpec("add", 16, 16, 3), 8 if FAST else 10),
+    ]
+    if not FAST:
+        pts += [
+            ("standard_cin128", ConvSpec("standard", 128, 64, 3), 10),
+            ("grouped_g4", ConvSpec("grouped", 128, 64, 3, groups=4), 10),
+            ("standard_k7", ConvSpec("standard", 16, 16, 7), w),
+        ]
+    return pts
+
+
+def main() -> None:
+    mcu = MCUModel()
+    key = jax.random.PRNGKey(0)
+    for name, spec, width in _shapes():
+        params = init(key, spec)
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (1, width, width, spec.in_channels)) * 0.5
+
+        f_float = jax.jit(lambda xx, p=params, s=spec: apply(p, xx, s))
+        float_us = time_fn(f_float, x)
+
+        yf = f_float(x)
+        ofb = frac_bits_for(yf)
+        qp = quantize_conv_params(params, spec)
+        xq = quantize(x)
+
+        def int_fn(method):
+            fb = xq.frac_bits
+            return jax.jit(lambda q, m=method, s=spec, o=ofb, qq=qp:
+                           qconv_apply(qq, QTensor(q, fb), s, o, method=m).q)
+
+        f_pallas, f_xla = int_fn("pallas"), int_fn("xla")
+        exact = int(bool(jnp.all(f_pallas(xq.q) == f_xla(xq.q))))
+        if not exact:   # the run.py harness reports this as a section failure
+            raise RuntimeError(
+                f"quant/{name}: pallas-int8 diverged from xla-int8 — the "
+                "shared apply_requant epilogue contract is broken")
+        pallas_us = time_fn(f_pallas, xq.q)
+        xla_us = time_fn(f_xla, xq.q)
+
+        macs = spec.mac_count(width)
+        e_scalar = mcu.energy_mj(spec, width, simd=False)
+        e_simd = mcu.energy_mj(spec, width, simd=True)
+        emit(f"quant/{name}/w={width}", pallas_us,
+             f"xla_int8_us={xla_us:.1f};float_us={float_us:.1f};"
+             f"exact={exact};macs={macs};"
+             f"mcu_e_scalar_mj={e_scalar:.3f};mcu_e_simd_mj={e_simd:.3f};"
+             f"mcu_e_ratio={e_scalar / max(e_simd, 1e-12):.2f}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

@@ -7,6 +7,7 @@
   table3  -> frequency         (MCU frequency/power/energy model)
   table4  -> optlevel          (interpret vs compiled; O0 vs Os)
   kernels -> kernel microbench (Pallas interpret vs jnp oracle)
+  quant   -> quant_bench       (pallas-int8 / xla-int8 / float per primitive)
   roofline-> roofline_report   (from dry-run artifacts, if present)
   serving -> serve_bench       (static-drain vs continuous batching)
 
@@ -21,7 +22,8 @@ import traceback
 
 def main() -> None:
     from . import (frequency, kernels_bench, memaccess, optlevel,
-                   primitive_costs, roofline_report, serve_bench, sweeps)
+                   primitive_costs, quant_bench, roofline_report, serve_bench,
+                   sweeps)
     sections = [
         ("table1", primitive_costs.main),
         ("fig2", sweeps.main),
@@ -29,6 +31,7 @@ def main() -> None:
         ("table3", frequency.main),
         ("table4", optlevel.main),
         ("kernels", kernels_bench.main),
+        ("quant", quant_bench.main),
         ("roofline", roofline_report.main),
         ("serving", serve_bench.main),
     ]

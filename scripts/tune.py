@@ -34,28 +34,43 @@ def _i8(shape):
     return jax.random.randint(KEY, shape, -100, 100, jnp.int32).astype(jnp.int8)
 
 
+# int8 jobs time the kernels' fused requantized epilogue (Algorithm 1): a
+# representative per-layer shift, held fixed across candidate schedules.
+_REQUANT = 7
+
+
+def _qkw(dtype, **extra):
+    kw = dict(extra)
+    if dtype == "int8":
+        kw["requant_shift"] = _REQUANT
+    return kw or None
+
+
 def _conv2d(n, h, w, ci, co, k, g=1, dtype="float32"):
     mk = _i8 if dtype == "int8" else _f32
     return ("conv2d", tune.sig_conv2d(n, h, w, ci, co, k, g),
             (mk((n, h, w, ci)), mk((k, k, ci // g, co))), dtype,
-            {"groups": g})
+            _qkw(dtype, groups=g))
 
 
-def _depthwise(n, h, w, c, k):
+def _depthwise(n, h, w, c, k, dtype="float32"):
+    mk = _i8 if dtype == "int8" else _f32
     return ("depthwise2d", tune.sig_depthwise2d(n, h, w, c, k),
-            (_f32((n, h, w, c)), _f32((k, k, c))), "float32")
+            (mk((n, h, w, c)), mk((k, k, c))), dtype, _qkw(dtype))
 
 
-def _shift(n, h, w, c, co):
+def _shift(n, h, w, c, co, dtype="float32"):
+    mk = _i8 if dtype == "int8" else _f32
     shifts = jnp.array([[(i % 3) - 1, ((i // 3) % 3) - 1] for i in range(c)],
                        jnp.int32)
     return ("shift_conv2d", tune.sig_shift_conv2d(n, h, w, c, co),
-            (_f32((n, h, w, c)), shifts, _f32((c, co))), "float32")
+            (mk((n, h, w, c)), shifts, mk((c, co))), dtype, _qkw(dtype))
 
 
-def _add(n, h, w, ci, co, k):
+def _add(n, h, w, ci, co, k, dtype="float32"):
+    mk = _i8 if dtype == "int8" else _f32
     return ("add_conv2d", tune.sig_add_conv2d(n, h, w, ci, co, k),
-            (_f32((n, h, w, ci)), _f32((k, k, ci, co))), "float32")
+            (mk((n, h, w, ci)), mk((k, k, ci, co))), dtype, _qkw(dtype))
 
 
 def _c1d(b, l, d, k):
@@ -65,7 +80,8 @@ def _c1d(b, l, d, k):
 
 def _matmul(m, k, n, dtype="float32"):
     mk = _i8 if dtype == "int8" else _f32
-    return ("matmul", tune.sig_matmul(m, k, n), (mk((m, k)), mk((k, n))), dtype)
+    return ("matmul", tune.sig_matmul(m, k, n), (mk((m, k)), mk((k, n))), dtype,
+            _qkw(dtype))
 
 
 def shapes_table2():
@@ -86,11 +102,21 @@ def shapes_table2():
         _depthwise(1, 32, 32, 64, 3),
         _shift(1, 32, 32, 64, 64),
         _add(1, 10, 10, 16, 16, 3),
+        # integer-only (Algorithm 1) variants: the qconv_apply(method="pallas")
+        # path looks these up per (kernel, shape, int8) — same shapes as the
+        # float jobs so pallas-int8 vs float compares tuned-vs-tuned
+        _conv2d(1, 10, 10, 128, 64, 3, 1, dtype="int8"),
+        _conv2d(1, 10, 10, 128, 64, 3, 4, dtype="int8"),
+        _conv2d(1, 32, 32, 16, 16, 3, dtype="int8"),
+        _depthwise(1, 32, 32, 64, 3, dtype="int8"),
+        _shift(1, 32, 32, 64, 64, dtype="int8"),
+        _add(1, 10, 10, 16, 16, 3, dtype="int8"),
         # LM-side kernels
         _c1d(2, 512, 256, 4),
         _matmul(256, 512, 256),
         _matmul(512, 512, 512),
         _matmul(256, 256, 256, dtype="int8"),
+        _matmul(512, 512, 512, dtype="int8"),
     ]
 
 
@@ -98,9 +124,11 @@ def shapes_smoke():
     """Tiny job list for CI / fast sanity runs."""
     return [
         _conv2d(1, 8, 8, 8, 16, 3),
+        _conv2d(1, 8, 8, 8, 16, 3, dtype="int8"),
         _depthwise(1, 8, 8, 16, 3),
         _add(1, 6, 6, 4, 8, 3),
         _matmul(64, 64, 64),
+        _matmul(64, 64, 64, dtype="int8"),
     ]
 
 

@@ -5,6 +5,21 @@ arithmetic shift to the output scale (Algorithm 1), optional bias added at
 accumulator scale. BN is folded beforehand for the multiplicative
 primitives (folding.fold); add-conv keeps an explicit integer BN-free path
 followed by a float BN (the paper's layout).
+
+Dispatch: every primitive routes through the kernel layer
+(``repro.kernels.ops``), so the quantized network runs the SAME schedules
+(and the same ``repro.tune`` autotuned configs) as the float one:
+
+* ``method="pallas"`` — the TPU kernels with their fused int8 epilogues,
+  the analogue of the paper's CMSIS-NN/SIMD build;
+* ``method="xla"`` — the pure-jnp integer oracles (``kernels.ref``), the
+  direct / no-SIMD baseline.
+
+Both methods accumulate in int32 and share ``kernels.common.apply_requant``,
+so they are bit-exact against each other (tests/test_qconv.py). Layers the
+kernel layer cannot express (stride != 1 or non-SAME padding) fall back to
+a raw ``lax`` integer path under ``method="xla"`` and raise under
+``method="pallas"``.
 """
 from __future__ import annotations
 
@@ -27,64 +42,147 @@ def _conv_int(x_q: jax.Array, w_q: jax.Array, *, stride=1, padding="SAME",
     )
 
 
-def _bias_at(acc: jax.Array, bias: Optional[QTensor], acc_fb: int) -> jax.Array:
+def _bias_acc(bias: Optional[QTensor], acc_fb: int) -> Optional[jax.Array]:
+    """Bias rescaled to the int32 accumulator scale (Algorithm 1, line 2)."""
     if bias is None:
-        return acc
-    b = rshift_round(bias.q.astype(jnp.int32), bias.frac_bits - acc_fb)
-    return acc + b
+        return None
+    return rshift_round(bias.q.astype(jnp.int32), bias.frac_bits - acc_fb)
 
 
-def qconv_apply(qparams: dict, x: QTensor, spec: ConvSpec, out_frac_bits: int) -> QTensor:
-    """Run one quantized primitive layer; returns int8 QTensor."""
+def _add_preshifts(fb_x: int, fb_w: int):
+    """Algorithm 1 (right) scale alignment: left-shift the coarser operand
+    onto the finer scale; the accumulator then carries max(fb_x, fb_w)
+    fractional bits (same arithmetic as quantize.addmac_align, but as static
+    per-layer shifts the kernels can fuse)."""
+    if fb_x > fb_w:
+        return 0, fb_x - fb_w, fb_x
+    if fb_w > fb_x:
+        return fb_w - fb_x, 0, fb_w
+    return 0, 0, fb_x
+
+
+def _kernel_layer_ok(spec: ConvSpec) -> bool:
+    return spec.stride == 1 and spec.padding == "SAME"
+
+
+def qconv_apply(qparams: dict, x: QTensor, spec: ConvSpec, out_frac_bits: int,
+                *, method: str = "xla") -> QTensor:
+    """Run one quantized primitive layer; returns int8 QTensor.
+
+    ``method`` picks the execution engine in the kernel layer: ``"pallas"``
+    (TPU kernels, fused requantization) or ``"xla"`` (jnp integer oracle).
+    """
+    from repro.kernels import ops as K   # lazy: core must import without kernels
+
+    if method not in ("pallas", "xla"):
+        raise ValueError(f"unknown method {method!r}; expected 'pallas' or 'xla'")
     p = spec.primitive
     bias = qparams.get("b")
+
+    if not _kernel_layer_ok(spec):
+        if method == "pallas":
+            raise NotImplementedError(
+                f"qconv_apply(method='pallas'): the Pallas kernel layer only "
+                f"supports stride=1 SAME layers, got stride={spec.stride} "
+                f"padding={spec.padding!r}; use method='xla'")
+        return _qconv_apply_lax(qparams, x, spec, out_frac_bits)
 
     if p in ("standard", "grouped"):
         w = qparams["w"]
         groups = spec.groups if p == "grouped" else 1
         acc_fb = x.frac_bits + w.frac_bits
-        acc = _conv_int(x.q, w.q, stride=spec.stride, padding=spec.padding,
-                        groups=groups)
-        acc = _bias_at(acc, bias, acc_fb)
-        return QTensor(requantize(acc, acc_fb, out_frac_bits), out_frac_bits)
+        y = K.conv2d(x.q, w.q, _bias_acc(bias, acc_fb), groups=groups,
+                     method=method, requant_shift=acc_fb - out_frac_bits)
+        return QTensor(y, out_frac_bits)
 
     if p == "dws":
         w_dw, w_pw = qparams["w_dw"], qparams["w_pw"]
         # depthwise at an intermediate scale, then pointwise
         mid_fb = qparams.get("mid_frac_bits", out_frac_bits)
-        acc = _conv_int(x.q, jnp.transpose(w_dw.q, (0, 1, 3, 2)),
-                        stride=spec.stride, padding=spec.padding,
-                        groups=spec.in_channels)
-        h = QTensor(requantize(acc, x.frac_bits + w_dw.frac_bits, mid_fb), mid_fb)
-        acc2 = _conv_int(h.q, w_pw.q, stride=1, padding="SAME")
-        acc_fb = h.frac_bits + w_pw.frac_bits
-        acc2 = _bias_at(acc2, bias, acc_fb)
-        return QTensor(requantize(acc2, acc_fb, out_frac_bits), out_frac_bits)
+        h = K.depthwise2d(x.q, w_dw.q, method=method,
+                          requant_shift=x.frac_bits + w_dw.frac_bits - mid_fb)
+        acc_fb = mid_fb + w_pw.frac_bits
+        y = K.conv2d(h, w_pw.q, _bias_acc(bias, acc_fb), method=method,
+                     requant_shift=acc_fb - out_frac_bits)
+        return QTensor(y, out_frac_bits)
 
     if p == "shift":
-        # shift is pure data movement: exact in integer domain (paper's point)
-        shifted = shift_channels(x.q, qparams["shifts"],
-                                 max_shift=spec.kernel_size // 2)
+        # shift is pure data movement: exact in integer domain (paper's
+        # point) — the Pallas kernel fuses it into the pointwise matmul
         w_pw = qparams["w_pw"]
         acc_fb = x.frac_bits + w_pw.frac_bits
-        acc = _conv_int(shifted, w_pw.q, stride=spec.stride, padding="SAME")
-        acc = _bias_at(acc, bias, acc_fb)
-        return QTensor(requantize(acc, acc_fb, out_frac_bits), out_frac_bits)
+        y = K.shift_conv2d(x.q, qparams["shifts"], w_pw.q,
+                           _bias_acc(bias, acc_fb), method=method,
+                           requant_shift=acc_fb - out_frac_bits,
+                           max_shift=spec.kernel_size // 2)
+        return QTensor(y, out_frac_bits)
 
     if p == "add":
         w = qparams["w"]
-        hk, cx, cy = spec.kernel_size, spec.in_channels, spec.out_channels
-        pads = ((hk // 2, (hk - 1) // 2),) * 2 if spec.padding == "SAME" else ((0, 0), (0, 0))
+        x_pre, w_pre, acc_fb = _add_preshifts(x.frac_bits, w.frac_bits)
+        y = K.add_conv2d(x.q, w.q, _bias_acc(bias, acc_fb), method=method,
+                         requant_shift=acc_fb - out_frac_bits,
+                         x_preshift=x_pre, w_preshift=w_pre)
+        return QTensor(y, out_frac_bits)
+
+    raise ValueError(p)
+
+
+def _qconv_apply_lax(qparams: dict, x: QTensor, spec: ConvSpec,
+                     out_frac_bits: int) -> QTensor:
+    """Raw-lax integer path for layer shapes outside the kernel layer's
+    stride-1/SAME envelope — all five primitives, same Algorithm-1
+    arithmetic as the ops dispatch (int32 accumulation, accumulator-scale
+    bias, round-to-nearest requantization)."""
+    p = spec.primitive
+    bias = qparams.get("b")
+
+    def finish(acc, acc_fb):
+        b_acc = _bias_acc(bias, acc_fb)
+        if b_acc is not None:
+            acc = acc + b_acc
+        return QTensor(requantize(acc, acc_fb, out_frac_bits), out_frac_bits)
+
+    if p in ("standard", "grouped"):
+        w = qparams["w"]
+        groups = spec.groups if p == "grouped" else 1
+        acc = _conv_int(x.q, w.q, stride=spec.stride, padding=spec.padding,
+                        groups=groups)
+        return finish(acc, x.frac_bits + w.frac_bits)
+
+    if p == "dws":
+        w_dw, w_pw = qparams["w_dw"], qparams["w_pw"]
+        mid_fb = qparams.get("mid_frac_bits", out_frac_bits)
+        acc = _conv_int(x.q, jnp.transpose(w_dw.q, (0, 1, 3, 2)),
+                        stride=spec.stride, padding=spec.padding,
+                        groups=spec.in_channels)
+        h = requantize(acc, x.frac_bits + w_dw.frac_bits, mid_fb)
+        acc2 = _conv_int(h, w_pw.q, stride=1, padding="SAME")
+        return finish(acc2, mid_fb + w_pw.frac_bits)
+
+    if p == "shift":
+        w_pw = qparams["w_pw"]
+        shifted = shift_channels(x.q, qparams["shifts"],
+                                 max_shift=spec.kernel_size // 2)
+        acc = _conv_int(shifted, w_pw.q, stride=spec.stride, padding="SAME")
+        return finish(acc, x.frac_bits + w_pw.frac_bits)
+
+    if p == "add":
+        w = qparams["w"]
+        hk, cx = spec.kernel_size, spec.in_channels
+        pads = ((hk // 2, (hk - 1) // 2),) * 2 if spec.padding == "SAME" \
+            else ((0, 0), (0, 0))
         patches = lax.conv_general_dilated_patches(
-            x.q.astype(jnp.int32), (hk, hk), (1, 1), pads, dimension_numbers=_DN)
+            x.q.astype(jnp.int32), (hk, hk), (1, 1), pads,
+            dimension_numbers=_DN)
         b, hy, wy, _ = patches.shape
         patches = patches.reshape(b, hy, wy, cx, hk * hk)
-        wk = jnp.transpose(w.q, (2, 0, 1, 3)).reshape(cx, hk * hk, cy).astype(jnp.int32)
+        wk = jnp.transpose(w.q, (2, 0, 1, 3)) \
+            .reshape(cx, hk * hk, spec.out_channels).astype(jnp.int32)
         xi, wi, acc_fb = addmac_align(patches[..., None], wk[None, None, None],
                                       x.frac_bits, w.frac_bits)
         acc = -jnp.sum(jnp.abs(xi - wi), axis=(3, 4))
-        acc = _bias_at(acc, bias, acc_fb)
-        return QTensor(requantize(acc, acc_fb, out_frac_bits), out_frac_bits)
+        return finish(acc, acc_fb)
 
     raise ValueError(p)
 

@@ -58,9 +58,15 @@ def quantize(x: jax.Array, frac_bits: Optional[int] = None) -> QTensor:
 
 
 def rshift_round(acc: jax.Array, shift: int) -> jax.Array:
-    """Arithmetic right shift (floor), as NNoM's ``>>``. shift may be <=0."""
+    """Arithmetic right shift with round-to-nearest, as NNoM's default build:
+    the ``+ (1 << (shift-1))`` term makes ``>>`` round to the nearest
+    representable value (half-way cases toward +inf) instead of flooring.
+    shift may be <= 0 (left shift, exact). The single rounding
+    implementation: ``kernels.common.apply_requant`` (every Pallas kernel
+    epilogue and jnp oracle) delegates here, so host-side and kernel-side
+    requantization agree bit-for-bit by construction."""
     if shift > 0:
-        return jnp.right_shift(acc, shift)
+        return jnp.right_shift(acc + (1 << (shift - 1)), shift)
     if shift < 0:
         return jnp.left_shift(acc, -shift)
     return acc

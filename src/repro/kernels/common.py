@@ -60,6 +60,22 @@ def acc_dtype(dtype) -> jnp.dtype:
     return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else jnp.float32
 
 
+def apply_requant(acc: jax.Array, requant_shift: int | None) -> jax.Array:
+    """Algorithm-1 epilogue on an int32 accumulator: round-to-nearest
+    arithmetic shift to the output scale, clipped to the int8 range.
+
+    The shift IS ``core.quantize.rshift_round`` (one implementation, so the
+    Pallas kernel epilogues, the jnp oracles in ``kernels/ref.py``, and the
+    host-side requantization are bit-exact by construction).
+    ``requant_shift`` may be negative (pure left shift, exact) or ``None``
+    (no-op, float paths).
+    """
+    if requant_shift is None:
+        return acc
+    from repro.core.quantize import rshift_round
+    return jnp.clip(rshift_round(acc, requant_shift), -128, 127)
+
+
 def effective_block(dim: int, block: int) -> int:
     """The block size a divisor-gridded kernel actually runs: the largest
     divisor of ``dim`` that is <= ``block``. Single source of truth shared by

@@ -17,11 +17,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, effective_block
+from .common import acc_dtype, apply_requant, effective_block
 
 
 def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift,
-            x_preshift, w_preshift):
+            x_preshift, w_preshift, bias_ref=None):
     adt = acc_dtype(x_ref.dtype)
     cx = x_ref.shape[-1]
     bco = w_ref.shape[-1]
@@ -37,26 +37,25 @@ def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift,
             a = patch.reshape(hout * wout, cx)
             # -Σ_c |a[:, c] - w[c, n]| : VPU broadcast, no MXU analogue
             acc = acc - jnp.sum(jnp.abs(a[:, :, None] - wv[None, :, :]), axis=1)
-    if requant_shift is not None:
-        if requant_shift > 0:
-            acc = jnp.right_shift(acc, requant_shift)
-        elif requant_shift < 0:
-            acc = jnp.left_shift(acc, -requant_shift)
-        acc = jnp.clip(acc, -128, 127)
+    if bias_ref is not None:                # bias at accumulator scale
+        acc = acc + bias_ref[...].astype(adt)[None, :]
+    acc = apply_requant(acc, requant_shift)
     o_ref[0] = acc.reshape(hout, wout, bco).astype(out_dtype)
 
 
-def add_conv2d(x: jax.Array, w: jax.Array, *, block_co: int = 8,
+def add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
                requant_shift: int | None = None, x_preshift: int = 0,
                w_preshift: int = 0, out_dtype=None,
                interpret: bool = True, config: dict | None = None) -> jax.Array:
     """SAME stride-1 AdderNet conv (Eq. 3). x: (N,H,W,Cx); w: (HK,HK,Cx,Cy).
 
-    ``config`` (a repro.tune schedule dict) overrides the block parameters.
+    ``bias`` (optional, (Cy,)) is added at accumulator scale before the
+    requantization epilogue. ``config`` (a repro.tune schedule dict)
+    overrides the block parameters.
     """
     if config:
         block_co = int(config.get("block_co", block_co))
-    return _add_conv2d(x, w, block_co=block_co, requant_shift=requant_shift,
+    return _add_conv2d(x, w, bias, block_co=block_co, requant_shift=requant_shift,
                        x_preshift=x_preshift, w_preshift=w_preshift,
                        out_dtype=out_dtype, interpret=interpret)
 
@@ -64,7 +63,7 @@ def add_conv2d(x: jax.Array, w: jax.Array, *, block_co: int = 8,
 @functools.partial(jax.jit, static_argnames=("block_co", "requant_shift",
                                              "x_preshift", "w_preshift",
                                              "out_dtype", "interpret"))
-def _add_conv2d(x: jax.Array, w: jax.Array, *, block_co: int = 8,
+def _add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
                 requant_shift: int | None = None, x_preshift: int = 0,
                 w_preshift: int = 0, out_dtype=None,
                 interpret: bool = True) -> jax.Array:
@@ -78,14 +77,25 @@ def _add_conv2d(x: jax.Array, w: jax.Array, *, block_co: int = 8,
     kern = functools.partial(_kernel, hk=hk, hout=h, wout=wd,
                              out_dtype=out_dtype, requant_shift=requant_shift,
                              x_preshift=x_preshift, w_preshift=w_preshift)
+    in_specs = [
+        pl.BlockSpec((1, hp, wp, cx), lambda b, cb: (b, 0, 0, 0)),
+        pl.BlockSpec((hk, hk, cx, bco), lambda b, cb: (0, 0, 0, cb)),
+    ]
+    args = [xp, w]
+    if bias is not None:
+        def kern_bias(x_ref, w_ref, b_ref, o_ref):
+            _kernel(x_ref, w_ref, o_ref, hk=hk, hout=h, wout=wd,
+                    out_dtype=out_dtype, requant_shift=requant_shift,
+                    x_preshift=x_preshift, w_preshift=w_preshift,
+                    bias_ref=b_ref)
+        kern = kern_bias
+        in_specs.append(pl.BlockSpec((bco,), lambda b, cb: (cb,)))
+        args.append(bias)
     return pl.pallas_call(
         kern,
         grid=(n, cy // bco),
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, cx), lambda b, cb: (b, 0, 0, 0)),
-            pl.BlockSpec((hk, hk, cx, bco), lambda b, cb: (0, 0, 0, cb)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, h, wd, bco), lambda b, cb: (b, 0, 0, cb)),
         out_shape=jax.ShapeDtypeStruct((n, h, wd, cy), out_dtype),
         interpret=interpret,
-    )(xp, w)
+    )(*args)

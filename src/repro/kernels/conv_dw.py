@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, effective_block
+from .common import acc_dtype, apply_requant, effective_block
 
 
 def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift):
@@ -26,12 +26,7 @@ def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift):
         for j in range(hk):
             acc = acc + (x_ref[0, i:i + hout, j:j + wout, :].astype(adt)
                          * w_ref[i, j].astype(adt)[None, None, :])
-    if requant_shift is not None:
-        if requant_shift > 0:
-            acc = jnp.right_shift(acc, requant_shift)
-        elif requant_shift < 0:
-            acc = jnp.left_shift(acc, -requant_shift)
-        acc = jnp.clip(acc, -128, 127)
+    acc = apply_requant(acc, requant_shift)
     o_ref[0] = acc.astype(out_dtype)
 
 

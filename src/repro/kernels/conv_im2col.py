@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, effective_block
+from .common import acc_dtype, apply_requant, effective_block
 
 
 def _kernel(x_ref, w_ref, o_ref, *, hk: int, hout: int, wout: int,
@@ -43,12 +43,8 @@ def _kernel(x_ref, w_ref, o_ref, *, hk: int, hout: int, wout: int,
                                 preferred_element_type=adt)
     if bias_ref is not None:
         acc = acc + bias_ref[...].astype(adt)[None, :]
-    if requant_shift is not None:            # Algorithm 1: shift, clip, int8
-        if requant_shift > 0:
-            acc = jnp.right_shift(acc, requant_shift)
-        elif requant_shift < 0:
-            acc = jnp.left_shift(acc, -requant_shift)
-        acc = jnp.clip(acc, -128, 127)
+    # Algorithm 1: round-to-nearest shift, clip, int8
+    acc = apply_requant(acc, requant_shift)
     o_ref[0] = acc.reshape(hout, wout, bco).astype(out_dtype)
 
 

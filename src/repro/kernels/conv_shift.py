@@ -17,11 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, effective_block
+from .common import acc_dtype, apply_requant, effective_block
 
 
 def _kernel(x_ref, w_ref, o_ref, *, groups, hout, wout, pad, out_dtype,
-            requant_shift):
+            requant_shift, bias_ref=None):
     adt = acc_dtype(x_ref.dtype)
     bco = w_ref.shape[-1]
     acc = jnp.zeros((hout * wout, bco), adt)
@@ -31,21 +31,21 @@ def _kernel(x_ref, w_ref, o_ref, *, groups, hout, wout, pad, out_dtype,
         acc = acc + jnp.dot(patch.reshape(hout * wout, size).astype(adt),
                             w_ref[start:start + size, :].astype(adt),
                             preferred_element_type=adt)
-    if requant_shift is not None:
-        if requant_shift > 0:
-            acc = jnp.right_shift(acc, requant_shift)
-        elif requant_shift < 0:
-            acc = jnp.left_shift(acc, -requant_shift)
-        acc = jnp.clip(acc, -128, 127)
+    if bias_ref is not None:                 # bias at accumulator scale
+        acc = acc + bias_ref[...].astype(adt)[None, :]
+    acc = apply_requant(acc, requant_shift)
     o_ref[0] = acc.reshape(hout, wout, bco).astype(out_dtype)
 
 
-def shift_conv2d(x: jax.Array, shifts, w_pw: jax.Array, *, block_co: int = 128,
-                 requant_shift: int | None = None, out_dtype=None,
-                 interpret: bool = True, config: dict | None = None) -> jax.Array:
+def shift_conv2d(x: jax.Array, shifts, w_pw: jax.Array, bias=None, *,
+                 block_co: int = 128, requant_shift: int | None = None,
+                 out_dtype=None, interpret: bool = True,
+                 config: dict | None = None) -> jax.Array:
     """x: (N,H,W,C); shifts: (C,2) static ints; w_pw: (C,Cy) or (1,1,C,Cy).
 
-    ``config`` (a repro.tune schedule dict) overrides the block parameters.
+    ``bias`` (optional, (Cy,)) is added at accumulator scale before the
+    requantization epilogue. ``config`` (a repro.tune schedule dict)
+    overrides the block parameters.
     """
     if config:
         block_co = int(config.get("block_co", block_co))
@@ -77,14 +77,24 @@ def shift_conv2d(x: jax.Array, shifts, w_pw: jax.Array, *, block_co: int = 128,
 
     kern = functools.partial(_kernel, groups=groups, hout=h, wout=wd, pad=pad,
                              out_dtype=out_dtype, requant_shift=requant_shift)
+    in_specs = [
+        pl.BlockSpec((1, hp, wpd, c), lambda b, cb: (b, 0, 0, 0)),
+        pl.BlockSpec((c, bco), lambda b, cb: (0, cb)),
+    ]
+    args = [xp, wp]
+    if bias is not None:
+        def kern_bias(x_ref, w_ref, b_ref, o_ref):
+            _kernel(x_ref, w_ref, o_ref, groups=groups, hout=h, wout=wd,
+                    pad=pad, out_dtype=out_dtype, requant_shift=requant_shift,
+                    bias_ref=b_ref)
+        kern = kern_bias
+        in_specs.append(pl.BlockSpec((bco,), lambda b, cb: (cb,)))
+        args.append(bias)
     return pl.pallas_call(
         kern,
         grid=(n, cy // bco),
-        in_specs=[
-            pl.BlockSpec((1, hp, wpd, c), lambda b, cb: (b, 0, 0, 0)),
-            pl.BlockSpec((c, bco), lambda b, cb: (0, cb)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, h, wd, bco), lambda b, cb: (b, 0, 0, cb)),
         out_shape=jax.ShapeDtypeStruct((n, h, wd, cy), out_dtype),
         interpret=interpret,
-    )(xp, wp)
+    )(*args)

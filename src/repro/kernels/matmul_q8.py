@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import acc_dtype, cdiv
+from .common import acc_dtype, apply_requant, cdiv
 
 
 def _make_compiler_params(n_parallel: int):
@@ -43,14 +43,7 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk, out_dtype, requant_shift):
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _epilogue():
-        acc = acc_ref[...]
-        if requant_shift is not None:
-            if requant_shift > 0:
-                acc = jnp.right_shift(acc, requant_shift)
-            elif requant_shift < 0:
-                acc = jnp.left_shift(acc, -requant_shift)
-            acc = jnp.clip(acc, -128, 127)
-        o_ref[...] = acc.astype(out_dtype)
+        o_ref[...] = apply_requant(acc_ref[...], requant_shift).astype(out_dtype)
 
 
 def matmul(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,

@@ -58,49 +58,73 @@ def conv2d(x, w, bias=None, *, groups: int = 1, method: str = "pallas",
 
 
 def depthwise2d(x, w_dw, *, method: str = "pallas",
+                requant_shift: Optional[int] = None,
                 config: Optional[dict] = None):
     _check_method(method)
     if method == "xla":
+        if requant_shift is not None:
+            return ref.depthwise2d_q8_ref(x, w_dw, requant_shift=requant_shift)
         return ref.depthwise2d_ref(x, w_dw)
     if config is None:
         from repro.tune import sig_depthwise2d
         n, h, wd, c = x.shape
         config = _tuned(sig_depthwise2d, n, h, wd, c, w_dw.shape[0],
                         dtype=x.dtype)
-    return _dw_pallas(x, w_dw, interpret=use_interpret(), config=config)
+    return _dw_pallas(x, w_dw, requant_shift=requant_shift,
+                      interpret=use_interpret(), config=config)
 
 
-def shift_conv2d(x, shifts, w_pw, *, method: str = "pallas",
+def shift_conv2d(x, shifts, w_pw, bias=None, *, method: str = "pallas",
                  requant_shift: Optional[int] = None,
                  config: Optional[dict] = None,
                  max_shift: Optional[int] = None):
     """``max_shift`` bounds |shift| when the table is traced (jit): pass
-    ``kernel_size // 2``; unused when the table is concrete."""
+    ``kernel_size // 2``; unused when the table is concrete. ``bias`` is
+    added at accumulator scale (quantized path only)."""
     _check_method(method)
     if method == "xla":
+        if requant_shift is not None:
+            return ref.shift_conv2d_q8_ref(x, shifts, w_pw, bias,
+                                           requant_shift=requant_shift,
+                                           max_shift=max_shift)
+        if bias is not None:
+            raise ValueError("shift_conv2d: bias without requant_shift is "
+                             "only supported on the quantized path")
         return ref.shift_conv2d_ref(x, shifts, w_pw, max_shift=max_shift)
     if config is None:
         from repro.tune import sig_shift_conv2d
         n, h, wd, c = x.shape
         config = _tuned(sig_shift_conv2d, n, h, wd, c, w_pw.shape[-1],
                         dtype=x.dtype)
-    return _shift_pallas(x, shifts, w_pw, requant_shift=requant_shift,
+    return _shift_pallas(x, shifts, w_pw, bias, requant_shift=requant_shift,
                          interpret=use_interpret(), config=config)
 
 
-def add_conv2d(x, w, *, method: str = "pallas",
+def add_conv2d(x, w, bias=None, *, method: str = "pallas",
                requant_shift: Optional[int] = None,
                x_preshift: int = 0, w_preshift: int = 0,
                config: Optional[dict] = None):
+    """``bias`` is added at accumulator scale (quantized path only);
+    ``x_preshift``/``w_preshift`` are the Algorithm-1 (right) scale-alignment
+    left shifts applied to the operands before |x - w|."""
     _check_method(method)
     if method == "xla":
+        if requant_shift is not None:
+            return ref.add_conv2d_q8_ref(x, w, bias,
+                                         requant_shift=requant_shift,
+                                         x_preshift=x_preshift,
+                                         w_preshift=w_preshift)
+        if bias is not None or x_preshift or w_preshift:
+            raise ValueError("add_conv2d: bias/preshifts without "
+                             "requant_shift are only supported on the "
+                             "quantized path")
         return ref.add_conv2d_ref(x, w)
     if config is None:
         from repro.tune import sig_add_conv2d
         n, h, wd, cx = x.shape
         config = _tuned(sig_add_conv2d, n, h, wd, cx, w.shape[-1], w.shape[0],
                         dtype=x.dtype)
-    return _add_pallas(x, w, requant_shift=requant_shift,
+    return _add_pallas(x, w, bias, requant_shift=requant_shift,
                        x_preshift=x_preshift, w_preshift=w_preshift,
                        interpret=use_interpret(), config=config)
 

@@ -3,6 +3,12 @@
 These double as (a) allclose targets for the kernel tests and (b) the
 scalar/direct baseline in the benchmark harness — the analogue of the
 paper's non-SIMD NNoM implementations.
+
+The ``*_q8_ref`` variants are the integer-only oracles: int8 operands,
+int32 accumulation, and the SAME Algorithm-1 epilogue as the Pallas kernels
+(``common.apply_requant`` — round-to-nearest shift, clip, int8). Integer
+accumulation is order-independent, so the Pallas kernels are bit-exact
+against these refs, which is what ``tests/test_qconv.py`` asserts.
 """
 from __future__ import annotations
 
@@ -10,6 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import primitives as P
+
+from .common import apply_requant
 
 
 def conv2d_ref(x, w, bias=None, *, groups: int = 1):
@@ -22,16 +30,18 @@ def conv2d_q8_ref(x_q, w_q, bias_q=None, *, groups: int = 1, requant_shift: int 
                           groups=groups)
     if bias_q is not None:
         acc = acc + bias_q.astype(jnp.int32)
-    if requant_shift > 0:
-        acc = jnp.right_shift(acc, requant_shift)
-    elif requant_shift < 0:
-        acc = jnp.left_shift(acc, -requant_shift)
-    return jnp.clip(acc, -128, 127).astype(jnp.int8)
+    return apply_requant(acc, requant_shift).astype(jnp.int8)
 
 
 def depthwise2d_ref(x, w_dw):
     w4 = w_dw[..., None] if w_dw.ndim == 3 else w_dw   # (HK,HK,C) -> (HK,HK,C,1)
     return P.depthwise_conv(x, w4)
+
+
+def depthwise2d_q8_ref(x_q, w_dw_q, *, requant_shift: int = 0):
+    w4 = w_dw_q[..., None] if w_dw_q.ndim == 3 else w_dw_q
+    acc = P.depthwise_conv(x_q.astype(jnp.int32), w4.astype(jnp.int32))
+    return apply_requant(acc, requant_shift).astype(jnp.int8)
 
 
 def shift_conv2d_ref(x, shifts, w_pw, *, max_shift=None):
@@ -40,8 +50,37 @@ def shift_conv2d_ref(x, shifts, w_pw, *, max_shift=None):
         P.shift_channels(x, jnp.asarray(shifts), max_shift=max_shift), w4)
 
 
+def shift_conv2d_q8_ref(x_q, shifts, w_pw_q, bias_q=None, *,
+                        requant_shift: int = 0, max_shift=None):
+    """Shift is pure data movement — exact in the integer domain (the paper's
+    point) — so only the pointwise matmul accumulates."""
+    w4 = w_pw_q[None, None] if w_pw_q.ndim == 2 else w_pw_q
+    shifted = P.shift_channels(x_q.astype(jnp.int32), jnp.asarray(shifts),
+                               max_shift=max_shift)
+    acc = P.standard_conv(shifted, w4.astype(jnp.int32))
+    if bias_q is not None:
+        acc = acc + bias_q.astype(jnp.int32)
+    return apply_requant(acc, requant_shift).astype(jnp.int8)
+
+
 def add_conv2d_ref(x, w):
     return P.add_conv(x, w)
+
+
+def add_conv2d_q8_ref(x_q, w_q, bias_q=None, *, requant_shift: int = 0,
+                      x_preshift: int = 0, w_preshift: int = 0):
+    """AdderNet Algorithm-1 (right): align scales by left pre-shifts, then
+    -Σ|x - w| in int32, bias at accumulator scale, requant epilogue."""
+    xi = x_q.astype(jnp.int32)
+    wi = w_q.astype(jnp.int32)
+    if x_preshift:
+        xi = jnp.left_shift(xi, x_preshift)
+    if w_preshift:
+        wi = jnp.left_shift(wi, w_preshift)
+    acc = P.add_conv(xi, wi)
+    if bias_q is not None:
+        acc = acc + bias_q.astype(jnp.int32)
+    return apply_requant(acc, requant_shift).astype(jnp.int8)
 
 
 def causal_conv1d_ref(x, w):
@@ -61,8 +100,4 @@ def matmul_ref(a, b, *, requant_shift=None):
         return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
     acc = jnp.dot(a.astype(jnp.int32), b.astype(jnp.int32),
                   preferred_element_type=jnp.int32)
-    if requant_shift > 0:
-        acc = jnp.right_shift(acc, requant_shift)
-    elif requant_shift < 0:
-        acc = jnp.left_shift(acc, -requant_shift)
-    return jnp.clip(acc, -128, 127).astype(jnp.int8)
+    return apply_requant(acc, requant_shift).astype(jnp.int8)

@@ -39,8 +39,11 @@ def loss_fn(cfg: ModelConfig, *, attn_impl="full", remat="full"):
                              remat=remat)
 
 
-def prefill_fn(cfg: ModelConfig, max_len: int, *, attn_impl="flash"):
+def prefill_fn(cfg: ModelConfig, max_len: int, *, attn_impl="flash",
+               precision: str = "float"):
     if cfg.family == "encdec":
+        if precision != "float":
+            raise NotImplementedError("integer-FFN serve: encdec unsupported")
         def fn(params, batch):
             return E.encdec_prefill(params, batch["frames"], batch["tokens"],
                                     cfg, max_len, attn_impl=attn_impl)
@@ -48,14 +51,19 @@ def prefill_fn(cfg: ModelConfig, max_len: int, *, attn_impl="flash"):
         def fn(params, batch):
             return T.prefill(params, batch["tokens"], cfg, max_len,
                              embeds=batch.get("embeds"), attn_impl=attn_impl,
-                             prompt_lens=batch.get("prompt_lens"))
+                             prompt_lens=batch.get("prompt_lens"),
+                             precision=precision)
     return fn
 
 
-def decode_fn(cfg: ModelConfig, *, sp_axis: Optional[str] = None):
+def decode_fn(cfg: ModelConfig, *, sp_axis: Optional[str] = None,
+              precision: str = "float"):
     if cfg.family == "encdec":
+        if precision != "float":
+            raise NotImplementedError("integer-FFN serve: encdec unsupported")
         return functools.partial(E.encdec_decode_step, cfg=cfg, sp_axis=sp_axis)
-    return functools.partial(T.decode_step, cfg=cfg, sp_axis=sp_axis)
+    return functools.partial(T.decode_step, cfg=cfg, sp_axis=sp_axis,
+                             precision=precision)
 
 
 def cache_specs(cfg: ModelConfig):

@@ -37,6 +37,56 @@ def mlp(h, p, act: str, cdt):
     return z @ p["w_down"].astype(cdt)
 
 
+# ----------------------------------------------------- quantized MLP (W8A8)
+#
+# The paper's Eq. 4 / Algorithm 1 scheme applied to the LM's FFN matmuls —
+# the dominant weight volume of a decode step. Weights are PTQ'd once per
+# tensor (power-of-two scale, concrete at engine init); activations are
+# quantized on the fly at a FIXED power-of-two scale, so every requantization
+# is a static arithmetic shift fused into the matmul_q8 epilogue. The
+# nonlinearity runs in float between the integer matmuls (standard W8A8).
+
+ACT_FRAC_BITS = 4      # activation scale 2^-4: post-rmsnorm streams are O(1)
+
+
+def quantize_mlp_params(p):
+    """PTQ of one (possibly layer-stacked) MLP parameter tree -> QTensor per
+    weight. Stacked (L, d, ff) tensors share one scale across layers so the
+    static frac_bits survive a lax.scan over the stack."""
+    from repro.core.quantize import quantize
+    return {k: quantize(v) for k, v in p.items()}
+
+
+def qmlp(h, qp, act: str, cdt, *, a_fb: int = ACT_FRAC_BITS,
+         method: str = "pallas"):
+    """Integer FFN: every matmul runs int8 x int8 -> int32 -> shift -> int8
+    through the kernel layer (``matmul_q8``'s requantized epilogue under
+    ``method="pallas"``, the jnp integer oracle under ``"xla"``). Both
+    methods are bit-exact against each other. Serve-path only (no sharding
+    constraints — the engine runs unpartitioned decode)."""
+    from repro.core.quantize import quantize
+    from repro.kernels import ops as K
+    b, s, d = h.shape
+    x = quantize(h.reshape(b * s, d), frac_bits=a_fb)
+
+    def mm(xq, w):
+        # acc frac bits = a_fb + w.fb; requantize back to the activation
+        # scale => shift by w.fb (static per tensor)
+        return K.matmul(xq.q, w.q, method=method, requant_shift=w.frac_bits)
+
+    scale = 2.0 ** -a_fb
+    if act == "silu":
+        g = mm(x, qp["w_gate"]).astype(jnp.float32) * scale
+        u = mm(x, qp["w_up"]).astype(jnp.float32) * scale
+        z = jax.nn.silu(g) * u
+    else:
+        u = mm(x, qp["w_up"]).astype(jnp.float32) * scale
+        z = jax.nn.gelu(u)
+    zq = quantize(z, frac_bits=a_fb)
+    y = mm(zq, qp["w_down"]).astype(jnp.float32) * scale
+    return y.reshape(b, s, -1).astype(cdt)
+
+
 def init_mlp(key, d, ff, act, dtype):
     k1, k2, k3 = jax.random.split(key, 3)
     s_in, s_out = d ** -0.5, ff ** -0.5

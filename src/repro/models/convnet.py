@@ -101,10 +101,15 @@ def calibrate_bn(params, cfg: CNNConfig, calib_x):
 
 # ------------------------------------------------------------------ PTQ ---
 
-def quantize_cnn(params, cfg: CNNConfig, calib_x):
+def quantize_cnn(params, cfg: CNNConfig, calib_x, *, method: str = "xla"):
     """Post-training quantization (paper scheme): re-estimate BN stats,
     BN-fold the foldable blocks, pick power-of-two scales from calibration
-    activations, return an integer-only forward closure."""
+    activations, return an integer-only forward closure.
+
+    ``method`` picks the integer execution engine for every layer:
+    ``"pallas"`` runs the fused int8 TPU kernels (the paper's SIMD
+    analogue), ``"xla"`` the jnp integer oracles (direct / no-SIMD) —
+    bit-exact with each other (see core/qconv.qconv_apply)."""
     params = calibrate_bn(params, cfg, calib_x)
     specs = _specs(cfg)
     h = calib_x
@@ -127,7 +132,8 @@ def quantize_cnn(params, cfg: CNNConfig, calib_x):
     def int_forward(x):
         xq = quantize(x)
         for blk in qblocks:
-            yq = qconv_apply(blk["qp"], xq, blk["spec"], blk["out_fb"])
+            yq = qconv_apply(blk["qp"], xq, blk["spec"], blk["out_fb"],
+                             method=method)
             y = yq.dequantize()
             if blk["bn"] is not None:
                 y = batchnorm_apply(blk["bn"], y)

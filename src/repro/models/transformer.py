@@ -253,7 +253,20 @@ def _sp_decode(q, k_cache, v_cache, n_valid, axis: str):
         out_specs=q_spec, check_rep=False)(q, k_cache, v_cache, n_valid)
 
 
-def ffn_forward(lp, x, cfg: ModelConfig, cdt):
+def ffn_forward(lp, x, cfg: ModelConfig, cdt, precision: str = "float"):
+    """``precision``: "float" (default) or the serve engine's integer modes
+    "int8" / "int8-xla" — those route the FFN matmuls through the quantized
+    kernel layer (blocks.qmlp); the layer params must carry a "qmlp" tree
+    (serve.Engine adds it at init)."""
+    if precision != "float":
+        if "qmlp" not in lp:
+            raise ValueError(
+                f"precision={precision!r} needs quantized FFN params; run "
+                "blocks.quantize_mlp_params (serve.Engine does this when "
+                "ServeConfig.precision != 'float')")
+        from .blocks import qmlp
+        return qmlp(x, lp["qmlp"], cfg.act, cdt,
+                    method="xla" if precision == "int8-xla" else "pallas")
     if cfg.moe is not None and "moe" in lp:
         y = moe_ffn(x, lp["moe"], cfg.moe, cfg.act, cdt)
         if cfg.moe.dense_residual:
@@ -408,8 +421,12 @@ def cache_specs(cfg: ModelConfig):
 
 
 def decode_step(params, token, cache, cfg: ModelConfig, *,
-                sp_axis: Optional[str] = None):
-    """One-token serve step. token: (B, 1) int32."""
+                sp_axis: Optional[str] = None, precision: str = "float"):
+    """One-token serve step. token: (B, 1) int32. ``precision`` "int8" /
+    "int8-xla" runs the FFN matmuls integer-only (see ffn_forward)."""
+    if precision != "float" and cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            "integer-FFN decode only covers attention-family dense MLPs")
     cdt = _cdt(cfg)
     h = embed_tokens(params, token, cfg, cdt)
     clen = cache["len"]
@@ -467,7 +484,8 @@ def decode_step(params, token, cache, cfg: ModelConfig, *,
             a, kc, vc = attn_decode(lp["attn"], x, cfg, cdt, kc, vc, clen,
                                     sp_axis=sp_axis)
             hh = hh + a
-            f = ffn_forward(lp, rmsnorm(hh, lp["ln2"], cfg.norm_eps), cfg, cdt)
+            f = ffn_forward(lp, rmsnorm(hh, lp["ln2"], cfg.norm_eps), cfg, cdt,
+                            precision=precision)
             return hh + f, (kc, vc)
         h, (k_new, v_new) = lax.scan(body, h,
                                      (params["layers"], cache["k"], cache["v"]))
@@ -479,7 +497,8 @@ def decode_step(params, token, cache, cfg: ModelConfig, *,
 
 
 def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
-            attn_impl: str = "flash", prompt_lens=None):
+            attn_impl: str = "flash", prompt_lens=None,
+            precision: str = "float"):
     """Run the prompt, build the cache, return (last_logits, cache).
 
     For attention families the per-layer K/V come out of the layer scan; for
@@ -498,6 +517,9 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
     position into their state, so callers must pass exact lengths
     (prompt_lens[i] == S) for those families.
     """
+    if precision != "float" and cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            "integer-FFN prefill only covers attention-family dense MLPs")
     cdt = _cdt(cfg)
     b = tokens.shape[0]
     s_prompt = tokens.shape[1] + (0 if embeds is None else embeds.shape[1])
@@ -529,7 +551,8 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
             x = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
             a, (k, v) = attn_forward(lp["attn"], x, cfg, cdt, impl=attn_impl)
             hh = hh + a
-            f = ffn_forward(lp, rmsnorm(hh, lp["ln2"], cfg.norm_eps), cfg, cdt)
+            f = ffn_forward(lp, rmsnorm(hh, lp["ln2"], cfg.norm_eps), cfg, cdt,
+                            precision=precision)
             k = _pad_seq(k, max_len).astype(cache["k"].dtype)
             v = _pad_seq(v, max_len).astype(cache["v"].dtype)
             return hh + f, (k, v)

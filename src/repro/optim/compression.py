@@ -39,9 +39,9 @@ def allreduce_compressed(grads, errors, axis_names):
     Must run inside shard_map (needs named axes). Returns (mean grads,
     new errors).
     """
-    n = 1
-    for a in (axis_names if isinstance(axis_names, (tuple, list)) else [axis_names]):
-        n *= jax.lax.axis_size(a)
+    # jax.lax.axis_size only exists on newer JAX; psum(1) is the portable
+    # spelling of the same quantity (product of the named axis sizes)
+    n = jax.lax.psum(1, axis_names)
 
     def leaf(g, e):
         q, s, new_e = compress(g, e)

@@ -90,6 +90,14 @@ class ServeConfig:
                 distinct length).
     attn_impl:  prefill attention implementation ("flash" | "full" | ...).
     seed:       host rng seed for temperature sampling.
+    precision:  "float" (default) serves as-is. "int8" PTQ-quantizes every
+                layer's FFN weights at engine init (power-of-two scales,
+                paper Eq. 4) and runs those matmuls int8 x int8 -> int32
+                through the Pallas ``matmul_q8`` kernel with its fused
+                Algorithm-1 shift-requantized epilogue; "int8-xla" is the
+                same arithmetic on the jnp integer oracle (bit-exact with
+                "int8" — the direct / no-SIMD baseline). Attention-family
+                dense-MLP configs only (no moe / ssm / hybrid / encdec).
     """
     max_batch: int = 4
     max_len: int = 256
@@ -100,6 +108,7 @@ class ServeConfig:
     prefill_bucket: int = 16
     attn_impl: str = "flash"
     seed: int = 0
+    precision: str = "float"
 
 
 class Engine:
@@ -110,16 +119,30 @@ class Engine:
             raise NotImplementedError(
                 "continuous batching needs slotted caches; encdec is not "
                 "slotted (models/api.slot_batch_axes) — use scheduler='static'")
+        if scfg.precision not in ("float", "int8", "int8-xla"):
+            raise ValueError(f"unknown precision: {scfg.precision!r}")
+        if scfg.precision != "float":
+            if cfg.family in ("ssm", "hybrid", "encdec") or cfg.moe is not None:
+                raise NotImplementedError(
+                    "ServeConfig.precision='int8' quantizes dense FFN "
+                    "matmuls; moe/ssm/hybrid/encdec configs are unsupported")
+            # PTQ the FFN stack once; the quantized tree rides along in
+            # params["layers"] so the layer scan slices it like any weight
+            from repro.models.blocks import quantize_mlp_params
+            layers = dict(params["layers"])
+            layers["qmlp"] = quantize_mlp_params(layers["mlp"])
+            params = dict(params, layers=layers)
         self.cfg = cfg
         self.scfg = scfg
         self.params = params
         self.prefill = jax.jit(
-            api.prefill_fn(cfg, scfg.max_len, attn_impl=scfg.attn_impl))
+            api.prefill_fn(cfg, scfg.max_len, attn_impl=scfg.attn_impl,
+                           precision=scfg.precision))
         # donate the live cache so slot writes / decode rounds update it in
         # place instead of copying the whole KV budget (CPU backends don't
         # implement donation and would warn on every compile, so skip there)
         cpu = jax.default_backend() == "cpu"
-        self.decode = jax.jit(api.decode_fn(cfg),
+        self.decode = jax.jit(api.decode_fn(cfg, precision=scfg.precision),
                               donate_argnums=() if cpu else (2,))
         if cfg.family != "encdec":
             self._write_slot = jax.jit(

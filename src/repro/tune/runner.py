@@ -176,7 +176,7 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
 def analytic_config(sig: ShapeSig, dtype: str = "float32") -> Dict[str, int]:
     """Best config under the analytic model (no measurement)."""
     best, best_s = None, float("inf")
-    for cfg in _space.candidates(sig):
+    for cfg in _space.candidates(sig, dtype):
         s = estimate_s(sig, cfg, dtype)
         if s < best_s:
             best, best_s = cfg, s
@@ -228,13 +228,14 @@ def _kernel_call(kernel: str) -> Callable:
 
 
 def autotune(kernel: str, sig: ShapeSig, args: Tuple, *,
-             kwargs: Optional[dict] = None, reps: int = 5, warmup: int = 2,
+             kwargs: Optional[dict] = None, dtype: str = "float32",
+             reps: int = 5, warmup: int = 2,
              max_candidates: Optional[int] = None,
              verbose: bool = False) -> Tuple[Dict[str, int], float, list]:
     """Measure every candidate config on real arrays; return
     (best_config, best_us, [(config, us), ...]). ``kwargs`` are non-schedule
     kernel arguments (e.g. groups=, requant_shift=) held fixed across
-    candidates."""
+    candidates; ``dtype`` selects the (wider for int8) candidate space."""
     from repro.kernels.common import use_interpret
     if use_interpret() and reps > 3:
         reps = 3                     # interpret-mode guard: interpreter is
@@ -246,7 +247,7 @@ def autotune(kernel: str, sig: ShapeSig, args: Tuple, *,
     # default schedule — is not systematically penalized
     call(args, _space.default_config(kernel), kw)
     results = []
-    for i, cfg in enumerate(_space.candidates(sig)):
+    for i, cfg in enumerate(_space.candidates(sig, dtype)):
         if max_candidates is not None and i >= max_candidates:
             break
         us = time_config(lambda a=args, c=cfg: call(a, c, kw),
@@ -261,7 +262,7 @@ def autotune(kernel: str, sig: ShapeSig, args: Tuple, *,
 def autotune_into(cache: _cache.TuneCache, kernel: str, sig: ShapeSig,
                   args: Tuple, dtype: str, **kw) -> Tuple[Dict[str, int], float]:
     """Autotune one (kernel, shape) and record the winner in ``cache``."""
-    best, best_us, results = autotune(kernel, sig, args, **kw)
+    best, best_us, results = autotune(kernel, sig, args, dtype=dtype, **kw)
     default_us = next((us for cfg, us in results
                        if cfg == _space.default_config(kernel)), None)
     key = _cache.cache_key(kernel, sig.key(), dtype, backend_tag())

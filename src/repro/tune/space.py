@@ -36,6 +36,17 @@ _DEFAULTS: Dict[str, Dict[str, int]] = {
 _POW2_BLOCKS = (8, 16, 32, 64, 128, 256)
 _MM_BLOCKS = (128, 256, 512)
 
+# int8 operands are 4x smaller than f32, so schedules that would overflow
+# VMEM at f32 are feasible quantized — the int8 spaces extend the block
+# ranges upward (the paper's SIMD build likewise unlocks wider tiles via
+# 4-way byte packing in 32-bit words).
+_POW2_BLOCKS_INT8 = _POW2_BLOCKS + (512,)
+_MM_BLOCKS_INT8 = _MM_BLOCKS + (1024,)
+
+
+def _int8(dtype: str) -> bool:
+    return str(dtype) in ("int8", "uint8")
+
 
 @dataclasses.dataclass(frozen=True)
 class ShapeSig:
@@ -131,15 +142,18 @@ def effective_config(sig: ShapeSig, cfg: Dict[str, int]) -> Dict[str, int]:
     raise AssertionError(k)  # pragma: no cover - ShapeSig guards kernel
 
 
-def candidates(sig: ShapeSig) -> Iterator[Dict[str, int]]:
+def candidates(sig: ShapeSig, dtype: str = "float32") -> Iterator[Dict[str, int]]:
     """Enumerate feasible configs for one shape, default first.
 
     Deduped by *effective* schedule, so the default's entry represents its
-    whole equivalence class and no other candidate aliases it.
+    whole equivalence class and no other candidate aliases it. ``dtype``
+    widens the block ranges for int8 operands (4x smaller footprint).
     """
     k = sig.kernel
     seen = set()
     out: List[Dict[str, int]] = []
+    pow2 = _POW2_BLOCKS_INT8 if _int8(dtype) else _POW2_BLOCKS
+    mm = _MM_BLOCKS_INT8 if _int8(dtype) else _MM_BLOCKS
 
     def emit(cfg: Dict[str, int]):
         key = tuple(sorted(effective_config(sig, cfg).items()))
@@ -150,25 +164,25 @@ def candidates(sig: ShapeSig) -> Iterator[Dict[str, int]]:
     emit(default_config(k))
 
     if k == "conv2d":
-        for bco in _POW2_BLOCKS:
+        for bco in pow2:
             emit({"block_co": bco})
     elif k == "depthwise2d":
-        for bc in _POW2_BLOCKS:
+        for bc in pow2:
             emit({"block_c": bc})
     elif k == "shift_conv2d":
-        for bco in _POW2_BLOCKS:
+        for bco in pow2:
             emit({"block_co": bco})
     elif k == "add_conv2d":
-        for bco in (1, 2, 4, 8, 16, 32):
+        for bco in (1, 2, 4, 8, 16, 32) + ((64,) if _int8(dtype) else ()):
             emit({"block_co": bco})
     elif k == "causal_conv1d":
         for bl in (128, 256, 512, 1024):
             for bc in (128, 256, 512):
                 emit({"block_l": bl, "block_c": bc})
     elif k == "matmul":
-        for bm in _MM_BLOCKS:
-            for bn in _MM_BLOCKS:
-                for bk in _MM_BLOCKS:
+        for bm in mm:
+            for bn in mm:
+                for bk in mm:
                     emit({"bm": bm, "bn": bn, "bk": bk})
     else:  # pragma: no cover - KERNELS guard above
         raise AssertionError(k)
@@ -176,5 +190,5 @@ def candidates(sig: ShapeSig) -> Iterator[Dict[str, int]]:
     return iter(out)
 
 
-def space_size(sig: ShapeSig) -> int:
-    return sum(1 for _ in candidates(sig))
+def space_size(sig: ShapeSig, dtype: str = "float32") -> int:
+    return sum(1 for _ in candidates(sig, dtype))

@@ -78,9 +78,12 @@ def test_depthwise_int8():
     x = rnd((1, 6, 6, 8), jnp.int8)
     wd = rnd((3, 3, 8), jnp.int8, jax.random.PRNGKey(1))
     got = depthwise2d(x, wd, requant_shift=4)
-    acc = ref.depthwise2d_ref(x.astype(jnp.int32), wd.astype(jnp.int32))
-    want = jnp.clip(jnp.right_shift(acc, 4), -128, 127).astype(jnp.int8)
+    want = ref.depthwise2d_q8_ref(x, wd, requant_shift=4)
     np.testing.assert_array_equal(got, want)
+    # golden: round-to-nearest epilogue (NNoM default build), not floor
+    acc = ref.depthwise2d_ref(x.astype(jnp.int32), wd.astype(jnp.int32))
+    rounded = jnp.clip(jnp.right_shift(acc + 8, 4), -128, 127).astype(jnp.int8)
+    np.testing.assert_array_equal(got, rounded)
 
 
 # ------------------------------------------------------------ conv_shift --
@@ -102,11 +105,14 @@ def test_shift_conv_int8():
     shifts = np.array([[(i % 3) - 1, ((i * 2) % 3) - 1] for i in range(c)], np.int32)
     w = rnd((c, cy), jnp.int8, jax.random.PRNGKey(1))
     got = shift_conv2d(x, shifts, w, requant_shift=5)
+    want = ref.shift_conv2d_q8_ref(x, shifts, w, requant_shift=5)
+    np.testing.assert_array_equal(got, want)
     from repro.core.primitives import shift_channels, standard_conv
     acc = standard_conv(shift_channels(x.astype(jnp.int32), jnp.asarray(shifts)),
                         w[None, None].astype(jnp.int32))
-    want = jnp.clip(jnp.right_shift(acc, 5), -128, 127).astype(jnp.int8)
-    np.testing.assert_array_equal(got, want)
+    # golden: + (1 << (shift-1)) rounding term before the arithmetic shift
+    rounded = jnp.clip(jnp.right_shift(acc + 16, 5), -128, 127).astype(jnp.int8)
+    np.testing.assert_array_equal(got, rounded)
 
 
 # -------------------------------------------------------------- conv_add --

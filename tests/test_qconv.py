@@ -1,0 +1,167 @@
+"""Integer-only path through the kernel layer: pallas-vs-xla bit-exactness
+for all five quantized primitives (qconv_apply method dispatch), the ops.py
+requant threading, and the end-to-end quantized CNN accuracy bound."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ConvSpec, Primitives, apply, init, quantize, frac_bits_for
+from repro.core.qconv import qconv_apply, quantize_conv_params
+from repro.core.quantize import QTensor
+from repro.kernels import ops as K
+from repro.models.convnet import (CNNConfig, calibrate_bn, cnn_forward,
+                                  init_cnn, quantize_cnn)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _quantized_layer(prim, *, with_bias=True, kernel_size=3):
+    spec = ConvSpec(primitive=prim, in_channels=8, out_channels=12,
+                    kernel_size=kernel_size,
+                    groups=4 if prim == "grouped" else 1,
+                    use_bias=with_bias)
+    p = init(KEY, spec)
+    if with_bias:
+        # non-zero bias so the accumulator-scale bias path is exercised
+        p["b"] = jax.random.normal(jax.random.PRNGKey(5), p["b"].shape) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 10, 10, 8)) * 0.5
+    yf = apply(p, x, spec)
+    return spec, quantize_conv_params(p, spec), quantize(x), frac_bits_for(yf), yf
+
+
+@pytest.mark.parametrize("prim", Primitives)
+def test_qconv_pallas_bit_exact_with_xla(prim):
+    """Acceptance: method="pallas" == method="xla" bit-for-bit, all five."""
+    spec, qp, xq, ofb, yf = _quantized_layer(prim)
+    y_xla = qconv_apply(qp, xq, spec, ofb, method="xla")
+    y_pal = qconv_apply(qp, xq, spec, ofb, method="pallas")
+    assert y_xla.frac_bits == y_pal.frac_bits == ofb
+    np.testing.assert_array_equal(np.asarray(y_xla.q), np.asarray(y_pal.q))
+    # and both stay close to the float layer
+    rel = float(jnp.mean(jnp.abs(y_pal.dequantize() - yf))
+                / jnp.mean(jnp.abs(yf)))
+    assert rel < 0.12, f"{prim}: quantized path diverged, rel {rel}"
+
+
+@pytest.mark.parametrize("prim", Primitives)
+def test_qconv_bit_exact_without_bias(prim):
+    spec, qp, xq, ofb, _ = _quantized_layer(prim, with_bias=False)
+    y_xla = qconv_apply(qp, xq, spec, ofb, method="xla")
+    y_pal = qconv_apply(qp, xq, spec, ofb, method="pallas")
+    np.testing.assert_array_equal(np.asarray(y_xla.q), np.asarray(y_pal.q))
+
+
+def test_qconv_bit_exact_under_jit():
+    spec, qp, xq, ofb, _ = _quantized_layer("standard")
+
+    def run(method):
+        fb = xq.frac_bits
+        return jax.jit(lambda q: qconv_apply(qp, QTensor(q, fb), spec, ofb,
+                                             method=method).q)(xq.q)
+    np.testing.assert_array_equal(np.asarray(run("xla")),
+                                  np.asarray(run("pallas")))
+
+
+def test_qconv_unknown_method_rejected():
+    spec, qp, xq, ofb, _ = _quantized_layer("standard")
+    with pytest.raises(ValueError, match="method"):
+        qconv_apply(qp, xq, spec, ofb, method="cuda")
+
+
+@pytest.mark.parametrize("spec,out_shape", [
+    (ConvSpec("standard", 4, 4, 3, stride=2), (1, 4, 4, 4)),
+    (ConvSpec("dws", 4, 4, 3, stride=2), (1, 4, 4, 4)),
+    (ConvSpec("shift", 4, 4, 3, stride=2), (1, 4, 4, 4)),
+    (ConvSpec("add", 4, 4, 3, padding="VALID"), (1, 6, 6, 4)),
+])
+def test_qconv_outside_kernel_envelope_falls_back_xla(spec, out_shape):
+    """Strided / VALID layers the kernel layer can't express keep working
+    under method="xla" (raw-lax fallback, all five primitives) and reject
+    method="pallas" with a clear error."""
+    p = init(KEY, spec)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, 8, 4)) * 0.5
+    qp = quantize_conv_params(p, spec)
+    xq = quantize(x)
+    yf = apply(p, x, spec)
+    ofb = frac_bits_for(yf)
+    y = qconv_apply(qp, xq, spec, ofb, method="xla")     # raw-lax fallback
+    assert y.q.shape == out_shape and y.q.dtype == jnp.int8
+    rel = float(jnp.mean(jnp.abs(y.dequantize() - yf)) / jnp.mean(jnp.abs(yf)))
+    assert rel < 0.15, f"{spec.primitive}: fallback diverged, rel {rel}"
+    with pytest.raises(NotImplementedError, match="stride"):
+        qconv_apply(qp, xq, spec, ofb, method="pallas")
+
+
+# ------------------------------------------------- ops.py requant threading
+
+def test_ops_depthwise_requant_threading():
+    """Satellite: ops.depthwise2d no longer drops requant_shift — both
+    methods run the integer epilogue and agree bit-for-bit."""
+    x = jax.random.randint(KEY, (1, 8, 8, 8), -100, 100, jnp.int32).astype(jnp.int8)
+    w = jax.random.randint(jax.random.PRNGKey(1), (3, 3, 8), -100, 100,
+                           jnp.int32).astype(jnp.int8)
+    got_p = K.depthwise2d(x, w, method="pallas", requant_shift=4)
+    got_x = K.depthwise2d(x, w, method="xla", requant_shift=4)
+    assert got_x.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(got_x))
+
+
+def test_ops_shift_and_add_requant_threading():
+    x = jax.random.randint(KEY, (1, 6, 6, 4), -100, 100, jnp.int32).astype(jnp.int8)
+    shifts = np.array([[0, 1], [-1, 0], [1, -1], [0, 0]], np.int32)
+    w_pw = jax.random.randint(jax.random.PRNGKey(1), (4, 8), -100, 100,
+                              jnp.int32).astype(jnp.int8)
+    b = (jnp.arange(8, dtype=jnp.int32) - 4) * 30
+    got_p = K.shift_conv2d(x, shifts, w_pw, b, method="pallas", requant_shift=5)
+    got_x = K.shift_conv2d(x, shifts, w_pw, b, method="xla", requant_shift=5)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(got_x))
+
+    w = jax.random.randint(jax.random.PRNGKey(2), (3, 3, 4, 8), -100, 100,
+                           jnp.int32).astype(jnp.int8)
+    got_p = K.add_conv2d(x, w, b, method="pallas", requant_shift=3, w_preshift=2)
+    got_x = K.add_conv2d(x, w, b, method="xla", requant_shift=3, w_preshift=2)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(got_x))
+
+
+def test_ops_float_bias_rejected_where_unsupported():
+    x = jax.random.normal(KEY, (1, 6, 6, 4))
+    shifts = np.zeros((4, 2), np.int32)
+    w_pw = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+    b = jnp.zeros((8,), jnp.int32)
+    with pytest.raises(ValueError, match="bias"):
+        K.shift_conv2d(x, shifts, w_pw, b, method="xla")
+    with pytest.raises(ValueError, match="requant_shift"):
+        K.add_conv2d(x, jax.random.normal(KEY, (3, 3, 4, 8)), b, method="xla")
+
+
+# ----------------------------------------------------- end-to-end CNN (PTQ)
+
+@pytest.mark.parametrize("prim", ["standard", "dws", "shift"])
+def test_quantize_cnn_end_to_end(prim):
+    """PTQ accuracy-drop bound vs the float CNN + pallas/xla agreement."""
+    cfg = CNNConfig(primitive=prim, widths=(8, 12), image_size=16,
+                    in_channels=3, num_classes=10)
+    params = init_cnn(cfg, jax.random.PRNGKey(2))
+    calib = jax.random.normal(jax.random.PRNGKey(3), (8, 16, 16, 3)) * 0.5
+    x = jax.random.normal(jax.random.PRNGKey(4), (16, 16, 16, 3)) * 0.5
+
+    int_xla = quantize_cnn(params, cfg, calib, method="xla")
+    int_pal = quantize_cnn(params, cfg, calib, method="pallas")
+    lq_x, lq_p = int_xla(x), int_pal(x)
+    # the integer trunk is bit-exact across methods; only the float head
+    # (mean-pool @ head matmul over dequantized int8) runs per-method, so
+    # logits agree to float tolerance
+    np.testing.assert_allclose(np.asarray(lq_x), np.asarray(lq_p),
+                               rtol=1e-5, atol=1e-5)
+
+    # accuracy-drop bound: the quantized net predicts like the float net
+    # (same BN calibration) on a clear majority of inputs
+    lf = cnn_forward(calibrate_bn(params, cfg, calib), x, cfg)
+    agree = float(jnp.mean((jnp.argmax(lq_x, -1) == jnp.argmax(lf, -1))
+                           .astype(jnp.float32)))
+    assert agree >= 0.75, f"{prim}: top-1 agreement {agree}"
+    rel = float(jnp.mean(jnp.abs(lq_x - lf)) / jnp.mean(jnp.abs(lf)))
+    assert rel < 0.35, f"{prim}: logits rel err {rel}"

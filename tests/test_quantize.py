@@ -10,6 +10,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (ConvSpec, Primitives, apply, init, quantize,
                         frac_bits_for, mac_inner, addmac_inner)
+from repro.core.quantize import rshift_round
 from repro.core.folding import fold, FOLDABLE
 from repro.core.primitives import init_block, batchnorm_apply
 from repro.core.qconv import qconv_apply, quantize_conv_params
@@ -31,6 +32,29 @@ def test_quantize_roundtrip_error_bounded(v):
     qt = quantize(jnp.array([v]))
     err = abs(float(qt.dequantize()[0]) - v)
     assert err <= qt.scale + 1e-9          # floor => one ULP at that scale
+
+
+def test_rshift_round_nearest_goldens():
+    """NNoM's default build rounds to nearest (+(1 << (shift-1)) before >>),
+    not floor: 3>>1 is 2 (1.5 -> 2), -3>>1 is -1 (-1.5 -> -1, half up)."""
+    vals = jnp.array([3, -3, 5, -5, 4, -4, 1, -1, 0], jnp.int32)
+    got = rshift_round(vals, 1)
+    np.testing.assert_array_equal(got, [2, -1, 3, -2, 2, -2, 1, 0, 0])
+    # floor semantics (the old behavior) would give 1 for 3>>1 and -2 for -3>>1
+    np.testing.assert_array_equal(rshift_round(jnp.int32(100), 3), 13)  # 12.5 up
+    np.testing.assert_array_equal(rshift_round(jnp.int32(99), 3), 12)   # 12.375
+    # shift <= 0: exact left shift / identity, no rounding term
+    np.testing.assert_array_equal(rshift_round(jnp.int32(-3), -2), -12)
+    np.testing.assert_array_equal(rshift_round(jnp.int32(7), 0), 7)
+
+
+def test_rshift_round_matches_kernel_epilogue():
+    """Host-side requantization and the Pallas/ref epilogue must agree."""
+    from repro.kernels.common import apply_requant
+    acc = jnp.arange(-1000, 1000, 7, dtype=jnp.int32)
+    for shift in (1, 3, 6):
+        want = jnp.clip(rshift_round(acc, shift), -128, 127)
+        np.testing.assert_array_equal(apply_requant(acc, shift), want)
 
 
 def test_quantize_int8_range():

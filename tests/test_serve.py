@@ -229,3 +229,47 @@ def test_take_batch_nonblocking(dense_setup):
     assert [r.uid for r in eng._take_batch()] == [0, 1, 2, 3]
     assert [r.uid for r in eng._take_batch()] == [4]
     assert eng._take_batch() == []
+
+
+# -------------------------------------------------------- int8 precision --
+
+
+def test_int8_precision_serves_and_matches_pallas_vs_xla(dense_setup):
+    """ServeConfig(precision="int8"): FFN matmuls run integer-only through
+    matmul_q8's requantized epilogue; the Pallas and the jnp-oracle integer
+    engines accumulate identically, so greedy token streams are identical."""
+    cfg, params = dense_setup
+    reqs = lambda: [make_req(i, max_new=4) for i in range(3)]
+    _, done_p = drain(cfg, params, reqs(), max_batch=2, max_len=32,
+                      precision="int8")
+    _, done_x = drain(cfg, params, reqs(), max_batch=2, max_len=32,
+                      precision="int8-xla")
+    assert all(len(r.out_tokens) == 4 for r in done_p)
+    assert [r.out_tokens for r in done_p] == [r.out_tokens for r in done_x]
+    # the engine's own params stay float; quantized copies ride in "qmlp"
+    assert "qmlp" not in params["layers"]
+
+
+def test_int8_precision_close_to_float(dense_setup):
+    """W8A8 FFN decode mostly agrees with the float engine on greedy tokens
+    (power-of-two PTQ is lossy, so exact agreement is not required)."""
+    cfg, params = dense_setup
+    reqs = lambda: [make_req(i, max_new=6) for i in range(4)]
+    _, done_f = drain(cfg, params, reqs(), max_batch=2, max_len=32)
+    _, done_q = drain(cfg, params, reqs(), max_batch=2, max_len=32,
+                      precision="int8-xla")
+    toks_f = [t for r in done_f for t in r.out_tokens]
+    toks_q = [t for r in done_q for t in r.out_tokens]
+    agree = sum(a == b for a, b in zip(toks_f, toks_q)) / len(toks_f)
+    assert agree >= 0.5, f"int8 vs float token agreement {agree}"
+
+
+def test_int8_precision_rejected_for_unsupported_configs(dense_setup):
+    cfg, params = dense_setup
+    with pytest.raises(ValueError, match="precision"):
+        Engine(cfg, params, ServeConfig(precision="fp4"))
+    ssm_cfg = dataclasses.replace(get_config("falcon-mamba-7b"), n_layers=2,
+                                  d_model=32, vocab=64)
+    ssm_params = api.init_params(ssm_cfg, jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="int8"):
+        Engine(ssm_cfg, ssm_params, ServeConfig(precision="int8"))
