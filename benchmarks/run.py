@@ -8,6 +8,8 @@
   table4  -> optlevel          (interpret vs compiled; O0 vs Os)
   kernels -> kernel microbench (Pallas interpret vs jnp oracle)
   quant   -> quant_bench       (pallas-int8 / xla-int8 / float per primitive)
+  layers  -> layer_bench       (repro.graph per-layer breakdown; fused vs
+                                unfused float-bounce e2e)
   roofline-> roofline_report   (from dry-run artifacts, if present)
   serving -> serve_bench       (static-drain vs continuous batching)
 
@@ -21,7 +23,7 @@ import traceback
 
 
 def main() -> None:
-    from . import (frequency, kernels_bench, memaccess, optlevel,
+    from . import (frequency, kernels_bench, layer_bench, memaccess, optlevel,
                    primitive_costs, quant_bench, roofline_report, serve_bench,
                    sweeps)
     sections = [
@@ -32,6 +34,7 @@ def main() -> None:
         ("table4", optlevel.main),
         ("kernels", kernels_bench.main),
         ("quant", quant_bench.main),
+        ("layers", layer_bench.main),
         ("roofline", roofline_report.main),
         ("serving", serve_bench.main),
     ]

@@ -135,9 +135,39 @@ def shapes_smoke():
 SHAPE_SETS = {"table2": shapes_table2, "smoke": shapes_smoke}
 
 
+def cnn_plan_jobs(primitives: str, *, widths=(16, 32, 64), image_size=32,
+                  batch=1):
+    """Whole-plan pre-tuning through repro.graph: lower one CNN per
+    requested primitive and emit every kernel invocation of its plan as a
+    tuning job (``tune.plan_jobs``), so a deployed CompiledPlan finds every
+    node's schedule in the cache."""
+    from repro.graph import build_cnn_graph, lower
+    from repro.models.convnet import CNNConfig, init_cnn
+
+    jobs = []
+    for i, prim in enumerate(primitives.split(",")):
+        cfg = CNNConfig(primitive=prim.strip(), widths=tuple(widths),
+                        image_size=image_size)
+        params = init_cnn(cfg, jax.random.PRNGKey(i))
+        calib = jax.random.normal(jax.random.PRNGKey(100 + i),
+                                  (4, image_size, image_size,
+                                   cfg.in_channels)) * 0.5
+        plan = lower(build_cnn_graph(cfg), params, calib)
+        jobs.extend(tune.plan_jobs(plan, batch=batch))
+    return jobs
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--shapes", choices=sorted(SHAPE_SETS), default="table2")
+    ap.add_argument("--cnn", default="",
+                    help="comma-separated CNN primitives: pre-tune each "
+                         "model's WHOLE lowered plan (repro.graph) in one "
+                         "call, e.g. --cnn standard,dws,shift")
+    ap.add_argument("--cnn-batch", type=int, default=1,
+                    help="batch size the --cnn plans are tuned at (cache "
+                         "keys include the batch dim — tune at the batch "
+                         "you deploy)")
     ap.add_argument("--out", default="tuned.json")
     ap.add_argument("--kernels", default="",
                     help="comma-separated kernel filter (default: all)")
@@ -148,6 +178,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     jobs = SHAPE_SETS[args.shapes]()
+    if args.cnn:
+        jobs += cnn_plan_jobs(args.cnn, batch=args.cnn_batch)
     if args.kernels:
         keep = set(args.kernels.split(","))
         jobs = [j for j in jobs if j[0] in keep]

@@ -66,18 +66,28 @@ def _kernel_layer_ok(spec: ConvSpec) -> bool:
 
 
 def qconv_apply(qparams: dict, x: QTensor, spec: ConvSpec, out_frac_bits: int,
-                *, method: str = "xla") -> QTensor:
+                *, method: str = "xla", act: Optional[str] = None,
+                configs: Optional[dict] = None) -> QTensor:
     """Run one quantized primitive layer; returns int8 QTensor.
 
     ``method`` picks the execution engine in the kernel layer: ``"pallas"``
     (TPU kernels, fused requantization) or ``"xla"`` (jnp integer oracle).
+    ``act="relu"`` fuses the activation into the layer's LAST kernel stage
+    at accumulator scale (the graph executor's fused conv+BN+ReLU block).
+    ``configs`` pins Pallas schedules per stage — ``{"main": {...}}`` for the
+    single-kernel primitives, ``{"dw": ..., "pw": ...}`` for dws; only legal
+    with ``method="pallas"`` (the oracle has no schedule knobs).
     """
     from repro.kernels import ops as K   # lazy: core must import without kernels
 
     if method not in ("pallas", "xla"):
         raise ValueError(f"unknown method {method!r}; expected 'pallas' or 'xla'")
+    if configs is not None and method != "pallas":
+        raise ValueError("qconv_apply: configs= pins Pallas schedules; "
+                         "method='xla' has none (drop configs or use pallas)")
     p = spec.primitive
     bias = qparams.get("b")
+    cfgs = configs or {}
 
     if not _kernel_layer_ok(spec):
         if method == "pallas":
@@ -85,14 +95,15 @@ def qconv_apply(qparams: dict, x: QTensor, spec: ConvSpec, out_frac_bits: int,
                 f"qconv_apply(method='pallas'): the Pallas kernel layer only "
                 f"supports stride=1 SAME layers, got stride={spec.stride} "
                 f"padding={spec.padding!r}; use method='xla'")
-        return _qconv_apply_lax(qparams, x, spec, out_frac_bits)
+        return _qconv_apply_lax(qparams, x, spec, out_frac_bits, act=act)
 
     if p in ("standard", "grouped"):
         w = qparams["w"]
         groups = spec.groups if p == "grouped" else 1
         acc_fb = x.frac_bits + w.frac_bits
         y = K.conv2d(x.q, w.q, _bias_acc(bias, acc_fb), groups=groups,
-                     method=method, requant_shift=acc_fb - out_frac_bits)
+                     method=method, requant_shift=acc_fb - out_frac_bits,
+                     act=act, config=cfgs.get("main"))
         return QTensor(y, out_frac_bits)
 
     if p == "dws":
@@ -100,10 +111,12 @@ def qconv_apply(qparams: dict, x: QTensor, spec: ConvSpec, out_frac_bits: int,
         # depthwise at an intermediate scale, then pointwise
         mid_fb = qparams.get("mid_frac_bits", out_frac_bits)
         h = K.depthwise2d(x.q, w_dw.q, method=method,
-                          requant_shift=x.frac_bits + w_dw.frac_bits - mid_fb)
+                          requant_shift=x.frac_bits + w_dw.frac_bits - mid_fb,
+                          config=cfgs.get("dw"))
         acc_fb = mid_fb + w_pw.frac_bits
         y = K.conv2d(h, w_pw.q, _bias_acc(bias, acc_fb), method=method,
-                     requant_shift=acc_fb - out_frac_bits)
+                     requant_shift=acc_fb - out_frac_bits, act=act,
+                     config=cfgs.get("pw"))
         return QTensor(y, out_frac_bits)
 
     if p == "shift":
@@ -113,8 +126,9 @@ def qconv_apply(qparams: dict, x: QTensor, spec: ConvSpec, out_frac_bits: int,
         acc_fb = x.frac_bits + w_pw.frac_bits
         y = K.shift_conv2d(x.q, qparams["shifts"], w_pw.q,
                            _bias_acc(bias, acc_fb), method=method,
-                           requant_shift=acc_fb - out_frac_bits,
-                           max_shift=spec.kernel_size // 2)
+                           requant_shift=acc_fb - out_frac_bits, act=act,
+                           max_shift=spec.kernel_size // 2,
+                           config=cfgs.get("main"))
         return QTensor(y, out_frac_bits)
 
     if p == "add":
@@ -122,18 +136,21 @@ def qconv_apply(qparams: dict, x: QTensor, spec: ConvSpec, out_frac_bits: int,
         x_pre, w_pre, acc_fb = _add_preshifts(x.frac_bits, w.frac_bits)
         y = K.add_conv2d(x.q, w.q, _bias_acc(bias, acc_fb), method=method,
                          requant_shift=acc_fb - out_frac_bits,
-                         x_preshift=x_pre, w_preshift=w_pre)
+                         x_preshift=x_pre, w_preshift=w_pre, act=act,
+                         config=cfgs.get("main"))
         return QTensor(y, out_frac_bits)
 
     raise ValueError(p)
 
 
 def _qconv_apply_lax(qparams: dict, x: QTensor, spec: ConvSpec,
-                     out_frac_bits: int) -> QTensor:
+                     out_frac_bits: int, act: Optional[str] = None) -> QTensor:
     """Raw-lax integer path for layer shapes outside the kernel layer's
     stride-1/SAME envelope — all five primitives, same Algorithm-1
     arithmetic as the ops dispatch (int32 accumulation, accumulator-scale
-    bias, round-to-nearest requantization)."""
+    bias, fused act, round-to-nearest requantization)."""
+    from repro.kernels.common import apply_act
+
     p = spec.primitive
     bias = qparams.get("b")
 
@@ -141,6 +158,7 @@ def _qconv_apply_lax(qparams: dict, x: QTensor, spec: ConvSpec,
         b_acc = _bias_acc(bias, acc_fb)
         if b_acc is not None:
             acc = acc + b_acc
+        acc = apply_act(acc, act)
         return QTensor(requantize(acc, acc_fb, out_frac_bits), out_frac_bits)
 
     if p in ("standard", "grouped"):

@@ -1,0 +1,12 @@
+"""repro.graph — layer-graph IR, lowering passes (BN fold + single-sweep
+PTQ + requant/ReLU/pool fusion) and the single-jit integer executor with
+per-layer cost attribution. See EXPERIMENTS.md §Per-layer."""
+from .ir import Graph, Node, build_cnn_graph, params_for
+from .lower import Plan, PlanNode, annotate, lower
+from .executor import CompiledPlan, float_forward, unfused_forward
+
+__all__ = [
+    "Graph", "Node", "build_cnn_graph", "params_for",
+    "Plan", "PlanNode", "annotate", "lower",
+    "CompiledPlan", "float_forward", "unfused_forward",
+]

@@ -1,0 +1,224 @@
+"""Plan executor: one jit for the whole integer network.
+
+:class:`CompiledPlan` takes a lowered :class:`~repro.graph.lower.Plan`,
+resolves each node's execution method (pallas / xla) and tuned kernel
+schedule ONCE (at first trace, via ``repro.tune``), and jits the entire
+forward as a single function — the one-compiled-artifact-per-model regime
+the ROADMAP's north star calls for. Inside the jit the activations stay
+int8 from the input quantization to the global average pool: ReLU runs as
+the conv kernels' accumulator-scale epilogue and pooling runs on int8 codes
+(``kernels.ops.maxpool2d``), so there are zero float round-trips between
+conv layers.
+
+Three more entry points share the plan:
+
+* :func:`float_forward` — the float inference interpreter over the IR
+  (``models.convnet.cnn_forward``'s eval path).
+* :func:`unfused_forward` — the OLD float-bounce regime reconstructed from
+  the same plan (dequantize -> float ReLU/BN/pool -> requantize at the same
+  annotated scales). Bit-exact with the fused path by construction (relu
+  and max commute with the positive pow2 scale; requantization is monotone
+  with ``rshift_round(0) == 0``) — pinned by tests/test_graph.py and used
+  as the fused-vs-unfused baseline in benchmarks/layer_bench.py.
+* :meth:`CompiledPlan.profile` — instrumented per-layer attribution:
+  measured latency, analytic MACs and the paper-calibrated MCU
+  latency/energy model per node ("Not All Ops Are Created Equal": cost is
+  a per-layer, not per-network, quantity).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.energy import MCUModel
+from repro.core.qconv import _kernel_layer_ok, qconv_apply
+from repro.core.quantize import QTensor, quantize, requantize
+from repro.kernels.common import apply_act
+
+from .ir import Graph
+from .lower import Plan, PlanNode
+
+
+def _qbn_apply(qp: dict, x: QTensor, out_fb: int, act: Optional[str]) -> QTensor:
+    """Integer per-channel BN affine: int8 act * int16-range multiplier +
+    bias at accumulator scale, fused act, Algorithm-1 requantization. Pure
+    int32 jnp — identical under both methods, so it never breaks
+    pallas==xla."""
+    acc = x.q.astype(jnp.int32) * qp["a"] + qp["b"]
+    acc = apply_act(acc, act)
+    return QTensor(requantize(acc, x.frac_bits + qp["a_frac_bits"], out_fb),
+                   out_fb)
+
+
+class CompiledPlan:
+    """Callable integer-only forward for one lowered plan.
+
+    ``method`` selects the kernel engine for every eligible node:
+    ``"pallas"`` (fused TPU kernels; raises on layers outside the kernel
+    envelope), ``"xla"`` (jnp integer oracles), or ``"auto"`` (pallas where
+    expressible, oracle fallback elsewhere). Schedules come from the
+    ``repro.tune`` cache/fallback, resolved once per compile and recorded in
+    ``self.node_configs``.
+    """
+
+    def __init__(self, plan: Plan, *, method: str = "auto", jit: bool = True):
+        if method not in ("pallas", "xla", "auto"):
+            raise ValueError(f"unknown method {method!r}; expected "
+                             "'pallas', 'xla' or 'auto'")
+        self.plan = plan
+        self.method = method
+        self.node_configs: Dict[str, dict] = {}
+        self.traces = 0                  # python-side compile counter
+        self._fn = jax.jit(self._forward) if jit else self._forward
+
+    # ------------------------------------------------------------- dispatch
+
+    def _node_method(self, node: PlanNode) -> str:
+        if (self.method == "auto" and node.op == "qconv"
+                and not _kernel_layer_ok(node.spec)):
+            return "xla"         # auto degrades to the oracle...
+        # ...but an explicit "pallas" keeps the node on pallas so qconv_apply
+        # raises for out-of-envelope layers instead of silently running xla
+        return "pallas" if self.method in ("pallas", "auto") else "xla"
+
+    def _resolve_configs(self, node: PlanNode, xq: QTensor) -> Optional[dict]:
+        """Tuned-schedule lookup for one qconv node, keyed on the concrete
+        traced shapes; runs once per compile (inside the single trace)."""
+        if self._node_method(node) != "pallas":
+            return None
+        from repro import tune
+        n, h, w, c = xq.q.shape
+        spec = node.spec
+        p = spec.primitive
+        if p in ("standard", "grouped"):
+            g = spec.groups if p == "grouped" else 1
+            cfg = {"main": tune.get_config(
+                tune.sig_conv2d(n, h, w, c, spec.out_channels,
+                                spec.kernel_size, g), "int8")}
+        elif p == "dws":
+            cfg = {"dw": tune.get_config(
+                       tune.sig_depthwise2d(n, h, w, c, spec.kernel_size),
+                       "int8"),
+                   "pw": tune.get_config(
+                       tune.sig_conv2d(n, h, w, c, spec.out_channels, 1, 1),
+                       "int8")}
+        elif p == "shift":
+            cfg = {"main": tune.get_config(
+                tune.sig_shift_conv2d(n, h, w, c, spec.out_channels), "int8")}
+        else:                            # add
+            cfg = {"main": tune.get_config(
+                tune.sig_add_conv2d(n, h, w, c, spec.out_channels,
+                                    spec.kernel_size), "int8")}
+        self.node_configs[node.name] = cfg
+        return cfg
+
+    # -------------------------------------------------------------- forward
+
+    def _run_node(self, node: PlanNode, h):
+        from repro.kernels import ops as K
+        if node.op == "qconv":
+            m = self._node_method(node)
+            return qconv_apply(node.qparams, h, node.spec, node.out_fb,
+                               method=m, act=node.act,
+                               configs=self._resolve_configs(node, h))
+        if node.op == "qbn":
+            return _qbn_apply(node.qparams, h, node.out_fb, node.act)
+        if node.op == "maxpool":
+            q = K.maxpool2d(h.q, window=node.attrs["window"],
+                            stride=node.attrs["stride"],
+                            method=self._node_method(node))
+            return QTensor(q, h.frac_bits)
+        if node.op == "gap":             # head boundary: int8 -> float
+            return jnp.mean(h.dequantize(), axis=(1, 2))
+        if node.op == "dense":
+            return h @ node.qparams["w"]
+        raise ValueError(node.op)
+
+    def _forward(self, x):
+        self.traces += 1                 # counts jit traces, not calls
+        h = quantize(x, self.plan.in_fb)
+        for node in self.plan.nodes:
+            h = self._run_node(node, h)
+        return h
+
+    def __call__(self, x):
+        return self._fn(x)
+
+    # ------------------------------------------------- per-layer attribution
+
+    def profile(self, x, *, f_mhz: float = 84.0, reps: int = 3) -> List[dict]:
+        """Instrumented execution: one row per plan node with measured
+        latency (node jitted standalone), analytic MACs, and the
+        paper-calibrated MCU latency/energy model (scalar vs SIMD) for the
+        conv nodes — the paper's per-layer Table-2 reading."""
+        from repro.tune.runner import time_config
+        mcu = MCUModel()
+        rows: List[dict] = []
+        h = quantize(x, self.plan.in_fb)
+        for node in self.plan.nodes:
+            fn = jax.jit(lambda v, _n=node: self._run_node(_n, v))
+            us = time_config(fn, h, reps=reps, warmup=1)
+            row = dict(name=node.name, op=node.op, us=us, macs=0,
+                       primitive=node.spec.primitive if node.spec else None)
+            if node.op == "qconv":
+                width = node.attrs["in_hw"][1]
+                row["macs"] = node.spec.mac_count(width)
+                row["mcu_lat_scalar_ms"] = 1e3 * mcu.latency_s(
+                    node.spec, width, simd=False, f_mhz=f_mhz)
+                row["mcu_lat_simd_ms"] = 1e3 * mcu.latency_s(
+                    node.spec, width, simd=True, f_mhz=f_mhz)
+                row["mcu_e_scalar_mj"] = mcu.energy_mj(
+                    node.spec, width, simd=False, f_mhz=f_mhz)
+                row["mcu_e_simd_mj"] = mcu.energy_mj(
+                    node.spec, width, simd=True, f_mhz=f_mhz)
+            h = fn(h)
+            rows.append(row)
+        return rows
+
+
+# ---------------------------------------------------------------- references
+
+def float_forward(graph: Graph, params: dict, x: jax.Array) -> jax.Array:
+    """Float inference over the IR (BN inference buffers, no stat
+    re-estimation) — the eval path of ``models.convnet.cnn_forward``; one
+    walk of ``lower.interpret``, the same interpreter the calibration sweep
+    runs."""
+    from .lower import interpret
+    return interpret(graph, params, x)["acts"][graph.output]
+
+
+def unfused_forward(plan: Plan, x, *, method: str = "xla"):
+    """The pre-graph float-bounce regime, reconstructed from the same plan:
+    every layer dequantizes to float for ReLU/BN-act/pool and re-quantizes
+    at the node's annotated scale before the next conv. Same integer conv
+    arithmetic, same scales — bit-exact with :class:`CompiledPlan` (the
+    fused epilogues commute with dequantization), but with the two float
+    round-trips per block the fusion pass removes. Baseline side of
+    ``benchmarks/layer_bench.py``'s fused-vs-unfused comparison."""
+    h = quantize(x, plan.in_fb)
+    for node in plan.nodes:
+        if node.op == "qconv":
+            yq = qconv_apply(node.qparams, h, node.spec, node.out_fb,
+                             method=method, act=None)
+            y = yq.dequantize()
+            if node.act == "relu":
+                y = jax.nn.relu(y)
+            h = quantize(y, node.out_fb)
+        elif node.op == "qbn":
+            zq = _qbn_apply(node.qparams, h, node.out_fb, act=None)
+            y = zq.dequantize()
+            if node.act == "relu":
+                y = jax.nn.relu(y)
+            h = quantize(y, node.out_fb)
+        elif node.op == "maxpool":
+            from repro.kernels.ref import maxpool2d_ref
+            y = maxpool2d_ref(h.dequantize(), window=node.attrs["window"],
+                              stride=node.attrs["stride"])
+            h = quantize(y, node.out_fb)
+        elif node.op == "gap":
+            h = jnp.mean(h.dequantize(), axis=(1, 2))
+        elif node.op == "dense":
+            h = h @ node.qparams["w"]
+    return h

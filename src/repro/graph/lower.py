@@ -1,0 +1,231 @@
+"""Lowering passes: float graph + params + calibration data -> integer Plan.
+
+Three passes, replacing the old ``calibrate_bn`` + ``quantize_cnn`` double
+sweep with ONE pass over the calibration data:
+
+1. **annotate** — run the calibration batch through the float graph once,
+   recording every node's activation. BN statistics are read off the conv
+   outputs *during the same sweep* (the old pipeline ran the data once in
+   ``calibrate_bn`` and then a second time inside ``quantize_cnn`` to pick
+   scales; the activations are identical, so one sweep suffices — pinned by
+   tests/test_graph.py).
+2. **quantize** — per conv block: BN-fold the foldable primitives
+   (``core/folding.fold``), per-tensor power-of-two PTQ
+   (``core/quantize``), output frac bits from the post-BN+ReLU calibration
+   activation (paper Eq. 4). Add-conv cannot fold (|W-x| is not linear in
+   W), so its BN is lowered to an INTEGER per-channel affine (``qbn`` node:
+   int16 multiplier + accumulator-scale bias + Algorithm-1 shift) instead
+   of the old dequantize->float-BN bounce.
+3. **fuse** — chain each layer's requantization into its consumer: ReLU
+   becomes the producer kernel's ``act="relu"`` epilogue (applied at
+   accumulator scale — bit-exact with float relu after dequantization),
+   max-pool becomes an int8 ``maxpool`` node at the producer's scale, and
+   every consumer reads its input at the producer's annotated frac bits.
+   Activations therefore stay int8 from the first conv to the global
+   average pool: zero float round-trips between conv layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import apply, batchnorm_apply, fold
+from repro.core.folding import FOLDABLE
+from repro.core.primitives import ConvSpec
+from repro.core.qconv import quantize_conv_params
+from repro.core.quantize import frac_bits_for
+
+from .ir import Graph, Node, params_for
+
+PLAN_OPS = ("qconv", "qbn", "maxpool", "gap", "dense")
+
+
+@dataclasses.dataclass
+class PlanNode:
+    """One executable step of the lowered plan.
+
+    ``qparams`` holds the node's quantized parameters (QTensor leaves for
+    qconv, int32 multiplier/bias for qbn, the float head for dense).
+    ``in_fb``/``out_fb`` are the annotated power-of-two scales; the implied
+    requantization shift is chained into the kernel epilogue by the
+    executor. ``act`` is the fused activation ("relu" or None).
+    """
+
+    name: str
+    op: str
+    spec: Optional[ConvSpec] = None
+    qparams: Optional[dict] = None
+    in_fb: Optional[int] = None
+    out_fb: Optional[int] = None
+    act: Optional[str] = None
+    attrs: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.op not in PLAN_OPS:
+            raise ValueError(f"unknown plan op {self.op!r}; known: {PLAN_OPS}")
+
+
+@dataclasses.dataclass
+class Plan:
+    """Topologically-ordered integer execution plan for one model."""
+
+    nodes: Tuple[PlanNode, ...]
+    in_fb: int                      # input quantization frac bits
+    graph: Graph
+
+    def conv_nodes(self) -> Tuple[PlanNode, ...]:
+        return tuple(n for n in self.nodes if n.op == "qconv")
+
+
+# -------------------------------------------- float interpreter + annotate --
+
+def interpret(graph: Graph, params: dict, x: jax.Array, *,
+              calibrate: bool = False) -> dict:
+    """THE float interpreter over the IR — the single graph walk behind
+    float inference (``executor.float_forward``), deployment-time BN
+    re-estimation (``models.convnet.calibrate_bn``) and the lowering
+    calibration sweep (:func:`annotate`). ``calibrate=True`` overwrites each
+    BN node's buffers with the activation mean/var of its producing conv
+    (recorded in the returned ``"bn"`` dict) before normalizing."""
+    node_params = params_for(graph, params)
+    acts: Dict[str, jax.Array] = {graph.input: x}
+    bn_calib: Dict[str, dict] = {}
+    for n in graph.nodes:
+        h = acts[n.inputs[0]]
+        if n.op == "conv":
+            acts[n.name] = apply(node_params[n.name], h, n.spec)
+        elif n.op == "bn":
+            bn = node_params[n.name]
+            if calibrate:
+                bn = dict(bn,
+                          mean=jnp.mean(h, axis=(0, 1, 2)).astype(jnp.float32),
+                          var=jnp.var(h, axis=(0, 1, 2)).astype(jnp.float32))
+                bn_calib[n.name] = bn
+            acts[n.name] = batchnorm_apply(bn, h)
+        elif n.op == "relu":
+            acts[n.name] = jax.nn.relu(h)
+        elif n.op == "pool":
+            from repro.kernels.ref import maxpool2d_ref
+            acts[n.name] = maxpool2d_ref(h, window=n.attr("window", 2),
+                                         stride=n.attr("stride", 2))
+        elif n.op == "gap":
+            acts[n.name] = jnp.mean(h, axis=(1, 2))
+        elif n.op == "dense":
+            acts[n.name] = h @ node_params[n.name]["w"]
+    return {"acts": acts, "bn": bn_calib, "params": node_params}
+
+
+def annotate(graph: Graph, params: dict, calib_x: jax.Array) -> dict:
+    """One calibration sweep: every node's float activation + calibrated BN
+    buffers (activation mean/var of the producing conv, as deployment-time
+    BN re-estimation does)."""
+    return interpret(graph, params, calib_x, calibrate=True)
+
+
+# ----------------------------------------------- pass 2+3: quantize + fuse --
+
+def _quantize_bn_affine(bn: dict, in_fb: int, eps: float = 1e-5) -> dict:
+    """Integer lowering of an (unfoldable) BN: y = a*x + b as a per-channel
+    multiplier at a power-of-two scale plus a bias at the accumulator scale
+    — NNoM-style integer BN, no float bounce. The multiplier gets a
+    15-frac-bit budget (magnitude ≤ 2^15, held in int32 — one past int16 on
+    exact-pow2 maxima), keeping its quantization error two orders below the
+    int8 activation LSB."""
+    a = bn["gamma"] * (bn["var"] + eps) ** -0.5
+    b = bn["beta"] - bn["mean"] * a
+    m = float(jnp.max(jnp.abs(a)))
+    fb_a = 15 - math.ceil(math.log2(m)) if m > 0 else 15
+    # keep the accumulator (int8 act * mult + bias) inside int32: cap the
+    # accumulator scale at 24 frac bits AND low enough that the largest
+    # |b| * 2^acc_fb stays under 2^30 — a large BN offset would otherwise
+    # wrap silently on the astype(int32)
+    mb = float(jnp.max(jnp.abs(b)))
+    cap = 24 if mb <= 0 else min(24, 30 - math.ceil(math.log2(mb)))
+    fb_a = max(0, min(fb_a, cap - in_fb))
+    acc_fb = in_fb + fb_a
+    return {
+        "a": jnp.round(a * 2.0 ** fb_a).astype(jnp.int32),
+        "b": jnp.round(b * 2.0 ** acc_fb).astype(jnp.int32),
+        "a_frac_bits": fb_a,
+    }
+
+
+def lower(graph: Graph, params: dict, calib_x: jax.Array) -> Plan:
+    """Lower a float graph to an integer-only Plan (single calibration
+    sweep; see module docstring for the pass structure)."""
+    ann = annotate(graph, params, calib_x)
+    acts, bn_calib, node_params = ann["acts"], ann["bn"], ann["params"]
+    in_fb = frac_bits_for(calib_x)
+
+    # producer scale chaining: value name -> frac bits of its int8 encoding
+    fb: Dict[str, int] = {graph.input: in_fb}
+    plan_nodes = []
+    consumed = set()                   # bn/relu nodes fused into a producer
+
+    for n in graph.nodes:
+        if n.name in consumed:
+            continue
+        src = n.inputs[0]
+        if n.op == "conv":
+            spec = n.spec
+            conv_p = node_params[n.name]
+            # fuse the conv -> bn -> relu chain of this block
+            bnode = next((c for c in graph.consumers(n.name) if c.op == "bn"),
+                         None)
+            rnode = None
+            if bnode is not None:
+                rnode = next((c for c in graph.consumers(bnode.name)
+                              if c.op == "relu"), None)
+            tail = rnode or bnode or n           # last fused float node
+            out_fb = frac_bits_for(acts[tail.name])
+            h_in, w_in = acts[src].shape[1], acts[src].shape[2]
+            if bnode is not None and spec.primitive in FOLDABLE:
+                qp = quantize_conv_params(
+                    fold(conv_p, bn_calib[bnode.name], spec), spec)
+                plan_nodes.append(PlanNode(
+                    n.name, "qconv", spec=spec, qparams=qp, in_fb=fb[src],
+                    out_fb=out_fb, act="relu" if rnode is not None else None,
+                    attrs={"in_hw": (h_in, w_in)}))
+                consumed.update(c.name for c in (bnode, rnode) if c)
+                fb[tail.name] = out_fb
+            elif bnode is not None:              # add-conv: integer BN node
+                conv_fb = frac_bits_for(acts[n.name])
+                qp = quantize_conv_params(conv_p, spec)
+                plan_nodes.append(PlanNode(
+                    n.name, "qconv", spec=spec, qparams=qp, in_fb=fb[src],
+                    out_fb=conv_fb, act=None, attrs={"in_hw": (h_in, w_in)}))
+                fb[n.name] = conv_fb
+                plan_nodes.append(PlanNode(
+                    bnode.name, "qbn",
+                    qparams=_quantize_bn_affine(bn_calib[bnode.name], conv_fb),
+                    in_fb=conv_fb, out_fb=out_fb,
+                    act="relu" if rnode is not None else None))
+                consumed.update(c.name for c in (bnode, rnode) if c)
+                fb[tail.name] = out_fb
+            else:                                # bare conv (no BN in graph)
+                qp = quantize_conv_params(conv_p, spec)
+                plan_nodes.append(PlanNode(
+                    n.name, "qconv", spec=spec, qparams=qp, in_fb=fb[src],
+                    out_fb=out_fb, act=None, attrs={"in_hw": (h_in, w_in)}))
+                fb[n.name] = out_fb
+        elif n.op == "pool":
+            # int8 max-pool at the producer's scale (max commutes with the
+            # positive pow2 dequantization, so this is exact)
+            plan_nodes.append(PlanNode(
+                n.name, "maxpool", in_fb=fb[src], out_fb=fb[src],
+                attrs={"window": n.attr("window", 2),
+                       "stride": n.attr("stride", 2)}))
+            fb[n.name] = fb[src]
+        elif n.op == "gap":
+            plan_nodes.append(PlanNode(n.name, "gap", in_fb=fb[src]))
+        elif n.op == "dense":
+            plan_nodes.append(PlanNode(
+                n.name, "dense", qparams={"w": node_params[n.name]["w"]}))
+        elif n.op in ("bn", "relu"):
+            raise ValueError(f"dangling {n.op} node {n.name!r}: lowering "
+                             "only fuses bn/relu chained behind a conv")
+    return Plan(tuple(plan_nodes), in_fb, graph)

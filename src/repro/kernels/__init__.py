@@ -6,6 +6,11 @@ conv_shift  : shift conv, shifts fused into the im2col sampling (paper §3.3)
 conv_add    : AdderNet L1 conv — VPU only, no MXU analogue (paper: no SIMD)
 conv1d_causal: Mamba/Jamba depthwise causal conv1d (paper primitive in LMs)
 matmul_q8   : tiled MXU matmul with int8 power-of-two requantization
+pool        : int8 max-pool (the graph executor's integer pool boundary)
+
+Every conv kernel + matmul_q8 takes ``act="relu"`` — the fused activation
+epilogue at accumulator scale the repro.graph executor chains between
+requantized layers.
 """
 from .ops import (conv2d, depthwise2d, shift_conv2d, add_conv2d,
-                  causal_conv1d, matmul)
+                  causal_conv1d, matmul, maxpool2d)

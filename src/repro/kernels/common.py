@@ -76,6 +76,21 @@ def apply_requant(acc: jax.Array, requant_shift: int | None) -> jax.Array:
     return jnp.clip(rshift_round(acc, requant_shift), -128, 127)
 
 
+def apply_act(acc: jax.Array, act: str | None) -> jax.Array:
+    """Fused activation epilogue, applied at ACCUMULATOR scale (int32/f32),
+    i.e. before ``apply_requant``. Requantization is a monotonic shift with
+    ``rshift_round(0) == 0``, so ``relu`` before the shift is bit-exact with
+    relu on the requantized int8 (and with float relu after dequantization)
+    — which is what lets the graph executor fuse the whole
+    conv+BN+ReLU block into one kernel with zero float round-trips.
+    """
+    if act is None:
+        return acc
+    if act == "relu":
+        return jnp.maximum(acc, 0)
+    raise ValueError(f"unknown act {act!r}; expected 'relu' or None")
+
+
 def effective_block(dim: int, block: int) -> int:
     """The block size a divisor-gridded kernel actually runs: the largest
     divisor of ``dim`` that is <= ``block``. Single source of truth shared by

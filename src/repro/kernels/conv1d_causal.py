@@ -19,10 +19,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, cdiv, effective_block
+from .common import acc_dtype, apply_act, cdiv, effective_block
 
 
-def _kernel(xa_ref, xb_ref, w_ref, o_ref, *, k, bl, out_dtype):
+def _kernel(xa_ref, xb_ref, w_ref, o_ref, *, k, bl, out_dtype, act=None):
     adt = acc_dtype(xa_ref.dtype)
     # window rows [0, bl + k - 1): current block + first k-1 rows of next
     window = jnp.concatenate([xa_ref[0], xb_ref[0, :k - 1]], axis=0).astype(adt)
@@ -30,26 +30,33 @@ def _kernel(xa_ref, xb_ref, w_ref, o_ref, *, k, bl, out_dtype):
     acc = jnp.zeros((bl, w.shape[-1]), adt)
     for kk in range(k):                       # static unroll, VPU MACs
         acc = acc + window[kk:kk + bl, :] * w[kk][None, :]
+    acc = apply_act(acc, act)
     o_ref[0] = acc.astype(out_dtype)
 
 
 def causal_conv1d(x: jax.Array, w: jax.Array, *, block_l: int = 512,
-                  block_c: int = 512, interpret: bool = True,
+                  block_c: int = 512, act: str | None = None,
+                  interpret: bool = True,
                   config: dict | None = None) -> jax.Array:
     """out[b,l,d] = sum_k w[k,d] * x[b, l-K+1+k, d]. x: (B,L,D); w: (K,D).
 
-    ``config`` (a repro.tune schedule dict) overrides the block parameters.
+    ``act="relu"`` fuses the activation into the epilogue (inference only —
+    the ops-layer custom VJP assumes a linear kernel, so the differentiable
+    entry point does not expose it). ``config`` (a repro.tune schedule dict)
+    overrides the block parameters.
     """
     if config:
         block_l = int(config.get("block_l", block_l))
         block_c = int(config.get("block_c", block_c))
-    return _causal_conv1d(x, w, block_l=block_l, block_c=block_c,
+    return _causal_conv1d(x, w, block_l=block_l, block_c=block_c, act=act,
                           interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("block_l", "block_c", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_l", "block_c", "act",
+                                             "interpret"))
 def _causal_conv1d(x: jax.Array, w: jax.Array, *, block_l: int = 512,
-                   block_c: int = 512, interpret: bool = True) -> jax.Array:
+                   block_c: int = 512, act: str | None = None,
+                   interpret: bool = True) -> jax.Array:
     b, l, d = x.shape
     k = w.shape[0]
     if w.ndim == 3:                           # accept (K, 1, D)
@@ -59,7 +66,7 @@ def _causal_conv1d(x: jax.Array, w: jax.Array, *, block_l: int = 512,
     nl = l // bl
     # left halo pad (K-1) + one trailing zero block for the i+1 lookahead ref
     xp = jnp.pad(x, ((0, 0), (k - 1, bl), (0, 0)))
-    kern = functools.partial(_kernel, k=k, bl=bl, out_dtype=x.dtype)
+    kern = functools.partial(_kernel, k=k, bl=bl, out_dtype=x.dtype, act=act)
     return pl.pallas_call(
         kern,
         grid=(b, nl, d // bc),

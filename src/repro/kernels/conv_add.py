@@ -17,11 +17,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, apply_requant, effective_block
+from .common import acc_dtype, apply_act, apply_requant, effective_block
 
 
 def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift,
-            x_preshift, w_preshift, bias_ref=None):
+            x_preshift, w_preshift, act=None, bias_ref=None):
     adt = acc_dtype(x_ref.dtype)
     cx = x_ref.shape[-1]
     bco = w_ref.shape[-1]
@@ -39,33 +39,35 @@ def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift,
             acc = acc - jnp.sum(jnp.abs(a[:, :, None] - wv[None, :, :]), axis=1)
     if bias_ref is not None:                # bias at accumulator scale
         acc = acc + bias_ref[...].astype(adt)[None, :]
+    acc = apply_act(acc, act)
     acc = apply_requant(acc, requant_shift)
     o_ref[0] = acc.reshape(hout, wout, bco).astype(out_dtype)
 
 
 def add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
                requant_shift: int | None = None, x_preshift: int = 0,
-               w_preshift: int = 0, out_dtype=None,
+               w_preshift: int = 0, act: str | None = None, out_dtype=None,
                interpret: bool = True, config: dict | None = None) -> jax.Array:
     """SAME stride-1 AdderNet conv (Eq. 3). x: (N,H,W,Cx); w: (HK,HK,Cx,Cy).
 
     ``bias`` (optional, (Cy,)) is added at accumulator scale before the
-    requantization epilogue. ``config`` (a repro.tune schedule dict)
+    requantization epilogue; ``act="relu"`` fuses the activation at
+    accumulator scale after it. ``config`` (a repro.tune schedule dict)
     overrides the block parameters.
     """
     if config:
         block_co = int(config.get("block_co", block_co))
     return _add_conv2d(x, w, bias, block_co=block_co, requant_shift=requant_shift,
-                       x_preshift=x_preshift, w_preshift=w_preshift,
+                       x_preshift=x_preshift, w_preshift=w_preshift, act=act,
                        out_dtype=out_dtype, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_co", "requant_shift",
                                              "x_preshift", "w_preshift",
-                                             "out_dtype", "interpret"))
+                                             "act", "out_dtype", "interpret"))
 def _add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
                 requant_shift: int | None = None, x_preshift: int = 0,
-                w_preshift: int = 0, out_dtype=None,
+                w_preshift: int = 0, act: str | None = None, out_dtype=None,
                 interpret: bool = True) -> jax.Array:
     n, h, wd, cx = x.shape
     hk, _, _, cy = w.shape
@@ -76,7 +78,8 @@ def _add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
     bco = effective_block(cy, block_co)
     kern = functools.partial(_kernel, hk=hk, hout=h, wout=wd,
                              out_dtype=out_dtype, requant_shift=requant_shift,
-                             x_preshift=x_preshift, w_preshift=w_preshift)
+                             x_preshift=x_preshift, w_preshift=w_preshift,
+                             act=act)
     in_specs = [
         pl.BlockSpec((1, hp, wp, cx), lambda b, cb: (b, 0, 0, 0)),
         pl.BlockSpec((hk, hk, cx, bco), lambda b, cb: (0, 0, 0, cb)),
@@ -87,7 +90,7 @@ def _add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
             _kernel(x_ref, w_ref, o_ref, hk=hk, hout=h, wout=wd,
                     out_dtype=out_dtype, requant_shift=requant_shift,
                     x_preshift=x_preshift, w_preshift=w_preshift,
-                    bias_ref=b_ref)
+                    act=act, bias_ref=b_ref)
         kern = kern_bias
         in_specs.append(pl.BlockSpec((bco,), lambda b, cb: (cb,)))
         args.append(bias)

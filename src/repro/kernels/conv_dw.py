@@ -15,10 +15,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, apply_requant, effective_block
+from .common import acc_dtype, apply_act, apply_requant, effective_block
 
 
-def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift):
+def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift,
+            act=None):
     adt = acc_dtype(x_ref.dtype)
     bc = w_ref.shape[-1]
     acc = jnp.zeros((hout, wout, bc), adt)
@@ -26,27 +27,32 @@ def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift):
         for j in range(hk):
             acc = acc + (x_ref[0, i:i + hout, j:j + wout, :].astype(adt)
                          * w_ref[i, j].astype(adt)[None, None, :])
+    acc = apply_act(acc, act)
     acc = apply_requant(acc, requant_shift)
     o_ref[0] = acc.astype(out_dtype)
 
 
 def depthwise2d(x: jax.Array, w_dw: jax.Array, *, block_c: int = 128,
-                requant_shift: int | None = None, out_dtype=None,
+                requant_shift: int | None = None, act: str | None = None,
+                out_dtype=None,
                 interpret: bool = True, config: dict | None = None) -> jax.Array:
     """SAME stride-1 depthwise conv. x: (N,H,W,C); w_dw: (HK,HK,C).
 
-    ``config`` (a repro.tune schedule dict) overrides the block parameters.
+    ``act="relu"`` fuses the activation at accumulator scale before the
+    requantization epilogue. ``config`` (a repro.tune schedule dict)
+    overrides the block parameters.
     """
     if config:
         block_c = int(config.get("block_c", block_c))
     return _depthwise2d(x, w_dw, block_c=block_c, requant_shift=requant_shift,
-                        out_dtype=out_dtype, interpret=interpret)
+                        act=act, out_dtype=out_dtype, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_c", "requant_shift",
-                                             "out_dtype", "interpret"))
+                                             "act", "out_dtype", "interpret"))
 def _depthwise2d(x: jax.Array, w_dw: jax.Array, *, block_c: int = 128,
-                 requant_shift: int | None = None, out_dtype=None,
+                 requant_shift: int | None = None, act: str | None = None,
+                 out_dtype=None,
                  interpret: bool = True) -> jax.Array:
     n, h, wd, c = x.shape
     hk = w_dw.shape[0]
@@ -58,7 +64,8 @@ def _depthwise2d(x: jax.Array, w_dw: jax.Array, *, block_c: int = 128,
     hp, wp = xp.shape[1], xp.shape[2]
     bc = effective_block(c, block_c)
     kern = functools.partial(_kernel, hk=hk, hout=h, wout=wd,
-                             out_dtype=out_dtype, requant_shift=requant_shift)
+                             out_dtype=out_dtype, requant_shift=requant_shift,
+                             act=act)
     return pl.pallas_call(
         kern,
         grid=(n, c // bc),

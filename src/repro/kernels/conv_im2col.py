@@ -25,11 +25,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, apply_requant, effective_block
+from .common import acc_dtype, apply_act, apply_requant, effective_block
 
 
 def _kernel(x_ref, w_ref, o_ref, *, hk: int, hout: int, wout: int,
-            out_dtype, requant_shift: int | None, bias_ref=None):
+            out_dtype, requant_shift: int | None, act: str | None = None,
+            bias_ref=None):
     cx = x_ref.shape[-1]
     bco = w_ref.shape[-1]
     adt = acc_dtype(x_ref.dtype)
@@ -43,32 +44,37 @@ def _kernel(x_ref, w_ref, o_ref, *, hk: int, hout: int, wout: int,
                                 preferred_element_type=adt)
     if bias_ref is not None:
         acc = acc + bias_ref[...].astype(adt)[None, :]
-    # Algorithm 1: round-to-nearest shift, clip, int8
+    # fused activation at accumulator scale, then Algorithm 1: round-to-
+    # nearest shift, clip, int8
+    acc = apply_act(acc, act)
     acc = apply_requant(acc, requant_shift)
     o_ref[0] = acc.reshape(hout, wout, bco).astype(out_dtype)
 
 
 def conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
                   block_co: int = 128, requant_shift: int | None = None,
-                  out_dtype=None, interpret: bool = True,
+                  act: str | None = None, out_dtype=None,
+                  interpret: bool = True,
                   config: dict | None = None) -> jax.Array:
     """SAME-padded stride-1 conv. x: (N,H,W,Cx); w: (HK,HK,Cx/g,Cy).
 
     int8 x int8 -> int8 when ``requant_shift`` is given (int32 accumulate);
-    float paths accumulate in f32. ``config`` (a repro.tune schedule dict)
-    overrides the block parameters.
+    float paths accumulate in f32. ``act="relu"`` fuses the activation at
+    accumulator scale (after bias, before requantization). ``config`` (a
+    repro.tune schedule dict) overrides the block parameters.
     """
     if config:
         block_co = int(config.get("block_co", block_co))
     return _conv2d_im2col(x, w, bias, groups=groups, block_co=block_co,
-                          requant_shift=requant_shift, out_dtype=out_dtype,
-                          interpret=interpret)
+                          requant_shift=requant_shift, act=act,
+                          out_dtype=out_dtype, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("groups", "block_co", "requant_shift",
-                                             "out_dtype", "interpret"))
+                                             "act", "out_dtype", "interpret"))
 def _conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
                    block_co: int = 128, requant_shift: int | None = None,
+                   act: str | None = None,
                    out_dtype=None, interpret: bool = True) -> jax.Array:
     n, h, wd, cx = x.shape
     hk, _, cxg, cy = w.shape
@@ -83,7 +89,8 @@ def _conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
     n_co = co_per_g // bco
 
     kern = functools.partial(_kernel, hk=hk, hout=h, wout=wd,
-                             out_dtype=out_dtype, requant_shift=requant_shift)
+                             out_dtype=out_dtype, requant_shift=requant_shift,
+                             act=act)
     in_specs = [
         pl.BlockSpec((1, hp, wp, cxg), lambda b, g, c: (b, 0, 0, g)),
         pl.BlockSpec((hk, hk, cxg, bco),
@@ -91,13 +98,10 @@ def _conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
     ]
     args = [xp, w]
     if bias is not None:
-        kern = functools.partial(_kernel, hk=hk, hout=h, wout=wd,
-                                 out_dtype=out_dtype, requant_shift=requant_shift)
-
         def kern_bias(x_ref, w_ref, b_ref, o_ref):
             _kernel(x_ref, w_ref, o_ref, hk=hk, hout=h, wout=wd,
                     out_dtype=out_dtype, requant_shift=requant_shift,
-                    bias_ref=b_ref)
+                    act=act, bias_ref=b_ref)
         kern = kern_bias
         in_specs.append(pl.BlockSpec((bco,), lambda b, g, c, _n=n_co: (g * _n + c,)))
         args.append(bias)

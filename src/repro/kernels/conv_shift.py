@@ -17,11 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, apply_requant, effective_block
+from .common import acc_dtype, apply_act, apply_requant, effective_block
 
 
 def _kernel(x_ref, w_ref, o_ref, *, groups, hout, wout, pad, out_dtype,
-            requant_shift, bias_ref=None):
+            requant_shift, act=None, bias_ref=None):
     adt = acc_dtype(x_ref.dtype)
     bco = w_ref.shape[-1]
     acc = jnp.zeros((hout * wout, bco), adt)
@@ -33,18 +33,21 @@ def _kernel(x_ref, w_ref, o_ref, *, groups, hout, wout, pad, out_dtype,
                             preferred_element_type=adt)
     if bias_ref is not None:                 # bias at accumulator scale
         acc = acc + bias_ref[...].astype(adt)[None, :]
+    acc = apply_act(acc, act)
     acc = apply_requant(acc, requant_shift)
     o_ref[0] = acc.reshape(hout, wout, bco).astype(out_dtype)
 
 
 def shift_conv2d(x: jax.Array, shifts, w_pw: jax.Array, bias=None, *,
                  block_co: int = 128, requant_shift: int | None = None,
+                 act: str | None = None,
                  out_dtype=None, interpret: bool = True,
                  config: dict | None = None) -> jax.Array:
     """x: (N,H,W,C); shifts: (C,2) static ints; w_pw: (C,Cy) or (1,1,C,Cy).
 
     ``bias`` (optional, (Cy,)) is added at accumulator scale before the
-    requantization epilogue. ``config`` (a repro.tune schedule dict)
+    requantization epilogue; ``act="relu"`` fuses the activation at
+    accumulator scale after it. ``config`` (a repro.tune schedule dict)
     overrides the block parameters.
     """
     if config:
@@ -76,7 +79,8 @@ def shift_conv2d(x: jax.Array, shifts, w_pw: jax.Array, bias=None, *,
     bco = effective_block(cy, block_co)
 
     kern = functools.partial(_kernel, groups=groups, hout=h, wout=wd, pad=pad,
-                             out_dtype=out_dtype, requant_shift=requant_shift)
+                             out_dtype=out_dtype, requant_shift=requant_shift,
+                             act=act)
     in_specs = [
         pl.BlockSpec((1, hp, wpd, c), lambda b, cb: (b, 0, 0, 0)),
         pl.BlockSpec((c, bco), lambda b, cb: (0, cb)),
@@ -86,7 +90,7 @@ def shift_conv2d(x: jax.Array, shifts, w_pw: jax.Array, bias=None, *,
         def kern_bias(x_ref, w_ref, b_ref, o_ref):
             _kernel(x_ref, w_ref, o_ref, groups=groups, hout=h, wout=wd,
                     pad=pad, out_dtype=out_dtype, requant_shift=requant_shift,
-                    bias_ref=b_ref)
+                    act=act, bias_ref=b_ref)
         kern = kern_bias
         in_specs.append(pl.BlockSpec((bco,), lambda b, cb: (cb,)))
         args.append(bias)

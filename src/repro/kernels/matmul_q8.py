@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import acc_dtype, apply_requant, cdiv
+from .common import acc_dtype, apply_act, apply_requant, cdiv
 
 
 def _make_compiler_params(n_parallel: int):
@@ -32,7 +32,8 @@ def _make_compiler_params(n_parallel: int):
         return None
 
 
-def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk, out_dtype, requant_shift):
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk, out_dtype, requant_shift,
+            act=None):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -43,28 +44,33 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk, out_dtype, requant_shift):
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _epilogue():
-        o_ref[...] = apply_requant(acc_ref[...], requant_shift).astype(out_dtype)
+        acc = apply_act(acc_ref[...], act)
+        o_ref[...] = apply_requant(acc, requant_shift).astype(out_dtype)
 
 
 def matmul(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
-           bk: int = 512, requant_shift: int | None = None, out_dtype=None,
+           bk: int = 512, requant_shift: int | None = None,
+           act: str | None = None, out_dtype=None,
            interpret: bool = True, config: dict | None = None) -> jax.Array:
     """a: (M, K) @ b: (K, N). int8 inputs + requant_shift -> int8 output.
 
-    ``config`` (a repro.tune schedule dict) overrides the block parameters.
+    ``act="relu"`` fuses the activation at accumulator scale on the last
+    K step, before requantization. ``config`` (a repro.tune schedule dict)
+    overrides the block parameters.
     """
     if config:
         bm = int(config.get("bm", bm))
         bn = int(config.get("bn", bn))
         bk = int(config.get("bk", bk))
     return _matmul(a, b, bm=bm, bn=bn, bk=bk, requant_shift=requant_shift,
-                   out_dtype=out_dtype, interpret=interpret)
+                   act=act, out_dtype=out_dtype, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "requant_shift",
-                                             "out_dtype", "interpret"))
+                                             "act", "out_dtype", "interpret"))
 def _matmul(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
-            bk: int = 512, requant_shift: int | None = None, out_dtype=None,
+            bk: int = 512, requant_shift: int | None = None,
+            act: str | None = None, out_dtype=None,
             interpret: bool = True) -> jax.Array:
     m, k = a.shape
     k2, n = b.shape
@@ -74,7 +80,7 @@ def _matmul(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
     bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
     grid = (cdiv(m, bm_), cdiv(n, bn_), cdiv(k, bk_))
     kern = functools.partial(_kernel, nk=grid[2], out_dtype=out_dtype,
-                             requant_shift=requant_shift)
+                             requant_shift=requant_shift, act=act)
     return pl.pallas_call(
         kern,
         grid=grid,

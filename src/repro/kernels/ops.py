@@ -8,7 +8,14 @@ Schedule selection: every Pallas path consults the ``repro.tune`` subsystem
 unless an explicit ``config=`` dict is passed — persistent cache entries
 (committed by ``scripts/tune.py``) win, otherwise the analytic fallback
 cost model picks the schedule. Lookups are memoized in-process, so the
-per-call overhead after the first trace is one dict probe.
+per-call overhead after the first trace is one dict probe. An explicit
+``config=`` together with ``method='xla'`` is a contradiction (the oracle
+has no schedule knobs) and raises, mirroring ``_check_method``.
+
+Epilogues: the quantized entry points thread ``requant_shift`` (Algorithm-1
+round-to-nearest shift) and ``act="relu"`` (fused activation at accumulator
+scale, applied before the shift) to both engines, so pallas and xla stay
+bit-exact including the fused activation.
 """
 from __future__ import annotations
 
@@ -26,11 +33,23 @@ from .conv_im2col import conv2d_im2col as _conv_pallas
 from .conv_shift import shift_conv2d as _shift_pallas
 from .conv1d_causal import causal_conv1d as _c1d_pallas
 from .matmul_q8 import matmul as _mm_pallas
+from .pool import maxpool2d as _pool_pallas
 
 
 def _check_method(method: str, allowed=("pallas", "xla")):
     if method not in allowed:
         raise ValueError(f"unknown method {method!r}; expected one of {allowed}")
+
+
+def _check_no_config(method: str, config, *extra_knobs):
+    """The xla oracle has no schedule: an explicit config (or explicit block
+    knobs) together with method='xla' is a conflicting-arguments error, not
+    something to silently ignore."""
+    if config is not None or any(k is not None for k in extra_knobs):
+        raise ValueError(
+            f"method={method!r} runs the jnp oracle, which has no schedule "
+            "knobs; drop the explicit config=/block arguments or use "
+            "method='pallas'")
 
 
 def _tuned(sig_fn, *dims, dtype):
@@ -41,41 +60,46 @@ def _tuned(sig_fn, *dims, dtype):
 
 
 def conv2d(x, w, bias=None, *, groups: int = 1, method: str = "pallas",
-           requant_shift: Optional[int] = None, config: Optional[dict] = None):
+           requant_shift: Optional[int] = None, act: Optional[str] = None,
+           config: Optional[dict] = None):
     _check_method(method)
     if method == "xla":
+        _check_no_config(method, config)
         if requant_shift is not None:
             return ref.conv2d_q8_ref(x, w, bias, groups=groups,
-                                     requant_shift=requant_shift)
-        return ref.conv2d_ref(x, w, bias, groups=groups)
+                                     requant_shift=requant_shift, act=act)
+        return ref.conv2d_ref(x, w, bias, groups=groups, act=act)
     if config is None:
         from repro.tune import sig_conv2d
         n, h, wd, cx = x.shape
         config = _tuned(sig_conv2d, n, h, wd, cx, w.shape[-1], w.shape[0],
                         groups, dtype=x.dtype)
     return _conv_pallas(x, w, bias, groups=groups, requant_shift=requant_shift,
-                        interpret=use_interpret(), config=config)
+                        act=act, interpret=use_interpret(), config=config)
 
 
 def depthwise2d(x, w_dw, *, method: str = "pallas",
-                requant_shift: Optional[int] = None,
+                requant_shift: Optional[int] = None, act: Optional[str] = None,
                 config: Optional[dict] = None):
     _check_method(method)
     if method == "xla":
+        _check_no_config(method, config)
         if requant_shift is not None:
-            return ref.depthwise2d_q8_ref(x, w_dw, requant_shift=requant_shift)
-        return ref.depthwise2d_ref(x, w_dw)
+            return ref.depthwise2d_q8_ref(x, w_dw, requant_shift=requant_shift,
+                                          act=act)
+        return ref.depthwise2d_ref(x, w_dw, act=act)
     if config is None:
         from repro.tune import sig_depthwise2d
         n, h, wd, c = x.shape
         config = _tuned(sig_depthwise2d, n, h, wd, c, w_dw.shape[0],
                         dtype=x.dtype)
-    return _dw_pallas(x, w_dw, requant_shift=requant_shift,
+    return _dw_pallas(x, w_dw, requant_shift=requant_shift, act=act,
                       interpret=use_interpret(), config=config)
 
 
 def shift_conv2d(x, shifts, w_pw, bias=None, *, method: str = "pallas",
                  requant_shift: Optional[int] = None,
+                 act: Optional[str] = None,
                  config: Optional[dict] = None,
                  max_shift: Optional[int] = None):
     """``max_shift`` bounds |shift| when the table is traced (jit): pass
@@ -83,50 +107,67 @@ def shift_conv2d(x, shifts, w_pw, bias=None, *, method: str = "pallas",
     added at accumulator scale (quantized path only)."""
     _check_method(method)
     if method == "xla":
+        _check_no_config(method, config)
         if requant_shift is not None:
             return ref.shift_conv2d_q8_ref(x, shifts, w_pw, bias,
                                            requant_shift=requant_shift,
-                                           max_shift=max_shift)
+                                           max_shift=max_shift, act=act)
         if bias is not None:
             raise ValueError("shift_conv2d: bias without requant_shift is "
                              "only supported on the quantized path")
-        return ref.shift_conv2d_ref(x, shifts, w_pw, max_shift=max_shift)
+        return ref.shift_conv2d_ref(x, shifts, w_pw, max_shift=max_shift,
+                                    act=act)
     if config is None:
         from repro.tune import sig_shift_conv2d
         n, h, wd, c = x.shape
         config = _tuned(sig_shift_conv2d, n, h, wd, c, w_pw.shape[-1],
                         dtype=x.dtype)
     return _shift_pallas(x, shifts, w_pw, bias, requant_shift=requant_shift,
-                         interpret=use_interpret(), config=config)
+                         act=act, interpret=use_interpret(), config=config)
 
 
 def add_conv2d(x, w, bias=None, *, method: str = "pallas",
                requant_shift: Optional[int] = None,
                x_preshift: int = 0, w_preshift: int = 0,
+               act: Optional[str] = None,
                config: Optional[dict] = None):
     """``bias`` is added at accumulator scale (quantized path only);
     ``x_preshift``/``w_preshift`` are the Algorithm-1 (right) scale-alignment
     left shifts applied to the operands before |x - w|."""
     _check_method(method)
     if method == "xla":
+        _check_no_config(method, config)
         if requant_shift is not None:
             return ref.add_conv2d_q8_ref(x, w, bias,
                                          requant_shift=requant_shift,
                                          x_preshift=x_preshift,
-                                         w_preshift=w_preshift)
+                                         w_preshift=w_preshift, act=act)
         if bias is not None or x_preshift or w_preshift:
             raise ValueError("add_conv2d: bias/preshifts without "
                              "requant_shift are only supported on the "
                              "quantized path")
-        return ref.add_conv2d_ref(x, w)
+        return ref.add_conv2d_ref(x, w, act=act)
     if config is None:
         from repro.tune import sig_add_conv2d
         n, h, wd, cx = x.shape
         config = _tuned(sig_add_conv2d, n, h, wd, cx, w.shape[-1], w.shape[0],
                         dtype=x.dtype)
     return _add_pallas(x, w, bias, requant_shift=requant_shift,
-                       x_preshift=x_preshift, w_preshift=w_preshift,
+                       x_preshift=x_preshift, w_preshift=w_preshift, act=act,
                        interpret=use_interpret(), config=config)
+
+
+def maxpool2d(x, *, window: int = 2, stride: Optional[int] = None,
+              method: str = "pallas", config: Optional[dict] = None):
+    """VALID max-pool, int8 or float. Pooling int8 codes is bit-exact with
+    pooling the dequantized floats (max commutes with the positive pow2
+    scale) — the graph executor's integer-only pool boundary."""
+    _check_method(method)
+    if method == "xla":
+        _check_no_config(method, config)
+        return ref.maxpool2d_ref(x, window=window, stride=stride)
+    return _pool_pallas(x, window=window, stride=stride,
+                        interpret=use_interpret(), config=config)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
@@ -164,8 +205,14 @@ def causal_conv1d(x, w, *, method: str = "auto",
                   config: Optional[dict] = None):
     """method='auto': Pallas kernel off-mesh (exercises the paper primitive);
     XLA path under SPMD — an opaque pallas_call would force its operands to
-    be gathered/replicated by the partitioner."""
+    be gathered/replicated by the partitioner. Pass ``config=`` only with an
+    explicit method='pallas' request: the auto->xla resolution under a mesh
+    must stay legal for schedule-pinned call sites, but a hard method='xla'
+    with a config is the same conflicting-arguments error as everywhere
+    else."""
     _check_method(method, ("auto", "pallas", "xla"))
+    if method == "xla":
+        _check_no_config(method, config)
     if method == "auto":
         from repro.parallel.sharding import current_mesh
         method = "xla" if current_mesh() is not None else "pallas"
@@ -183,12 +230,14 @@ def causal_conv1d(x, w, *, method: str = "auto",
 
 
 def matmul(a, b, *, method: str = "pallas", requant_shift: Optional[int] = None,
+           act: Optional[str] = None,
            bm: Optional[int] = None, bn: Optional[int] = None,
            bk: Optional[int] = None, config: Optional[dict] = None):
     """Explicit bm/bn/bk win over ``config``, which wins over the tuner."""
     _check_method(method)
     if method == "xla":
-        return ref.matmul_ref(a, b, requant_shift=requant_shift)
+        _check_no_config(method, config, bm, bn, bk)
+        return ref.matmul_ref(a, b, requant_shift=requant_shift, act=act)
     if config is None and None in (bm, bn, bk):
         from repro.tune import sig_matmul
         config = _tuned(sig_matmul, a.shape[0], a.shape[1], b.shape[1],
@@ -197,5 +246,5 @@ def matmul(a, b, *, method: str = "pallas", requant_shift: Optional[int] = None,
     for name, val in (("bm", bm), ("bn", bn), ("bk", bk)):
         if val is not None:
             config[name] = val
-    return _mm_pallas(a, b, requant_shift=requant_shift,
+    return _mm_pallas(a, b, requant_shift=requant_shift, act=act,
                       interpret=use_interpret(), config=config)

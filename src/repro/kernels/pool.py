@@ -1,0 +1,70 @@
+"""int8 max-pooling Pallas kernel (VPU path).
+
+NNoM's integer pipeline pools BETWEEN the int8 requantization of one conv
+and the int8 consumption of the next — max commutes with the (positive,
+power-of-two) dequantization scale, so pooling int8 codes is bit-exact with
+pooling the dequantized floats. This kernel is what lets the graph executor
+keep activations int8 across pool boundaries (zero float round-trips).
+
+Grid: (batch, channel-block); one grid step owns one image's full spatial
+extent in VMEM (MCU-scale feature maps) and reduces the WxW window as W^2
+statically-strided element-wise maxima on the 8x128 VPU — the same shifted
+accumulation pattern as conv_dw, with max replacing multiply-add.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .common import effective_block
+
+
+def _kernel(x_ref, o_ref, *, win, stride, hout, wout):
+    xv = x_ref[0]                            # (H, W, BC)
+    bc = xv.shape[-1]
+    out = None
+    for i in range(win):                     # static unroll over window taps
+        for j in range(win):
+            v = lax.slice(xv, (i, j, 0),
+                          (i + (hout - 1) * stride + 1,
+                           j + (wout - 1) * stride + 1, bc),
+                          (stride, stride, 1))
+            out = v if out is None else jnp.maximum(out, v)
+    o_ref[0] = out
+
+
+def maxpool2d(x: jax.Array, *, window: int = 2, stride: int | None = None,
+              block_c: int = 128, interpret: bool = True,
+              config: dict | None = None) -> jax.Array:
+    """VALID max-pool. x: (N,H,W,C) — int8 (the fused-graph path) or float.
+
+    ``config`` (a repro.tune schedule dict) overrides the block parameters.
+    """
+    if config:
+        block_c = int(config.get("block_c", block_c))
+    return _maxpool2d(x, window=window, stride=stride or window,
+                      block_c=block_c, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "stride", "block_c",
+                                             "interpret"))
+def _maxpool2d(x: jax.Array, *, window: int, stride: int, block_c: int,
+               interpret: bool = True) -> jax.Array:
+    n, h, w, c = x.shape
+    hout = (h - window) // stride + 1
+    wout = (w - window) // stride + 1
+    bc = effective_block(c, block_c)
+    kern = functools.partial(_kernel, win=window, stride=stride,
+                             hout=hout, wout=wout)
+    return pl.pallas_call(
+        kern,
+        grid=(n, c // bc),
+        in_specs=[pl.BlockSpec((1, h, w, bc), lambda b, cb: (b, 0, 0, cb))],
+        out_specs=pl.BlockSpec((1, hout, wout, bc), lambda b, cb: (b, 0, 0, cb)),
+        out_shape=jax.ShapeDtypeStruct((n, hout, wout, c), x.dtype),
+        interpret=interpret,
+    )(x)

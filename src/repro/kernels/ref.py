@@ -6,52 +6,60 @@ paper's non-SIMD NNoM implementations.
 
 The ``*_q8_ref`` variants are the integer-only oracles: int8 operands,
 int32 accumulation, and the SAME Algorithm-1 epilogue as the Pallas kernels
-(``common.apply_requant`` — round-to-nearest shift, clip, int8). Integer
-accumulation is order-independent, so the Pallas kernels are bit-exact
-against these refs, which is what ``tests/test_qconv.py`` asserts.
+(``common.apply_requant`` — round-to-nearest shift, clip, int8; with the
+optional ``act="relu"`` fused at accumulator scale via ``common.apply_act``
+first, exactly like the kernel epilogues). Integer accumulation is
+order-independent, so the Pallas kernels are bit-exact against these refs,
+which is what ``tests/test_qconv.py`` and ``tests/test_graph.py`` assert.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core import primitives as P
 
-from .common import apply_requant
+from .common import apply_act, apply_requant
 
 
-def conv2d_ref(x, w, bias=None, *, groups: int = 1):
+def conv2d_ref(x, w, bias=None, *, groups: int = 1, act=None):
     y = P.standard_conv(x, w, groups=groups)
-    return y if bias is None else y + bias
+    if bias is not None:
+        y = y + bias
+    return apply_act(y, act)
 
 
-def conv2d_q8_ref(x_q, w_q, bias_q=None, *, groups: int = 1, requant_shift: int = 0):
+def conv2d_q8_ref(x_q, w_q, bias_q=None, *, groups: int = 1,
+                  requant_shift: int = 0, act=None):
     acc = P.standard_conv(x_q.astype(jnp.int32), w_q.astype(jnp.int32),
                           groups=groups)
     if bias_q is not None:
         acc = acc + bias_q.astype(jnp.int32)
+    acc = apply_act(acc, act)
     return apply_requant(acc, requant_shift).astype(jnp.int8)
 
 
-def depthwise2d_ref(x, w_dw):
+def depthwise2d_ref(x, w_dw, *, act=None):
     w4 = w_dw[..., None] if w_dw.ndim == 3 else w_dw   # (HK,HK,C) -> (HK,HK,C,1)
-    return P.depthwise_conv(x, w4)
+    return apply_act(P.depthwise_conv(x, w4), act)
 
 
-def depthwise2d_q8_ref(x_q, w_dw_q, *, requant_shift: int = 0):
+def depthwise2d_q8_ref(x_q, w_dw_q, *, requant_shift: int = 0, act=None):
     w4 = w_dw_q[..., None] if w_dw_q.ndim == 3 else w_dw_q
     acc = P.depthwise_conv(x_q.astype(jnp.int32), w4.astype(jnp.int32))
+    acc = apply_act(acc, act)
     return apply_requant(acc, requant_shift).astype(jnp.int8)
 
 
-def shift_conv2d_ref(x, shifts, w_pw, *, max_shift=None):
+def shift_conv2d_ref(x, shifts, w_pw, *, max_shift=None, act=None):
     w4 = w_pw[None, None] if w_pw.ndim == 2 else w_pw
-    return P.standard_conv(
-        P.shift_channels(x, jnp.asarray(shifts), max_shift=max_shift), w4)
+    return apply_act(P.standard_conv(
+        P.shift_channels(x, jnp.asarray(shifts), max_shift=max_shift), w4), act)
 
 
 def shift_conv2d_q8_ref(x_q, shifts, w_pw_q, bias_q=None, *,
-                        requant_shift: int = 0, max_shift=None):
+                        requant_shift: int = 0, max_shift=None, act=None):
     """Shift is pure data movement — exact in the integer domain (the paper's
     point) — so only the pointwise matmul accumulates."""
     w4 = w_pw_q[None, None] if w_pw_q.ndim == 2 else w_pw_q
@@ -60,15 +68,16 @@ def shift_conv2d_q8_ref(x_q, shifts, w_pw_q, bias_q=None, *,
     acc = P.standard_conv(shifted, w4.astype(jnp.int32))
     if bias_q is not None:
         acc = acc + bias_q.astype(jnp.int32)
+    acc = apply_act(acc, act)
     return apply_requant(acc, requant_shift).astype(jnp.int8)
 
 
-def add_conv2d_ref(x, w):
-    return P.add_conv(x, w)
+def add_conv2d_ref(x, w, *, act=None):
+    return apply_act(P.add_conv(x, w), act)
 
 
 def add_conv2d_q8_ref(x_q, w_q, bias_q=None, *, requant_shift: int = 0,
-                      x_preshift: int = 0, w_preshift: int = 0):
+                      x_preshift: int = 0, w_preshift: int = 0, act=None):
     """AdderNet Algorithm-1 (right): align scales by left pre-shifts, then
     -Σ|x - w| in int32, bias at accumulator scale, requant epilogue."""
     xi = x_q.astype(jnp.int32)
@@ -80,10 +89,11 @@ def add_conv2d_q8_ref(x_q, w_q, bias_q=None, *, requant_shift: int = 0,
     acc = P.add_conv(xi, wi)
     if bias_q is not None:
         acc = acc + bias_q.astype(jnp.int32)
+    acc = apply_act(acc, act)
     return apply_requant(acc, requant_shift).astype(jnp.int8)
 
 
-def causal_conv1d_ref(x, w):
+def causal_conv1d_ref(x, w, *, act=None):
     """x: (B,L,D); w: (K,D). Zero history before t=0."""
     if w.ndim == 3:
         w = w[:, 0]
@@ -92,12 +102,27 @@ def causal_conv1d_ref(x, w):
     out = jnp.zeros_like(x)
     for kk in range(k):
         out = out + xp[:, kk:kk + x.shape[1], :] * w[kk][None, None, :]
-    return out
+    return apply_act(out, act)
 
 
-def matmul_ref(a, b, *, requant_shift=None):
+def matmul_ref(a, b, *, requant_shift=None, act=None):
     if requant_shift is None:
-        return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+        return apply_act(jnp.dot(a, b, preferred_element_type=jnp.float32),
+                         act).astype(a.dtype)
     acc = jnp.dot(a.astype(jnp.int32), b.astype(jnp.int32),
                   preferred_element_type=jnp.int32)
+    acc = apply_act(acc, act)
     return apply_requant(acc, requant_shift).astype(jnp.int8)
+
+
+def maxpool2d_ref(x, *, window: int = 2, stride: int | None = None):
+    """VALID max-pool oracle — works on int8 codes (init = dtype min) and
+    floats (init = -inf) alike."""
+    stride = stride or window
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        init = jnp.iinfo(x.dtype).min
+    else:
+        init = -jnp.inf
+    return lax.reduce_window(x, jnp.asarray(init, x.dtype), lax.max,
+                             (1, window, window, 1), (1, stride, stride, 1),
+                             "VALID")

@@ -1,21 +1,19 @@
 """Paper-side CNN: a small image classifier where EVERY conv block's
 primitive is selectable (standard / grouped / dws / shift / add), exactly
-the way the paper swaps NNoM layer implementations. Runs on the float
-primitives for training and on the integer-only Algorithm-1 path (with BN
-folding where applicable) after PTQ. `method="pallas"` routes the forward
-through the TPU kernels."""
+the way the paper swaps NNoM layer implementations. Training runs on the
+float primitives; inference and PTQ run through the ``repro.graph`` layer
+IR — ``quantize_cnn`` lowers the graph in one calibration sweep and returns
+the single-jit integer-only executor (activations int8 end to end, fused
+ReLU/pool epilogues). `method="pallas"` routes every layer through the TPU
+kernels."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import (ConvSpec, apply, apply_block, batchnorm_apply, fold,
-                        frac_bits_for, init_block, quantize)
-from repro.core.qconv import qconv_apply, quantize_conv_params
-from repro.kernels import ops as K
+from repro.core import ConvSpec, apply_block, init_block
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,11 +54,16 @@ def init_cnn(cfg: CNNConfig, key):
 
 
 def cnn_forward(params, x, cfg: CNNConfig, *, train: bool = False):
+    if not train:
+        # inference runs on the layer-graph IR — the same graph the
+        # quantized executor lowers, so float eval and int8 deployment
+        # share one structural description (repro.graph)
+        from repro.graph import build_cnn_graph, float_forward
+        return float_forward(build_cnn_graph(cfg), params, x)
     specs = _specs(cfg)
     h = x
     for p, s in zip(params["blocks"], specs):
-        stats = {} if train else None
-        h = apply_block(p, h, s, train_stats=stats)
+        h = apply_block(p, h, s, train_stats={})
         h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
                                   (1, 2, 2, 1), "VALID")
     h = jnp.mean(h, axis=(1, 2))
@@ -80,68 +83,39 @@ def cnn_loss(params, batch, cfg: CNNConfig):
 
 def calibrate_bn(params, cfg: CNNConfig, calib_x):
     """Deployment-time BN statistics re-estimation: run calibration data
-    through the network and write each block's activation mean/var into the
-    inference BN buffers (training normalizes with batch stats; the EMA is
-    owned by this calibration pass)."""
-    specs = _specs(cfg)
-    h = calib_x
-    new_blocks = []
-    for p, s in zip(params["blocks"], specs):
-        y = apply(p["conv"], h, s)
-        bn = dict(p["bn"],
-                  mean=jnp.mean(y, axis=(0, 1, 2)).astype(jnp.float32),
-                  var=jnp.var(y, axis=(0, 1, 2)).astype(jnp.float32))
-        p = dict(p, bn=bn)
-        new_blocks.append(p)
-        h = jax.nn.relu(batchnorm_apply(bn, y))
-        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
-                                  (1, 2, 2, 1), "VALID")
+    through the network (one walk of the graph interpreter —
+    ``repro.graph.lower.interpret``, the same sweep PTQ lowering uses) and
+    write each block's activation mean/var into the inference BN buffers
+    (training normalizes with batch stats; the EMA is owned by this
+    calibration pass)."""
+    from repro.graph import build_cnn_graph
+    from repro.graph.lower import interpret
+    bn_calib = interpret(build_cnn_graph(cfg), params, calib_x,
+                         calibrate=True)["bn"]
+    new_blocks = [dict(p, bn=bn_calib[f"bn{i}"])
+                  for i, p in enumerate(params["blocks"])]
     return dict(params, blocks=new_blocks)
 
 
 # ------------------------------------------------------------------ PTQ ---
 
 def quantize_cnn(params, cfg: CNNConfig, calib_x, *, method: str = "xla"):
-    """Post-training quantization (paper scheme): re-estimate BN stats,
-    BN-fold the foldable blocks, pick power-of-two scales from calibration
-    activations, return an integer-only forward closure.
+    """Post-training quantization (paper scheme) through ``repro.graph``:
+    build the layer-graph IR, lower it in ONE calibration sweep (BN stat
+    re-estimation + BN folding + power-of-two scale annotation + the
+    requant/ReLU/pool fusion pass), and return the single-jit integer-only
+    executor. Activations stay int8 end to end between conv layers — no
+    per-layer float bounce (the pre-graph behavior survives as
+    ``repro.graph.unfused_forward`` for comparison benchmarks).
 
     ``method`` picks the integer execution engine for every layer:
     ``"pallas"`` runs the fused int8 TPU kernels (the paper's SIMD
-    analogue), ``"xla"`` the jnp integer oracles (direct / no-SIMD) —
-    bit-exact with each other (see core/qconv.qconv_apply)."""
-    params = calibrate_bn(params, cfg, calib_x)
-    specs = _specs(cfg)
-    h = calib_x
-    qblocks = []
-    for p, s in zip(params["blocks"], specs):
-        float_out = apply_block(p, h, s)
-        if s.primitive != "add":
-            folded = fold(p["conv"], p["bn"], s)
-            qp = quantize_conv_params(folded, s)
-            bn = None
-        else:                                  # paper: add-conv keeps BN
-            qp = quantize_conv_params(p["conv"], s)
-            bn = p["bn"]
-        ofb = frac_bits_for(float_out)
-        qblocks.append(dict(qp=qp, spec=s, out_fb=ofb, bn=bn))
-        h = jax.lax.reduce_window(float_out, -jnp.inf, jax.lax.max,
-                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
-    head = params["head"]
+    analogue), ``"xla"`` the jnp integer oracles (direct / no-SIMD),
+    ``"auto"`` pallas where the kernel layer can express the layer —
+    all bit-exact with each other (tests/test_graph.py).
 
-    def int_forward(x):
-        xq = quantize(x)
-        for blk in qblocks:
-            yq = qconv_apply(blk["qp"], xq, blk["spec"], blk["out_fb"],
-                             method=method)
-            y = yq.dequantize()
-            if blk["bn"] is not None:
-                y = batchnorm_apply(blk["bn"], y)
-            y = jax.nn.relu(y)
-            y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
-                                      (1, 2, 2, 1), "VALID")
-            xq = quantize(y)
-        h2 = jnp.mean(xq.dequantize(), axis=(1, 2))
-        return h2 @ head
-
-    return int_forward
+    Returns a :class:`repro.graph.CompiledPlan` (callable; its ``.plan``
+    and ``.profile`` expose the lowered scales and per-layer costs)."""
+    from repro.graph import CompiledPlan, build_cnn_graph, lower
+    plan = lower(build_cnn_graph(cfg), params, calib_x)
+    return CompiledPlan(plan, method=method)

@@ -3,8 +3,9 @@ analytic fallback cost model, and a persistent config cache consulted by the
 Pallas dispatch layer (repro.kernels.ops)."""
 from .cache import (DEFAULT_CACHE_PATH, SCHEMA_VERSION, TuneCache, cache_key,
                     get_default_cache, reset, set_default_cache)
-from .runner import (analytic_config, autotune, autotune_into, backend_tag,
-                     estimate_s, get_config, time_config)
+from .runner import (analytic_config, autotune, autotune_into, autotune_plan,
+                     backend_tag, estimate_s, get_config, plan_jobs,
+                     time_config)
 from .space import (KERNELS, ShapeSig, candidates, default_config,
                     sig_add_conv2d, sig_causal_conv1d, sig_conv2d,
                     sig_depthwise2d, sig_matmul, sig_shift_conv2d, space_size)
@@ -12,8 +13,8 @@ from .space import (KERNELS, ShapeSig, candidates, default_config,
 __all__ = [
     "DEFAULT_CACHE_PATH", "SCHEMA_VERSION", "TuneCache", "cache_key",
     "get_default_cache", "reset", "set_default_cache",
-    "analytic_config", "autotune", "autotune_into", "backend_tag",
-    "estimate_s", "get_config", "time_config",
+    "analytic_config", "autotune", "autotune_into", "autotune_plan",
+    "backend_tag", "estimate_s", "get_config", "plan_jobs", "time_config",
     "KERNELS", "ShapeSig", "candidates", "default_config",
     "sig_add_conv2d", "sig_causal_conv1d", "sig_conv2d", "sig_depthwise2d",
     "sig_matmul", "sig_shift_conv2d", "space_size",

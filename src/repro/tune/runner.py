@@ -272,6 +272,87 @@ def autotune_into(cache: _cache.TuneCache, kernel: str, sig: ShapeSig,
 
 
 # --------------------------------------------------------------------------
+# Whole-plan pre-tuning (repro.graph integration)
+# --------------------------------------------------------------------------
+
+def plan_jobs(plan, *, batch: int = 1) -> list:
+    """Autotune jobs covering every kernel invocation of a lowered
+    ``repro.graph`` Plan: one ``(kernel, sig, arrays, dtype, kwargs)`` tuple
+    per distinct (kernel, shape) the executor will dispatch — dws layers
+    contribute their depthwise AND pointwise stages. Shapes/requant shifts
+    are read off the plan's annotated scales, so the timed epilogues are
+    exactly the fused ones (requant + act) the executor runs."""
+    import jax
+    import jax.numpy as jnp
+
+    def i8(shape, seed=0):
+        return jax.random.randint(jax.random.PRNGKey(seed), shape, -100, 100,
+                                  jnp.int32).astype(jnp.int8)
+
+    jobs, seen = [], set()
+
+    def emit(kernel, sig, arrays, kwargs):
+        k = (kernel, sig.key())
+        if k not in seen:
+            seen.add(k)
+            jobs.append((kernel, sig, arrays, "int8", kwargs))
+
+    for node in plan.conv_nodes():
+        spec = node.spec
+        h, w = node.attrs["in_hw"]
+        ci, co, hk = spec.in_channels, spec.out_channels, spec.kernel_size
+        p = spec.primitive
+        if p in ("standard", "grouped"):
+            g = spec.groups if p == "grouped" else 1
+            wq = node.qparams["w"]
+            shift = node.in_fb + wq.frac_bits - node.out_fb
+            emit("conv2d", _space.sig_conv2d(batch, h, w, ci, co, hk, g),
+                 (i8((batch, h, w, ci)), wq.q),
+                 dict(groups=g, requant_shift=shift, act=node.act))
+        elif p == "dws":
+            w_dw, w_pw = node.qparams["w_dw"], node.qparams["w_pw"]
+            mid_fb = node.qparams.get("mid_frac_bits", node.out_fb)
+            emit("depthwise2d", _space.sig_depthwise2d(batch, h, w, ci, hk),
+                 (i8((batch, h, w, ci)), w_dw.q[..., 0]),
+                 dict(requant_shift=node.in_fb + w_dw.frac_bits - mid_fb))
+            emit("conv2d", _space.sig_conv2d(batch, h, w, ci, co, 1, 1),
+                 (i8((batch, h, w, ci)), w_pw.q),
+                 dict(requant_shift=mid_fb + w_pw.frac_bits - node.out_fb,
+                      act=node.act))
+        elif p == "shift":
+            w_pw = node.qparams["w_pw"]
+            emit("shift_conv2d", _space.sig_shift_conv2d(batch, h, w, ci, co),
+                 (i8((batch, h, w, ci)), node.qparams["shifts"],
+                  w_pw.q[0, 0] if w_pw.q.ndim == 4 else w_pw.q),
+                 dict(requant_shift=node.in_fb + w_pw.frac_bits - node.out_fb,
+                      act=node.act))
+        elif p == "add":
+            wq = node.qparams["w"]
+            x_pre = max(0, wq.frac_bits - node.in_fb)
+            w_pre = max(0, node.in_fb - wq.frac_bits)
+            acc_fb = max(node.in_fb, wq.frac_bits)
+            emit("add_conv2d", _space.sig_add_conv2d(batch, h, w, ci, co, hk),
+                 (i8((batch, h, w, ci)), wq.q),
+                 dict(requant_shift=acc_fb - node.out_fb, x_preshift=x_pre,
+                      w_preshift=w_pre, act=node.act))
+    return jobs
+
+
+def autotune_plan(cache: _cache.TuneCache, plan, *, batch: int = 1,
+                  **kw) -> list:
+    """Pre-tune a whole plan's node set in one call: measure every distinct
+    kernel invocation of ``plan`` and record the winners in ``cache`` (the
+    executor then picks them up through the normal dispatch lookup).
+    Returns ``[(kernel, sig, best_config, best_us), ...]``."""
+    out = []
+    for kernel, sig, arrays, dtype, kwargs in plan_jobs(plan, batch=batch):
+        best, best_us = autotune_into(cache, kernel, sig, arrays, dtype,
+                                      kwargs=kwargs, **kw)
+        out.append((kernel, sig, best, best_us))
+    return out
+
+
+# --------------------------------------------------------------------------
 # Dispatch-layer lookup: memo -> persistent cache -> analytic fallback
 # --------------------------------------------------------------------------
 

@@ -1,0 +1,74 @@
+"""core/folding.py: fold-vs-unfused numeric equivalence for every primitive
+in FOLDABLE, and the add-conv rejection path (|W - x| is not linear in W,
+so BN cannot fold — paper §3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ConvSpec, apply, batchnorm_apply, fold, init
+from repro.core.folding import FOLDABLE
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _block(prim, *, with_bias=True):
+    spec = ConvSpec(primitive=prim, in_channels=8, out_channels=12,
+                    kernel_size=3, groups=4 if prim == "grouped" else 1,
+                    use_bias=with_bias)
+    p = init(KEY, spec)
+    if with_bias:
+        p["b"] = jax.random.normal(jax.random.PRNGKey(1), p["b"].shape) * 0.1
+    bn = {
+        "gamma": jax.random.uniform(jax.random.PRNGKey(2), (12,), minval=0.5,
+                                    maxval=1.5),
+        "beta": jax.random.normal(jax.random.PRNGKey(3), (12,)) * 0.2,
+        "mean": jax.random.normal(jax.random.PRNGKey(4), (12,)) * 0.3,
+        "var": jax.random.uniform(jax.random.PRNGKey(5), (12,), minval=0.2,
+                                  maxval=2.0),
+    }
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 10, 10, 8)) * 0.5
+    return spec, p, bn, x
+
+
+@pytest.mark.parametrize("with_bias", [True, False])
+@pytest.mark.parametrize("prim", FOLDABLE)
+def test_fold_matches_unfused_bn(prim, with_bias):
+    """apply(fold(conv, bn)) == BN(apply(conv)) for every foldable
+    primitive, with and without a conv bias."""
+    spec, p, bn, x = _block(prim, with_bias=with_bias)
+    want = batchnorm_apply(bn, apply(p, x, spec))
+    got = apply(fold(p, bn, spec), x, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_fold_targets_pointwise_for_dws_and_shift():
+    """The folded scale lands on the POINTWISE weights (the stage whose
+    output BN normalizes); depthwise weights / shift tables are untouched."""
+    for prim, wkey in [("dws", "w_pw"), ("shift", "w_pw")]:
+        spec, p, bn, _ = _block(prim)
+        out = fold(p, bn, spec)
+        assert not np.allclose(np.asarray(out[wkey]), np.asarray(p[wkey]))
+        if prim == "dws":
+            np.testing.assert_array_equal(np.asarray(out["w_dw"]),
+                                          np.asarray(p["w_dw"]))
+        else:
+            np.testing.assert_array_equal(np.asarray(out["shifts"]),
+                                          np.asarray(p["shifts"]))
+
+
+def test_fold_creates_bias_when_absent():
+    spec, p, bn, x = _block("standard", with_bias=False)
+    out = fold(p, bn, spec)
+    assert "b" in out and out["b"].shape == (12,)
+    want = batchnorm_apply(bn, apply(p, x, spec))
+    got = apply(out, x, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_fold_rejects_add_conv():
+    spec, p, bn, _ = _block("add")
+    with pytest.raises(ValueError, match="add"):
+        fold(p, bn, spec)

@@ -1,0 +1,266 @@
+"""repro.graph: lowering + single-jit integer executor.
+
+Pins the four contracts of the refactor:
+  * fused executor == the legacy float-bounce regime, bit-exact, for all
+    five primitives (the fusion pass is exact, not approximate);
+  * the fused-ReLU kernel epilogue is pallas/xla bit-exact per kernel;
+  * the single calibration sweep annotates exactly what the old two-pass
+    (calibrate_bn + quantize_cnn) pipeline computed;
+  * the executor compiles ONCE (one jit for the whole plan) and keeps
+    activations int8 between conv layers (zero float round-trips).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ConvSpec, Primitives, apply_block, fold, frac_bits_for
+from repro.core.qconv import quantize_conv_params
+from repro.core.quantize import QTensor, quantize
+from repro.graph import (CompiledPlan, build_cnn_graph, lower,
+                         unfused_forward)
+from repro.kernels import ops as K
+from repro.models.convnet import CNNConfig, calibrate_bn, cnn_forward, init_cnn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _lowered(prim, *, batch=4):
+    cfg = CNNConfig(primitive=prim, widths=(8, 12), image_size=16)
+    params = init_cnn(cfg, jax.random.PRNGKey(1))
+    calib = jax.random.normal(jax.random.PRNGKey(2),
+                              (batch, 16, 16, 3)) * 0.5
+    plan = lower(build_cnn_graph(cfg), params, calib)
+    return cfg, params, calib, plan
+
+
+# ------------------------------------------------ fused vs legacy regime ---
+
+@pytest.mark.parametrize("prim", Primitives)
+def test_fused_bit_exact_with_legacy_float_bounce(prim):
+    """Acceptance: the fused integer executor reproduces the pre-graph
+    float-bounce path (dequantize -> float ReLU/pool -> requantize at the
+    same annotated scales) bit for bit — fusing ReLU into the accumulator
+    epilogue and pooling int8 codes is exact, not a numerics change."""
+    cfg, params, calib, plan = _lowered(prim)
+    x = jax.random.normal(jax.random.PRNGKey(3), calib.shape) * 0.5
+    fused = CompiledPlan(plan, method="xla")(x)
+    bounce = unfused_forward(plan, x, method="xla")
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(bounce))
+
+
+@pytest.mark.parametrize("prim", Primitives)
+def test_fused_pallas_bit_exact_with_xla(prim):
+    """The whole-plan pallas engine == the xla oracle engine on the int8
+    trunk (float head compared at float tolerance)."""
+    cfg, params, calib, plan = _lowered(prim)
+    x = jax.random.normal(jax.random.PRNGKey(4), calib.shape) * 0.5
+    lx = CompiledPlan(plan, method="pallas")(x)
+    lo = CompiledPlan(plan, method="xla")(x)
+    np.testing.assert_allclose(np.asarray(lx), np.asarray(lo),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("prim", ["standard", "dws", "add"])
+def test_quantized_graph_tracks_float(prim):
+    """PTQ through the graph still tracks the BN-calibrated float net."""
+    cfg, params, calib, plan = _lowered(prim)
+    x = jax.random.normal(jax.random.PRNGKey(5), calib.shape) * 0.5
+    lf = cnn_forward(calibrate_bn(params, cfg, calib), x, cfg)
+    lq = CompiledPlan(plan, method="xla")(x)
+    agree = float(jnp.mean((jnp.argmax(lq, -1) == jnp.argmax(lf, -1))
+                           .astype(jnp.float32)))
+    assert agree >= 0.75, f"{prim}: top-1 agreement {agree}"
+
+
+# -------------------------------------------------- fused-ReLU per kernel --
+
+def _i8(shape, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), shape, -100, 100,
+                              jnp.int32).astype(jnp.int8)
+
+
+@pytest.mark.parametrize("kernel", ["conv2d", "depthwise2d", "shift_conv2d",
+                                    "add_conv2d", "matmul"])
+def test_fused_relu_pallas_bit_exact_per_kernel(kernel):
+    """act='relu' at accumulator scale: pallas == xla bit-exact, and equals
+    relu applied AFTER requantization (the epilogue commutes)."""
+    if kernel == "conv2d":
+        args = (_i8((1, 8, 8, 8)), _i8((3, 3, 8, 16), 1))
+        kw = dict(requant_shift=5)
+    elif kernel == "depthwise2d":
+        args = (_i8((1, 8, 8, 8)), _i8((3, 3, 8), 1))
+        kw = dict(requant_shift=4)
+    elif kernel == "shift_conv2d":
+        shifts = np.array([[(i % 3) - 1, ((i * 2) % 3) - 1] for i in range(8)],
+                          np.int32)
+        args = (_i8((1, 8, 8, 8)), shifts, _i8((8, 16), 1))
+        kw = dict(requant_shift=5)
+    elif kernel == "add_conv2d":
+        args = (_i8((1, 6, 6, 4)), _i8((3, 3, 4, 8), 1))
+        kw = dict(requant_shift=3, w_preshift=1)
+    else:
+        args = (_i8((32, 64)), _i8((64, 16), 1))
+        kw = dict(requant_shift=6)
+    fn = getattr(K, kernel)
+    got_p = fn(*args, method="pallas", act="relu", **kw)
+    got_x = fn(*args, method="xla", act="relu", **kw)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(got_x))
+    assert got_x.dtype == jnp.int8
+    assert int(jnp.min(got_x)) >= 0
+    # commutation: relu-before-shift == relu on the requantized int8
+    post = jnp.maximum(fn(*args, method="xla", **kw), 0)
+    np.testing.assert_array_equal(np.asarray(got_x), np.asarray(post))
+
+
+def test_fused_relu_float_and_causal():
+    """Float paths: act='relu' == relu(out) for conv2d and the causal-conv1d
+    kernel (kernel-level epilogue; the differentiable ops wrapper stays
+    linear)."""
+    x = jax.random.normal(KEY, (1, 8, 8, 4))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 8))
+    got = K.conv2d(x, w, method="pallas", act="relu")
+    want = jax.nn.relu(K.conv2d(x, w, method="xla"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+    from repro.kernels import ref
+    from repro.kernels.conv1d_causal import causal_conv1d
+    xs = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 8))
+    ws = jax.random.normal(jax.random.PRNGKey(3), (4, 8))
+    got = causal_conv1d(xs, ws, block_l=8, block_c=8, act="relu")
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.causal_conv1d_ref(xs, ws,
+                                                                act="relu")),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_maxpool2d_int8_pallas_bit_exact():
+    x = _i8((2, 10, 10, 8))
+    got = K.maxpool2d(x, method="pallas")
+    want = K.maxpool2d(x, method="xla")
+    assert got.dtype == jnp.int8 and got.shape == (2, 5, 5, 8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # pooling int8 codes == pooling the dequantized floats (max commutes)
+    yf = K.maxpool2d(x.astype(jnp.float32) * 2.0 ** -5, method="xla")
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray((yf * 2.0 ** 5).astype(jnp.int8)))
+
+
+# --------------------------------------- single-sweep calibration parity ---
+
+@pytest.mark.parametrize("prim", Primitives)
+def test_single_sweep_matches_two_pass_ptq(prim):
+    """The one-sweep lowering annotates exactly what the old two-pass
+    pipeline (calibrate_bn, then a second calibration pass inside
+    quantize_cnn) computed: same folded+quantized weights, same per-layer
+    output frac bits."""
+    cfg, params, calib, plan = _lowered(prim)
+    from repro.models.convnet import _specs
+
+    # --- the old two-pass pipeline, inline -------------------------------
+    p2 = calibrate_bn(params, cfg, calib)       # pass 1: BN stats
+    specs = _specs(cfg)
+    h = calib
+    legacy = []
+    for p, s in zip(p2["blocks"], specs):       # pass 2: scales + folding
+        float_out = apply_block(p, h, s)
+        if s.primitive != "add":
+            qp = quantize_conv_params(fold(p["conv"], p["bn"], s), s)
+        else:
+            qp = quantize_conv_params(p["conv"], s)
+        legacy.append((qp, frac_bits_for(float_out)))
+        h = jax.lax.reduce_window(float_out, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+    conv_nodes = plan.conv_nodes()
+    assert len(conv_nodes) == len(legacy)
+    qbn_fbs = [n.out_fb for n in plan.nodes if n.op == "qbn"]
+    for node, (qp, ofb) in zip(conv_nodes, legacy):
+        if node.spec.primitive != "add":
+            assert node.out_fb == ofb, node.name
+        else:
+            # add: the block's post-BN+ReLU scale lives on its qbn node
+            assert qbn_fbs.pop(0) == ofb, node.name
+        for k, v in qp.items():
+            got = node.qparams[k]
+            if isinstance(v, QTensor):
+                assert got.frac_bits == v.frac_bits, (node.name, k)
+                np.testing.assert_array_equal(np.asarray(got.q),
+                                              np.asarray(v.q))
+            else:                        # shift tables
+                np.testing.assert_array_equal(np.asarray(got), np.asarray(v))
+
+
+# ------------------------------------------------------- executor contract --
+
+def test_executor_compiles_once():
+    """One jit for the whole plan: repeated calls (same shape) never
+    retrace; a new batch shape retraces exactly once more."""
+    cfg, params, calib, plan = _lowered("standard")
+    ex = CompiledPlan(plan, method="xla")
+    x = jax.random.normal(jax.random.PRNGKey(6), calib.shape) * 0.5
+    for _ in range(3):
+        ex(x)
+    assert ex.traces == 1
+    ex(x[:2])
+    assert ex.traces == 2
+
+
+def test_executor_trunk_stays_int8():
+    """Zero float round-trips between conv layers: every pre-head plan node
+    produces an int8 QTensor (ReLU+pool included)."""
+    cfg, params, calib, plan = _lowered("add")   # add: hardest case (qbn)
+    ex = CompiledPlan(plan, method="xla", jit=False)
+    h = quantize(calib, plan.in_fb)
+    for node in plan.nodes:
+        h = ex._run_node(node, h)
+        if node.op in ("qconv", "qbn", "maxpool"):
+            assert isinstance(h, QTensor) and h.q.dtype == jnp.int8, node.name
+    assert h.shape == (calib.shape[0], cfg.num_classes)
+
+
+def test_executor_resolves_configs_once_per_node():
+    cfg, params, calib, plan = _lowered("dws", batch=2)
+    ex = CompiledPlan(plan, method="pallas")
+    x = jax.random.normal(jax.random.PRNGKey(7), calib.shape) * 0.5
+    ex(x)
+    names = {n.name for n in plan.conv_nodes()}
+    assert set(ex.node_configs) == names
+    assert all(isinstance(c, dict) and c for c in ex.node_configs.values())
+    # dws nodes carry a schedule per stage (the stem stays standard)
+    dws_names = [n.name for n in plan.conv_nodes()
+                 if n.spec.primitive == "dws"]
+    assert dws_names, "config lacks a dws layer"
+    for name in dws_names:
+        assert {"dw", "pw"} <= set(ex.node_configs[name])
+
+
+def test_plan_rejects_method_conflicts():
+    cfg, params, calib, plan = _lowered("standard")
+    with pytest.raises(ValueError, match="method"):
+        CompiledPlan(plan, method="cuda")
+
+
+def test_pallas_raises_outside_kernel_envelope_auto_degrades():
+    """An explicit method='pallas' is a guarantee, not a preference: a
+    stride-2 layer (outside the kernel envelope) raises instead of silently
+    running the oracle; method='auto' degrades that node to xla and matches
+    the pure-oracle plan bit for bit."""
+    from repro.core import init
+    from repro.graph import Graph, Node
+    spec = ConvSpec("standard", 3, 8, 3, stride=2)
+    g = Graph((Node("conv0", "conv", ("x",), spec=spec),
+               Node("gap", "gap", ("conv0",)),
+               Node("head", "dense", ("gap",),)))
+    params = {"blocks": [{"conv": init(jax.random.PRNGKey(0), spec)}],
+              "head": jax.random.normal(jax.random.PRNGKey(1), (8, 10)) * 0.3}
+    calib = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 16, 3)) * 0.5
+    plan = lower(g, params, calib)
+    with pytest.raises(NotImplementedError, match="stride"):
+        CompiledPlan(plan, method="pallas")(calib)
+    got = CompiledPlan(plan, method="auto")(calib)
+    want = CompiledPlan(plan, method="xla")(calib)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -216,6 +216,45 @@ def test_shift_channels_bound_violation_raises():
 
 
 # ----------------------------------------------- ops method= validation ---
+def test_ops_xla_with_explicit_config_rejected():
+    """Satellite: method='xla' used to silently ignore an explicit config=
+    (and matmul its bm/bn/bk); now it raises the conflicting-arguments
+    error, mirroring _check_method."""
+    from repro.kernels import ops
+    x = rnd((1, 8, 8, 4))
+    w = rnd((3, 3, 4, 8), key=jax.random.PRNGKey(1))
+    for fn, args in [
+        (ops.conv2d, (x, w)),
+        (ops.depthwise2d, (x, rnd((3, 3, 4)))),
+        (ops.add_conv2d, (x, w)),
+        (ops.shift_conv2d, (x, jnp.zeros((4, 2), jnp.int32), rnd((4, 8)))),
+        (ops.causal_conv1d, (rnd((1, 16, 4)), rnd((4, 4)))),
+        (ops.matmul, (rnd((8, 8)), rnd((8, 8)))),
+        (ops.maxpool2d, (rnd((1, 8, 8, 4)),)),
+    ]:
+        with pytest.raises(ValueError, match="config"):
+            fn(*args, method="xla", config={"block_co": 8})
+    with pytest.raises(ValueError, match="config"):
+        ops.matmul(rnd((8, 8)), rnd((8, 8)), method="xla", bm=8)
+    # pallas keeps accepting explicit schedules
+    got = ops.matmul(rnd((8, 8)), rnd((8, 8), key=jax.random.PRNGKey(2)),
+                     method="pallas", bm=8, bn=8, bk=8)
+    assert got.shape == (8, 8)
+
+
+def test_ops_maxpool2d_shapes_and_parity():
+    x = rnd((2, 9, 9, 4))
+    got = ops_maxpool_both(x, window=3, stride=3)
+    assert got[0].shape == (2, 3, 3, 4)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(got[1]))
+
+
+def ops_maxpool_both(x, **kw):
+    from repro.kernels import ops
+    return ops.maxpool2d(x, method="pallas", **kw), \
+        ops.maxpool2d(x, method="xla", **kw)
+
+
 def test_ops_unknown_method_rejected():
     from repro.kernels import ops
     x = rnd((1, 8, 8, 4))
