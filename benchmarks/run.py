@@ -10,6 +10,8 @@
   quant   -> quant_bench       (pallas-int8 / xla-int8 / float per primitive)
   layers  -> layer_bench       (repro.graph per-layer breakdown; fused vs
                                 unfused float-bounce e2e)
+  throughput -> throughput_bench (batched CompiledPlan images/s vs the N=1
+                                loop; MACs/byte reuse table; CNNEngine)
   roofline-> roofline_report   (from dry-run artifacts, if present)
   serving -> serve_bench       (static-drain vs continuous batching)
 
@@ -25,7 +27,7 @@ import traceback
 def main() -> None:
     from . import (frequency, kernels_bench, layer_bench, memaccess, optlevel,
                    primitive_costs, quant_bench, roofline_report, serve_bench,
-                   sweeps)
+                   sweeps, throughput_bench)
     sections = [
         ("table1", primitive_costs.main),
         ("fig2", sweeps.main),
@@ -35,6 +37,7 @@ def main() -> None:
         ("kernels", kernels_bench.main),
         ("quant", quant_bench.main),
         ("layers", layer_bench.main),
+        ("throughput", throughput_bench.main),
         ("roofline", roofline_report.main),
         ("serving", serve_bench.main),
     ]

@@ -3,6 +3,13 @@ commit a persistent config cache.
 
     PYTHONPATH=src python scripts/tune.py --shapes table2 --out tuned.json
 
+The committed artifacts/tune_cache.json (schema v2 — the batched/tiled
+block_n/block_h/block_w spaces) is regenerated with:
+
+    PYTHONPATH=src python scripts/tune.py --shapes table2 \
+        --cnn standard,dws,shift,add --cnn-batch 8 \
+        --out artifacts/tune_cache.json
+
 The resulting JSON can be installed for the dispatch layer either by saving
 it to artifacts/tune_cache.json (the default lookup location) or by
 pointing REPRO_TUNE_CACHE at it. Without any cache, kernels run on the
@@ -73,6 +80,12 @@ def _add(n, h, w, ci, co, k, dtype="float32"):
             (mk((n, h, w, ci)), mk((k, k, ci, co))), dtype, _qkw(dtype))
 
 
+def _pool(n, h, w, c, window, stride, dtype="int8"):
+    mk = _i8 if dtype == "int8" else _f32
+    return ("maxpool2d", tune.sig_maxpool2d(n, h, w, c, window, stride),
+            (mk((n, h, w, c)),), dtype, dict(window=window, stride=stride))
+
+
 def _c1d(b, l, d, k):
     return ("causal_conv1d", tune.sig_causal_conv1d(b, l, d, k),
             (_f32((b, l, d)), _f32((k, d))), "float32")
@@ -111,6 +124,13 @@ def shapes_table2():
         _depthwise(1, 32, 32, 64, 3, dtype="int8"),
         _shift(1, 32, 32, 64, 64, dtype="int8"),
         _add(1, 10, 10, 16, 16, 3, dtype="int8"),
+        # batched serving shapes: the block_n/block_h/block_w halves of the
+        # tiled-grid spaces are live here (at n=1 they dedupe away)
+        _conv2d(8, 32, 32, 16, 16, 3, dtype="int8"),
+        _depthwise(8, 32, 32, 64, 3, dtype="int8"),
+        _shift(8, 32, 32, 64, 64, dtype="int8"),
+        _add(8, 10, 10, 16, 16, 3, dtype="int8"),
+        _pool(8, 32, 32, 64, 2, 2),
         # LM-side kernels
         _c1d(2, 512, 256, 4),
         _matmul(256, 512, 256),

@@ -146,16 +146,66 @@ class CompiledPlan:
     def __call__(self, x):
         return self._fn(x)
 
+    # ------------------------------------------------------ batched serving
+
+    @staticmethod
+    def batch_bucket(n: int) -> int:
+        """Smallest power of two >= n: the batch sizes forward_batch
+        actually compiles for, so arbitrary request counts cost at most
+        O(log max_batch) traces."""
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
+    def forward_batch(self, x):
+        """Throughput entry point: one batched forward over a leading batch
+        dim, zero-padded up to the pow2 batch bucket and cropped back, so
+        the ONE plan jit is reused across ragged microbatches instead of
+        retracing per batch size. The int8 trunk is bit-exact with the
+        per-sample loop — every plan op is row-independent and the batched
+        kernel grids accumulate each image's taps in the per-image order —
+        while the float gap->dense head agrees only to ~1e-6 (and exactly
+        by argmax): XLA picks batch-size-dependent float matmul kernels, so
+        don't hash or exact-compare the logits across batch sizes."""
+        n = x.shape[0]
+        b = self.batch_bucket(n)
+        if b != n:
+            x = jnp.concatenate(
+                [x, jnp.zeros((b - n,) + x.shape[1:], x.dtype)])
+        return self._fn(x)[:n]
+
+    def throughput(self, x, *, reps: int = 5, warmup: int = 2) -> dict:
+        """Measured images/s of the batched path at ``x``'s batch size
+        (post-warmup, median-of-reps — the §Throughput headline number)."""
+        from repro.tune.runner import time_config
+        us = time_config(self.forward_batch, x, reps=reps, warmup=warmup)
+        n = x.shape[0]
+        return {"batch": n, "bucket": self.batch_bucket(n),
+                "us_per_batch": us, "us_per_image": us / n,
+                "images_per_s": 1e6 * n / us}
+
     # ------------------------------------------------- per-layer attribution
 
-    def profile(self, x, *, f_mhz: float = 84.0, reps: int = 3) -> List[dict]:
+    def profile(self, x, *, f_mhz: float = 84.0, reps: int = 3,
+                mode: str = "latency") -> List[dict]:
         """Instrumented execution: one row per plan node with measured
         latency (node jitted standalone), analytic MACs, and the
         paper-calibrated MCU latency/energy model (scalar vs SIMD) for the
-        conv nodes — the paper's per-layer Table-2 reading."""
+        conv nodes — the paper's per-layer Table-2 reading.
+
+        ``mode="throughput"`` reads the same rows as a traffic-serving
+        profile: each row additionally carries the node's delivered
+        ``images_per_s`` and amortized ``us_per_image`` at ``x``'s batch
+        size (per-layer cost is a per-batch quantity under the tiled
+        batched schedules, so profile at the batch you serve)."""
+        if mode not in ("latency", "throughput"):
+            raise ValueError(f"unknown profile mode {mode!r}; expected "
+                             "'latency' or 'throughput'")
         from repro.tune.runner import time_config
         mcu = MCUModel()
         rows: List[dict] = []
+        batch = x.shape[0]
         h = quantize(x, self.plan.in_fb)
         for node in self.plan.nodes:
             fn = jax.jit(lambda v, _n=node: self._run_node(_n, v))
@@ -173,6 +223,9 @@ class CompiledPlan:
                     node.spec, width, simd=False, f_mhz=f_mhz)
                 row["mcu_e_simd_mj"] = mcu.energy_mj(
                     node.spec, width, simd=True, f_mhz=f_mhz)
+            if mode == "throughput":
+                row["us_per_image"] = us / batch
+                row["images_per_s"] = 1e6 * batch / us if us > 0 else 0.0
             h = fn(h)
             rows.append(row)
         return rows

@@ -218,7 +218,9 @@ def lower(graph: Graph, params: dict, calib_x: jax.Array) -> Plan:
             plan_nodes.append(PlanNode(
                 n.name, "maxpool", in_fb=fb[src], out_fb=fb[src],
                 attrs={"window": n.attr("window", 2),
-                       "stride": n.attr("stride", 2)}))
+                       "stride": n.attr("stride", 2),
+                       "in_hw": (acts[src].shape[1], acts[src].shape[2]),
+                       "in_ch": acts[src].shape[3]}))
             fb[n.name] = fb[src]
         elif n.op == "gap":
             plan_nodes.append(PlanNode(n.name, "gap", in_fb=fb[src]))

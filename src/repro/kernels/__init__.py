@@ -11,6 +11,14 @@ pool        : int8 max-pool (the graph executor's integer pool boundary)
 Every conv kernel + matmul_q8 takes ``act="relu"`` — the fused activation
 epilogue at accumulator scale the repro.graph executor chains between
 requantized layers.
+
+All five conv kernels (+ pool) run the tiled ``(batch_block, spatial_tile,
+group/channel, co_block)`` grid: ``block_n`` images share each weight-block
+load per grid step (the paper's Fig-3 data reuse, scaled by the batch) and
+``block_h``/``block_w`` halo tiles bound VMEM on large feature maps;
+matmul_q8 folds a leading batch dim into its M grid. ``interpret`` defaults
+to backend-detected (compiled on TPU, interpreter elsewhere; CI pins
+REPRO_PALLAS_INTERPRET=1).
 """
 from .ops import (conv2d, depthwise2d, shift_conv2d, add_conv2d,
                   causal_conv1d, matmul, maxpool2d)

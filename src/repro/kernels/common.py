@@ -26,6 +26,15 @@ def use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def resolve_interpret(interpret) -> bool:
+    """Resolve a kernel wrapper's ``interpret`` argument: ``None`` (the
+    default everywhere) means backend-detected — compiled on TPU, interpreter
+    elsewhere (and whatever REPRO_PALLAS_INTERPRET forces, which is how CI
+    pins interpret mode). An explicit bool always wins, so benchmarks can
+    still measure the interpreter deliberately."""
+    return use_interpret() if interpret is None else bool(interpret)
+
+
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
 
@@ -89,6 +98,64 @@ def apply_act(acc: jax.Array, act: str | None) -> jax.Array:
     if act == "relu":
         return jnp.maximum(acc, 0)
     raise ValueError(f"unknown act {act!r}; expected 'relu' or None")
+
+
+def resolve_tile_config(config, block_n: int, block_h, block_w):
+    """Overlay a repro.tune schedule dict onto a kernel wrapper's
+    (block_n, block_h, block_w) arguments — the one place the tiled-grid
+    knobs are parsed, so every kernel stays in sync with the tuner's space
+    (falsy/absent spatial blocks mean "whole extent")."""
+    if config:
+        block_n = int(config.get("block_n", block_n))
+        block_h = int(config["block_h"]) if config.get("block_h") else block_h
+        block_w = int(config["block_w"]) if config.get("block_w") else block_w
+    return block_n, block_h, block_w
+
+
+def batch_spatial_schedule(n: int, h: int, w: int, block_n: int,
+                           block_h, block_w):
+    """Resolve the (batch_block, spatial_tile) half of the tiled conv grid.
+
+    ``block_n`` degrades to the largest divisor of the batch (the executor's
+    pow2 batch buckets make this exact in practice); ``block_h``/``block_w``
+    clamp to the output extent and grid with cdiv + wrapper padding, so odd
+    feature maps get ragged final tiles instead of degenerate 1-row blocks.
+    ``None`` spatial blocks mean "whole extent" (the untiled pre-batching
+    schedule). Returns ``(bn, bh, bw, n_th, n_tw)``.
+    """
+    bn = effective_block(n, max(1, int(block_n)))
+    bh = max(1, min(int(block_h) if block_h else h, h))
+    bw = max(1, min(int(block_w) if block_w else w, w))
+    return bn, bh, bw, cdiv(h, bh), cdiv(w, bw)
+
+
+def halo_tiles(x: jax.Array, n_th: int, n_tw: int, step_h: int, step_w: int,
+               size_h: int, size_w: int) -> jax.Array:
+    """Overlapping spatial tile tensor for the halo-padded conv/pool grids:
+    ``(N, Hp, Wp, C) -> (N, Th, Tw, size_h, size_w, C)`` where tile (i, j)
+    is ``x[:, i*step_h : i*step_h+size_h, j*step_w : j*step_w+size_w]``.
+
+    Pallas blocked BlockSpecs stride by the block shape, so halos cannot be
+    expressed as overlapping blocks directly; instead the wrapper duplicates
+    the ``size - step`` halo rows/cols once in HBM (overhead factor
+    ``size/step`` per axis — small for the tile sizes the tuner picks) and
+    the kernel grid indexes disjoint tiles. Bottom/right are zero-padded to
+    full tiles; the padded region only feeds output rows the wrapper crops,
+    so correctness never depends on the pad value. The untiled case
+    (one tile covering everything) degenerates to a free reshape.
+    """
+    n, hp, wp, c = x.shape
+    need_h = (n_th - 1) * step_h + size_h
+    need_w = (n_tw - 1) * step_w + size_w
+    if need_h > hp or need_w > wp:
+        x = jnp.pad(x, ((0, 0), (0, max(0, need_h - hp)),
+                        (0, max(0, need_w - wp)), (0, 0)))
+    if n_th == 1 and n_tw == 1:
+        return x[:, None, None, :size_h, :size_w, :]
+    rows = jnp.stack([x[:, i * step_h:i * step_h + size_h]
+                      for i in range(n_th)], axis=1)
+    return jnp.stack([rows[:, :, :, j * step_w:j * step_w + size_w, :]
+                      for j in range(n_tw)], axis=2)
 
 
 def effective_block(dim: int, block: int) -> int:

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, apply_act, cdiv, effective_block
+from .common import acc_dtype, apply_act, cdiv, effective_block, resolve_interpret
 
 
 def _kernel(xa_ref, xb_ref, w_ref, o_ref, *, k, bl, out_dtype, act=None):
@@ -36,20 +36,21 @@ def _kernel(xa_ref, xb_ref, w_ref, o_ref, *, k, bl, out_dtype, act=None):
 
 def causal_conv1d(x: jax.Array, w: jax.Array, *, block_l: int = 512,
                   block_c: int = 512, act: str | None = None,
-                  interpret: bool = True,
+                  interpret: bool | None = None,
                   config: dict | None = None) -> jax.Array:
     """out[b,l,d] = sum_k w[k,d] * x[b, l-K+1+k, d]. x: (B,L,D); w: (K,D).
 
     ``act="relu"`` fuses the activation into the epilogue (inference only —
     the ops-layer custom VJP assumes a linear kernel, so the differentiable
     entry point does not expose it). ``config`` (a repro.tune schedule dict)
-    overrides the block parameters.
+    overrides the block parameters. ``interpret=None`` auto-detects the
+    backend.
     """
     if config:
         block_l = int(config.get("block_l", block_l))
         block_c = int(config.get("block_c", block_c))
     return _causal_conv1d(x, w, block_l=block_l, block_c=block_c, act=act,
-                          interpret=interpret)
+                          interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("block_l", "block_c", "act",

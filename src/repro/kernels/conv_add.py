@@ -8,6 +8,11 @@ kernel is the TPU-faithful equivalent: broadcast |patch - w| tiles on the
 8x128 VPU with VMEM-blocked filters, accumulating in int32/f32. Its
 per-MAC cost is intrinsically higher than the MXU paths — reproducing the
 paper's measured add-conv penalty at the architectural level.
+
+Grid: (batch_block, spatial_tile, out-channel-block). The broadcast
+intermediate is (BN*BH*BW, Cx, BCO), so the spatial tile is the knob that
+keeps this kernel inside VMEM; ``block_n`` amortizes filter loads like the
+MXU kernels.
 """
 from __future__ import annotations
 
@@ -17,55 +22,71 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, apply_act, apply_requant, effective_block
+from .common import (acc_dtype, apply_act, apply_requant,
+                     batch_spatial_schedule, effective_block, halo_tiles,
+                     resolve_interpret, resolve_tile_config)
 
 
-def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift,
+def _kernel(x_ref, w_ref, o_ref, *, hk, bh, bw, out_dtype, requant_shift,
             x_preshift, w_preshift, act=None, bias_ref=None):
+    # x_ref: (BN, 1, 1, BH+HK-1, BW+HK-1, Cx); w_ref: (HK, HK, Cx, BCO)
     adt = acc_dtype(x_ref.dtype)
     cx = x_ref.shape[-1]
     bco = w_ref.shape[-1]
-    acc = jnp.zeros((hout * wout, bco), adt)
+    bn = x_ref.shape[0]
+    acc = jnp.zeros((bn * bh * bw, bco), adt)
     for i in range(hk):
         for j in range(hk):
-            patch = x_ref[0, i:i + hout, j:j + wout, :].astype(adt)
+            patch = x_ref[:, 0, 0, i:i + bh, j:j + bw, :].astype(adt)
             if x_preshift:                  # Algorithm 1 (right): align scales
                 patch = jnp.left_shift(patch, x_preshift)
             wv = w_ref[i, j].astype(adt)    # (Cx, BCO)
             if w_preshift:
                 wv = jnp.left_shift(wv, w_preshift)
-            a = patch.reshape(hout * wout, cx)
+            a = patch.reshape(bn * bh * bw, cx)
             # -Σ_c |a[:, c] - w[c, n]| : VPU broadcast, no MXU analogue
             acc = acc - jnp.sum(jnp.abs(a[:, :, None] - wv[None, :, :]), axis=1)
     if bias_ref is not None:                # bias at accumulator scale
         acc = acc + bias_ref[...].astype(adt)[None, :]
     acc = apply_act(acc, act)
     acc = apply_requant(acc, requant_shift)
-    o_ref[0] = acc.reshape(hout, wout, bco).astype(out_dtype)
+    o_ref[...] = acc.reshape(bn, bh, bw, bco).astype(out_dtype)
 
 
 def add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
+               block_n: int = 1, block_h: int | None = None,
+               block_w: int | None = None,
                requant_shift: int | None = None, x_preshift: int = 0,
                w_preshift: int = 0, act: str | None = None, out_dtype=None,
-               interpret: bool = True, config: dict | None = None) -> jax.Array:
+               interpret: bool | None = None,
+               config: dict | None = None) -> jax.Array:
     """SAME stride-1 AdderNet conv (Eq. 3). x: (N,H,W,Cx); w: (HK,HK,Cx,Cy).
 
     ``bias`` (optional, (Cy,)) is added at accumulator scale before the
     requantization epilogue; ``act="relu"`` fuses the activation at
     accumulator scale after it. ``config`` (a repro.tune schedule dict)
-    overrides the block parameters.
+    overrides the block parameters (``block_co``, ``block_n``,
+    ``block_h``/``block_w``). ``interpret=None`` auto-detects the backend.
     """
     if config:
         block_co = int(config.get("block_co", block_co))
-    return _add_conv2d(x, w, bias, block_co=block_co, requant_shift=requant_shift,
+    block_n, block_h, block_w = resolve_tile_config(config, block_n,
+                                                    block_h, block_w)
+    return _add_conv2d(x, w, bias, block_co=block_co, block_n=block_n,
+                       block_h=block_h, block_w=block_w,
+                       requant_shift=requant_shift,
                        x_preshift=x_preshift, w_preshift=w_preshift, act=act,
-                       out_dtype=out_dtype, interpret=interpret)
+                       out_dtype=out_dtype,
+                       interpret=resolve_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("block_co", "requant_shift",
+@functools.partial(jax.jit, static_argnames=("block_co", "block_n", "block_h",
+                                             "block_w", "requant_shift",
                                              "x_preshift", "w_preshift",
                                              "act", "out_dtype", "interpret"))
 def _add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
+                block_n: int = 1, block_h: int | None = None,
+                block_w: int | None = None,
                 requant_shift: int | None = None, x_preshift: int = 0,
                 w_preshift: int = 0, act: str | None = None, out_dtype=None,
                 interpret: bool = True) -> jax.Array:
@@ -74,31 +95,49 @@ def _add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
     out_dtype = out_dtype or (jnp.int8 if requant_shift is not None else x.dtype)
     ph, pw = hk // 2, (hk - 1) // 2
     xp = jnp.pad(x, ((0, 0), (ph, pw), (ph, pw), (0, 0)))
-    hp, wp = xp.shape[1], xp.shape[2]
     bco = effective_block(cy, block_co)
-    kern = functools.partial(_kernel, hk=hk, hout=h, wout=wd,
+    n_co = cy // bco
+    bn, bh, bw, n_th, n_tw = batch_spatial_schedule(n, h, wd, block_n,
+                                                    block_h, block_w)
+    halo = hk - 1
+    tiles = halo_tiles(xp, n_th, n_tw, bh, bw, bh + halo, bw + halo)
+
+    def x_index(b, s, cb):
+        return (b, s // n_tw, s % n_tw, 0, 0, 0)
+
+    def w_index(b, s, cb):
+        return (0, 0, 0, cb)
+
+    def co_index(b, s, cb):
+        return (cb,)
+
+    def o_index(b, s, cb):
+        return (b, s // n_tw, s % n_tw, cb)
+
+    kern = functools.partial(_kernel, hk=hk, bh=bh, bw=bw,
                              out_dtype=out_dtype, requant_shift=requant_shift,
                              x_preshift=x_preshift, w_preshift=w_preshift,
                              act=act)
     in_specs = [
-        pl.BlockSpec((1, hp, wp, cx), lambda b, cb: (b, 0, 0, 0)),
-        pl.BlockSpec((hk, hk, cx, bco), lambda b, cb: (0, 0, 0, cb)),
+        pl.BlockSpec((bn, 1, 1, bh + halo, bw + halo, cx), x_index),
+        pl.BlockSpec((hk, hk, cx, bco), w_index),
     ]
-    args = [xp, w]
+    args = [tiles, w]
     if bias is not None:
         def kern_bias(x_ref, w_ref, b_ref, o_ref):
-            _kernel(x_ref, w_ref, o_ref, hk=hk, hout=h, wout=wd,
+            _kernel(x_ref, w_ref, o_ref, hk=hk, bh=bh, bw=bw,
                     out_dtype=out_dtype, requant_shift=requant_shift,
                     x_preshift=x_preshift, w_preshift=w_preshift,
                     act=act, bias_ref=b_ref)
         kern = kern_bias
-        in_specs.append(pl.BlockSpec((bco,), lambda b, cb: (cb,)))
+        in_specs.append(pl.BlockSpec((bco,), co_index))
         args.append(bias)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
-        grid=(n, cy // bco),
+        grid=(n // bn, n_th * n_tw, n_co),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, h, wd, bco), lambda b, cb: (b, 0, 0, cb)),
-        out_shape=jax.ShapeDtypeStruct((n, h, wd, cy), out_dtype),
+        out_specs=pl.BlockSpec((bn, bh, bw, bco), o_index),
+        out_shape=jax.ShapeDtypeStruct((n, n_th * bh, n_tw * bw, cy), out_dtype),
         interpret=interpret,
     )(*args)
+    return out[:, :h, :wd, :]

@@ -6,6 +6,11 @@ than pointwise on real hardware despite fewer MACs. On TPU it runs on the
 8x128 VPU as HK^2 shifted element-wise multiply-accumulates; channels map
 to the 128-lane dimension. Used standalone (dws primitive, stage 1) and as
 the reference pattern for the Mamba causal conv1d kernel.
+
+Grid: (batch_block, spatial_tile, channel-block). ``block_n`` images share
+each filter-slice load per grid step and ``block_h``/``block_w`` bound the
+halo-padded VMEM tile on large feature maps (same schedule family as
+conv_im2col).
 """
 from __future__ import annotations
 
@@ -15,42 +20,58 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, apply_act, apply_requant, effective_block
+from .common import (acc_dtype, apply_act, apply_requant,
+                     batch_spatial_schedule, effective_block, halo_tiles,
+                     resolve_interpret, resolve_tile_config)
 
 
-def _kernel(x_ref, w_ref, o_ref, *, hk, hout, wout, out_dtype, requant_shift,
+def _kernel(x_ref, w_ref, o_ref, *, hk, bh, bw, out_dtype, requant_shift,
             act=None):
+    # x_ref: (BN, 1, 1, BH+HK-1, BW+HK-1, BC); w_ref: (HK, HK, BC)
     adt = acc_dtype(x_ref.dtype)
     bc = w_ref.shape[-1]
-    acc = jnp.zeros((hout, wout, bc), adt)
+    bn = x_ref.shape[0]
+    acc = jnp.zeros((bn, bh, bw, bc), adt)
     for i in range(hk):
         for j in range(hk):
-            acc = acc + (x_ref[0, i:i + hout, j:j + wout, :].astype(adt)
-                         * w_ref[i, j].astype(adt)[None, None, :])
+            acc = acc + (x_ref[:, 0, 0, i:i + bh, j:j + bw, :].astype(adt)
+                         * w_ref[i, j].astype(adt)[None, None, None, :])
     acc = apply_act(acc, act)
     acc = apply_requant(acc, requant_shift)
-    o_ref[0] = acc.astype(out_dtype)
+    o_ref[...] = acc.astype(out_dtype)
 
 
 def depthwise2d(x: jax.Array, w_dw: jax.Array, *, block_c: int = 128,
+                block_n: int = 1, block_h: int | None = None,
+                block_w: int | None = None,
                 requant_shift: int | None = None, act: str | None = None,
                 out_dtype=None,
-                interpret: bool = True, config: dict | None = None) -> jax.Array:
+                interpret: bool | None = None,
+                config: dict | None = None) -> jax.Array:
     """SAME stride-1 depthwise conv. x: (N,H,W,C); w_dw: (HK,HK,C).
 
     ``act="relu"`` fuses the activation at accumulator scale before the
     requantization epilogue. ``config`` (a repro.tune schedule dict)
-    overrides the block parameters.
+    overrides the block parameters (``block_c``, ``block_n``,
+    ``block_h``/``block_w``). ``interpret=None`` auto-detects the backend.
     """
     if config:
         block_c = int(config.get("block_c", block_c))
-    return _depthwise2d(x, w_dw, block_c=block_c, requant_shift=requant_shift,
-                        act=act, out_dtype=out_dtype, interpret=interpret)
+    block_n, block_h, block_w = resolve_tile_config(config, block_n,
+                                                    block_h, block_w)
+    return _depthwise2d(x, w_dw, block_c=block_c, block_n=block_n,
+                        block_h=block_h, block_w=block_w,
+                        requant_shift=requant_shift,
+                        act=act, out_dtype=out_dtype,
+                        interpret=resolve_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("block_c", "requant_shift",
+@functools.partial(jax.jit, static_argnames=("block_c", "block_n", "block_h",
+                                             "block_w", "requant_shift",
                                              "act", "out_dtype", "interpret"))
 def _depthwise2d(x: jax.Array, w_dw: jax.Array, *, block_c: int = 128,
+                 block_n: int = 1, block_h: int | None = None,
+                 block_w: int | None = None,
                  requant_shift: int | None = None, act: str | None = None,
                  out_dtype=None,
                  interpret: bool = True) -> jax.Array:
@@ -61,19 +82,33 @@ def _depthwise2d(x: jax.Array, w_dw: jax.Array, *, block_c: int = 128,
     out_dtype = out_dtype or (jnp.int8 if requant_shift is not None else x.dtype)
     ph, pw = hk // 2, (hk - 1) // 2
     xp = jnp.pad(x, ((0, 0), (ph, pw), (ph, pw), (0, 0)))
-    hp, wp = xp.shape[1], xp.shape[2]
     bc = effective_block(c, block_c)
-    kern = functools.partial(_kernel, hk=hk, hout=h, wout=wd,
+    bn, bh, bw, n_th, n_tw = batch_spatial_schedule(n, h, wd, block_n,
+                                                    block_h, block_w)
+    halo = hk - 1
+    tiles = halo_tiles(xp, n_th, n_tw, bh, bw, bh + halo, bw + halo)
+
+    def x_index(b, s, cb):
+        return (b, s // n_tw, s % n_tw, 0, 0, cb)
+
+    def w_index(b, s, cb):
+        return (0, 0, cb)
+
+    def o_index(b, s, cb):
+        return (b, s // n_tw, s % n_tw, cb)
+
+    kern = functools.partial(_kernel, hk=hk, bh=bh, bw=bw,
                              out_dtype=out_dtype, requant_shift=requant_shift,
                              act=act)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
-        grid=(n, c // bc),
+        grid=(n // bn, n_th * n_tw, c // bc),
         in_specs=[
-            pl.BlockSpec((1, hp, wp, bc), lambda b, cb: (b, 0, 0, cb)),
-            pl.BlockSpec((hk, hk, bc), lambda b, cb: (0, 0, cb)),
+            pl.BlockSpec((bn, 1, 1, bh + halo, bw + halo, bc), x_index),
+            pl.BlockSpec((hk, hk, bc), w_index),
         ],
-        out_specs=pl.BlockSpec((1, h, wd, bc), lambda b, cb: (b, 0, 0, cb)),
-        out_shape=jax.ShapeDtypeStruct((n, h, wd, c), out_dtype),
+        out_specs=pl.BlockSpec((bn, bh, bw, bc), o_index),
+        out_shape=jax.ShapeDtypeStruct((n, n_th * bh, n_tw * bw, c), out_dtype),
         interpret=interpret,
-    )(xp, w_dw)
+    )(tiles, w_dw)
+    return out[:, :h, :wd, :]

@@ -6,16 +6,20 @@ TPU adaptation of the paper's CMSIS-NN im2col + __SMLAD path (§3.3):
   to maximize register-file reuse. The TPU analogue keeps the patch tile in
   VMEM and re-uses it against a BCO-wide *block* of filters on the 128x128
   MXU — "lazy im2col": the HK x HK patch structure is expressed as HK^2
-  statically-shifted (H*W, Cx) x (Cx, BCO) matmuls accumulated in VMEM, so
-  the column matrix is never materialized in HBM at all. Data reuse per
-  byte loaded is Cx*BCO MACs vs the scalar path's 1 (the Fig-3 quantity).
+  statically-shifted (BN*BH*BW, Cx) x (Cx, BCO) matmuls accumulated in
+  VMEM, so the column matrix is never materialized in HBM at all.
 * int8 path: the MXU consumes int8 directly with int32 accumulation, and
   the epilogue applies the paper's Algorithm-1 shift requantization — no
   int16 widening step, unlike __SMLAD.
 
-Grid: (batch, group, out-channel-block). One grid step owns one image, one
-group, one filter block; the image's padded spatial extent lives in VMEM
-(MCU-scale feature maps: <= a few hundred KB).
+Grid: (batch_block, spatial_tile, group, out-channel-block). One grid step
+owns ``block_n`` images' worth of one halo-padded (block_h, block_w) output
+tile, one group, one filter block. Batch blocking amortizes each filter
+block load across ``block_n`` images — the Fig-3 data-reuse quantity grows
+from Cx*BCO to BN*Cx*BCO MACs per weight byte — while spatial tiling keeps
+the VMEM footprint bounded on feature maps larger than the MCU-scale ones
+the paper measures (the per-layer blocking argument of "Not All Ops Are
+Created Equal!").
 """
 from __future__ import annotations
 
@@ -25,20 +29,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, apply_act, apply_requant, effective_block
+from .common import (acc_dtype, apply_act, apply_requant,
+                     batch_spatial_schedule, effective_block, halo_tiles,
+                     resolve_interpret, resolve_tile_config)
 
 
-def _kernel(x_ref, w_ref, o_ref, *, hk: int, hout: int, wout: int,
+def _kernel(x_ref, w_ref, o_ref, *, hk: int, bh: int, bw: int,
             out_dtype, requant_shift: int | None, act: str | None = None,
             bias_ref=None):
+    # x_ref: (BN, 1, 1, BH+HK-1, BW+HK-1, Cx); w_ref: (HK, HK, Cx, BCO)
     cx = x_ref.shape[-1]
     bco = w_ref.shape[-1]
+    bn = x_ref.shape[0]
     adt = acc_dtype(x_ref.dtype)
-    acc = jnp.zeros((hout * wout, bco), adt)
+    acc = jnp.zeros((bn * bh * bw, bco), adt)
     for i in range(hk):                      # static unroll: HK^2 MXU calls
         for j in range(hk):
-            patch = x_ref[0, i:i + hout, j:j + wout, :]
-            a = patch.reshape(hout * wout, cx)
+            patch = x_ref[:, 0, 0, i:i + bh, j:j + bw, :]
+            a = patch.reshape(bn * bh * bw, cx)
             b = w_ref[i, j]
             acc = acc + jnp.dot(a.astype(adt), b.astype(adt),
                                 preferred_element_type=adt)
@@ -48,32 +56,45 @@ def _kernel(x_ref, w_ref, o_ref, *, hk: int, hout: int, wout: int,
     # nearest shift, clip, int8
     acc = apply_act(acc, act)
     acc = apply_requant(acc, requant_shift)
-    o_ref[0] = acc.reshape(hout, wout, bco).astype(out_dtype)
+    o_ref[...] = acc.reshape(bn, bh, bw, bco).astype(out_dtype)
 
 
 def conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
-                  block_co: int = 128, requant_shift: int | None = None,
+                  block_co: int = 128, block_n: int = 1,
+                  block_h: int | None = None, block_w: int | None = None,
+                  requant_shift: int | None = None,
                   act: str | None = None, out_dtype=None,
-                  interpret: bool = True,
+                  interpret: bool | None = None,
                   config: dict | None = None) -> jax.Array:
     """SAME-padded stride-1 conv. x: (N,H,W,Cx); w: (HK,HK,Cx/g,Cy).
 
     int8 x int8 -> int8 when ``requant_shift`` is given (int32 accumulate);
     float paths accumulate in f32. ``act="relu"`` fuses the activation at
     accumulator scale (after bias, before requantization). ``config`` (a
-    repro.tune schedule dict) overrides the block parameters.
+    repro.tune schedule dict) overrides the block parameters:
+    ``block_co`` (filters per step), ``block_n`` (images per step — weight
+    reuse), ``block_h``/``block_w`` (halo-padded spatial tile; ``None`` =
+    whole map). ``interpret=None`` auto-detects the backend.
     """
     if config:
         block_co = int(config.get("block_co", block_co))
+    block_n, block_h, block_w = resolve_tile_config(config, block_n,
+                                                    block_h, block_w)
     return _conv2d_im2col(x, w, bias, groups=groups, block_co=block_co,
+                          block_n=block_n, block_h=block_h, block_w=block_w,
                           requant_shift=requant_shift, act=act,
-                          out_dtype=out_dtype, interpret=interpret)
+                          out_dtype=out_dtype,
+                          interpret=resolve_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("groups", "block_co", "requant_shift",
+@functools.partial(jax.jit, static_argnames=("groups", "block_co", "block_n",
+                                             "block_h", "block_w",
+                                             "requant_shift",
                                              "act", "out_dtype", "interpret"))
 def _conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
-                   block_co: int = 128, requant_shift: int | None = None,
+                   block_co: int = 128, block_n: int = 1,
+                   block_h: int | None = None, block_w: int | None = None,
+                   requant_shift: int | None = None,
                    act: str | None = None,
                    out_dtype=None, interpret: bool = True) -> jax.Array:
     n, h, wd, cx = x.shape
@@ -82,37 +103,55 @@ def _conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
     out_dtype = out_dtype or (jnp.int8 if requant_shift is not None else x.dtype)
     ph, pw = hk // 2, (hk - 1) // 2
     xp = jnp.pad(x, ((0, 0), (ph, pw), (ph, pw), (0, 0)))
-    hp, wp = xp.shape[1], xp.shape[2]
 
     co_per_g = cy // groups
     bco = effective_block(co_per_g, block_co)
     n_co = co_per_g // bco
+    bn, bh, bw, n_th, n_tw = batch_spatial_schedule(n, h, wd, block_n,
+                                                    block_h, block_w)
+    halo = hk - 1
+    tiles = halo_tiles(xp, n_th, n_tw, bh, bw, bh + halo, bw + halo)
+    hp_out, wp_out = n_th * bh, n_tw * bw
 
-    kern = functools.partial(_kernel, hk=hk, hout=h, wout=wd,
+    # index maps close over the RESOLVED schedule (n_co/n_tw computed from
+    # the effective blocks above) — no default-arg captures, so a config
+    # that rounds through effective_block can never leave a stale divisor
+    # in the lambdas
+    def x_index(b, s, g, c):
+        return (b, s // n_tw, s % n_tw, 0, 0, g)
+
+    def w_index(b, s, g, c):
+        return (0, 0, 0, g * n_co + c)
+
+    def co_index(b, s, g, c):
+        return (g * n_co + c,)
+
+    def o_index(b, s, g, c):
+        return (b, s // n_tw, s % n_tw, g * n_co + c)
+
+    kern = functools.partial(_kernel, hk=hk, bh=bh, bw=bw,
                              out_dtype=out_dtype, requant_shift=requant_shift,
                              act=act)
     in_specs = [
-        pl.BlockSpec((1, hp, wp, cxg), lambda b, g, c: (b, 0, 0, g)),
-        pl.BlockSpec((hk, hk, cxg, bco),
-                     lambda b, g, c, _n=n_co: (0, 0, 0, g * _n + c)),
+        pl.BlockSpec((bn, 1, 1, bh + halo, bw + halo, cxg), x_index),
+        pl.BlockSpec((hk, hk, cxg, bco), w_index),
     ]
-    args = [xp, w]
+    args = [tiles, w]
     if bias is not None:
         def kern_bias(x_ref, w_ref, b_ref, o_ref):
-            _kernel(x_ref, w_ref, o_ref, hk=hk, hout=h, wout=wd,
+            _kernel(x_ref, w_ref, o_ref, hk=hk, bh=bh, bw=bw,
                     out_dtype=out_dtype, requant_shift=requant_shift,
                     act=act, bias_ref=b_ref)
         kern = kern_bias
-        in_specs.append(pl.BlockSpec((bco,), lambda b, g, c, _n=n_co: (g * _n + c,)))
+        in_specs.append(pl.BlockSpec((bco,), co_index))
         args.append(bias)
 
     out = pl.pallas_call(
         kern,
-        grid=(n, groups, n_co),
+        grid=(n // bn, n_th * n_tw, groups, n_co),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, h, wd, bco),
-                               lambda b, g, c, _n=n_co: (b, 0, 0, g * _n + c)),
-        out_shape=jax.ShapeDtypeStruct((n, h, wd, cy), out_dtype),
+        out_specs=pl.BlockSpec((bn, bh, bw, bco), o_index),
+        out_shape=jax.ShapeDtypeStruct((n, hp_out, wp_out, cy), out_dtype),
         interpret=interpret,
     )(*args)
-    return out
+    return out[:, :h, :wd, :]

@@ -5,8 +5,12 @@ The paper modifies im2col's *sampling step* to read each channel at its own
 TPU-native translation: shifts are static layer parameters, so the wrapper
 groups channels by identical shift (<= HK^2 distinct values), permutes the
 channel axis so groups are contiguous, and the kernel accumulates one
-statically-shifted (H*W, C_grp) x (C_grp, BCO) MXU matmul per group —
+statically-shifted (BN*BH*BW, C_grp) x (C_grp, BCO) MXU matmul per group —
 the shifted intermediate map I (Eq. 2) is never materialized.
+
+Grid: (batch_block, spatial_tile, out-channel-block); ``block_n`` images
+amortize each pointwise weight-block load and ``block_h``/``block_w`` bound
+the VMEM tile (halo = 2*max|shift|).
 """
 from __future__ import annotations
 
@@ -17,41 +21,50 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from .common import acc_dtype, apply_act, apply_requant, effective_block
+from .common import (acc_dtype, apply_act, apply_requant,
+                     batch_spatial_schedule, effective_block, halo_tiles,
+                     resolve_interpret, resolve_tile_config)
 
 
-def _kernel(x_ref, w_ref, o_ref, *, groups, hout, wout, pad, out_dtype,
+def _kernel(x_ref, w_ref, o_ref, *, groups, bh, bw, pad, out_dtype,
             requant_shift, act=None, bias_ref=None):
+    # x_ref: (BN, 1, 1, BH+2P, BW+2P, C); w_ref: (C, BCO)
     adt = acc_dtype(x_ref.dtype)
     bco = w_ref.shape[-1]
-    acc = jnp.zeros((hout * wout, bco), adt)
+    bn = x_ref.shape[0]
+    acc = jnp.zeros((bn * bh * bw, bco), adt)
     for start, size, (da, db) in groups:     # static unroll over shift groups
         r0, c0 = pad + da, pad + db
-        patch = x_ref[0, r0:r0 + hout, c0:c0 + wout, start:start + size]
-        acc = acc + jnp.dot(patch.reshape(hout * wout, size).astype(adt),
+        patch = x_ref[:, 0, 0, r0:r0 + bh, c0:c0 + bw, start:start + size]
+        acc = acc + jnp.dot(patch.reshape(bn * bh * bw, size).astype(adt),
                             w_ref[start:start + size, :].astype(adt),
                             preferred_element_type=adt)
     if bias_ref is not None:                 # bias at accumulator scale
         acc = acc + bias_ref[...].astype(adt)[None, :]
     acc = apply_act(acc, act)
     acc = apply_requant(acc, requant_shift)
-    o_ref[0] = acc.reshape(hout, wout, bco).astype(out_dtype)
+    o_ref[...] = acc.reshape(bn, bh, bw, bco).astype(out_dtype)
 
 
 def shift_conv2d(x: jax.Array, shifts, w_pw: jax.Array, bias=None, *,
-                 block_co: int = 128, requant_shift: int | None = None,
+                 block_co: int = 128, block_n: int = 1,
+                 block_h: int | None = None, block_w: int | None = None,
+                 requant_shift: int | None = None,
                  act: str | None = None,
-                 out_dtype=None, interpret: bool = True,
+                 out_dtype=None, interpret: bool | None = None,
                  config: dict | None = None) -> jax.Array:
     """x: (N,H,W,C); shifts: (C,2) static ints; w_pw: (C,Cy) or (1,1,C,Cy).
 
     ``bias`` (optional, (Cy,)) is added at accumulator scale before the
     requantization epilogue; ``act="relu"`` fuses the activation at
     accumulator scale after it. ``config`` (a repro.tune schedule dict)
-    overrides the block parameters.
+    overrides the block parameters (``block_co``, ``block_n``,
+    ``block_h``/``block_w``). ``interpret=None`` auto-detects the backend.
     """
     if config:
         block_co = int(config.get("block_co", block_co))
+    block_n, block_h, block_w = resolve_tile_config(config, block_n,
+                                                    block_h, block_w)
     if w_pw.ndim == 4:
         w_pw = w_pw[0, 0]
     n, h, wd, c = x.shape
@@ -75,30 +88,46 @@ def shift_conv2d(x: jax.Array, shifts, w_pw: jax.Array, bias=None, *,
 
     xp = jnp.pad(x[..., order], ((0, 0), (pad, pad), (pad, pad), (0, 0)))
     wp = w_pw[order, :]
-    hp, wpd = xp.shape[1], xp.shape[2]
     bco = effective_block(cy, block_co)
+    n_co = cy // bco
+    bn, bh, bw, n_th, n_tw = batch_spatial_schedule(n, h, wd, block_n,
+                                                    block_h, block_w)
+    tiles = halo_tiles(xp, n_th, n_tw, bh, bw, bh + 2 * pad, bw + 2 * pad)
 
-    kern = functools.partial(_kernel, groups=groups, hout=h, wout=wd, pad=pad,
+    def x_index(b, s, cb):
+        return (b, s // n_tw, s % n_tw, 0, 0, 0)
+
+    def w_index(b, s, cb):
+        return (0, cb)
+
+    def co_index(b, s, cb):
+        return (cb,)
+
+    def o_index(b, s, cb):
+        return (b, s // n_tw, s % n_tw, cb)
+
+    kern = functools.partial(_kernel, groups=groups, bh=bh, bw=bw, pad=pad,
                              out_dtype=out_dtype, requant_shift=requant_shift,
                              act=act)
     in_specs = [
-        pl.BlockSpec((1, hp, wpd, c), lambda b, cb: (b, 0, 0, 0)),
-        pl.BlockSpec((c, bco), lambda b, cb: (0, cb)),
+        pl.BlockSpec((bn, 1, 1, bh + 2 * pad, bw + 2 * pad, c), x_index),
+        pl.BlockSpec((c, bco), w_index),
     ]
-    args = [xp, wp]
+    args = [tiles, wp]
     if bias is not None:
         def kern_bias(x_ref, w_ref, b_ref, o_ref):
-            _kernel(x_ref, w_ref, o_ref, groups=groups, hout=h, wout=wd,
+            _kernel(x_ref, w_ref, o_ref, groups=groups, bh=bh, bw=bw,
                     pad=pad, out_dtype=out_dtype, requant_shift=requant_shift,
                     act=act, bias_ref=b_ref)
         kern = kern_bias
-        in_specs.append(pl.BlockSpec((bco,), lambda b, cb: (cb,)))
+        in_specs.append(pl.BlockSpec((bco,), co_index))
         args.append(bias)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
-        grid=(n, cy // bco),
+        grid=(n // bn, n_th * n_tw, n_co),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, h, wd, bco), lambda b, cb: (b, 0, 0, cb)),
-        out_shape=jax.ShapeDtypeStruct((n, h, wd, cy), out_dtype),
-        interpret=interpret,
+        out_specs=pl.BlockSpec((bn, bh, bw, bco), o_index),
+        out_shape=jax.ShapeDtypeStruct((n, n_th * bh, n_tw * bw, cy), out_dtype),
+        interpret=resolve_interpret(interpret),
     )(*args)
+    return out[:, :h, :wd, :]

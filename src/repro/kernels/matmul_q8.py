@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import acc_dtype, apply_act, apply_requant, cdiv
+from .common import acc_dtype, apply_act, apply_requant, cdiv, resolve_interpret
 
 
 def _make_compiler_params(n_parallel: int):
@@ -51,19 +51,37 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk, out_dtype, requant_shift,
 def matmul(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
            bk: int = 512, requant_shift: int | None = None,
            act: str | None = None, out_dtype=None,
-           interpret: bool = True, config: dict | None = None) -> jax.Array:
-    """a: (M, K) @ b: (K, N). int8 inputs + requant_shift -> int8 output.
+           interpret: bool | None = None,
+           config: dict | None = None) -> jax.Array:
+    """a: (M, K) or (N_batch, M, K) @ b: (K, N). int8 inputs +
+    requant_shift -> int8 output.
+
+    A 3-D ``a`` is the batched serving path: the leading batch dim is
+    folded into M, so one kernel launch covers the whole microbatch and the
+    ``bm`` grid tiles the combined batch-row axis — each ``b`` block load
+    is amortized across every image in the batch (the same weight-reuse
+    schedule as the conv kernels' ``block_n``), and batched-vs-looped is
+    bit-exact by construction (identical per-row contractions).
 
     ``act="relu"`` fuses the activation at accumulator scale on the last
     K step, before requantization. ``config`` (a repro.tune schedule dict)
-    overrides the block parameters.
+    overrides the block parameters. ``interpret=None`` auto-detects the
+    backend.
     """
     if config:
         bm = int(config.get("bm", bm))
         bn = int(config.get("bn", bn))
         bk = int(config.get("bk", bk))
+    if a.ndim == 3:
+        nb, m, k = a.shape
+        out = _matmul(a.reshape(nb * m, k), b, bm=bm, bn=bn, bk=bk,
+                      requant_shift=requant_shift, act=act,
+                      out_dtype=out_dtype,
+                      interpret=resolve_interpret(interpret))
+        return out.reshape(nb, m, b.shape[-1])
     return _matmul(a, b, bm=bm, bn=bn, bk=bk, requant_shift=requant_shift,
-                   act=act, out_dtype=out_dtype, interpret=interpret)
+                   act=act, out_dtype=out_dtype,
+                   interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "requant_shift",

@@ -166,6 +166,11 @@ def maxpool2d(x, *, window: int = 2, stride: Optional[int] = None,
     if method == "xla":
         _check_no_config(method, config)
         return ref.maxpool2d_ref(x, window=window, stride=stride)
+    if config is None:
+        from repro.tune import sig_maxpool2d
+        n, h, wd, c = x.shape
+        config = _tuned(sig_maxpool2d, n, h, wd, c, window, stride or window,
+                        dtype=x.dtype)
     return _pool_pallas(x, window=window, stride=stride,
                         interpret=use_interpret(), config=config)
 

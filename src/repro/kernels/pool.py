@@ -6,10 +6,11 @@ power-of-two) dequantization scale, so pooling int8 codes is bit-exact with
 pooling the dequantized floats. This kernel is what lets the graph executor
 keep activations int8 across pool boundaries (zero float round-trips).
 
-Grid: (batch, channel-block); one grid step owns one image's full spatial
-extent in VMEM (MCU-scale feature maps) and reduces the WxW window as W^2
-statically-strided element-wise maxima on the 8x128 VPU — the same shifted
-accumulation pattern as conv_dw, with max replacing multiply-add.
+Grid: (batch_block, spatial_tile, channel-block); one grid step reduces a
+``block_n``-image, halo-padded (``block_h``, ``block_w``) OUTPUT tile as
+W^2 statically-strided element-wise maxima on the 8x128 VPU — the same
+shifted accumulation pattern as conv_dw, with max replacing multiply-add
+(the input tile covers ``(block-1)*stride + window`` rows/cols).
 """
 from __future__ import annotations
 
@@ -20,51 +21,77 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from .common import effective_block
+from .common import (batch_spatial_schedule, effective_block, halo_tiles,
+                     resolve_interpret, resolve_tile_config)
 
 
-def _kernel(x_ref, o_ref, *, win, stride, hout, wout):
-    xv = x_ref[0]                            # (H, W, BC)
-    bc = xv.shape[-1]
+def _kernel(x_ref, o_ref, *, win, stride, bh, bw):
+    xv = x_ref[:, 0, 0]                      # (BN, TH_in, TW_in, BC)
+    bn, bc = xv.shape[0], xv.shape[-1]
     out = None
     for i in range(win):                     # static unroll over window taps
         for j in range(win):
-            v = lax.slice(xv, (i, j, 0),
-                          (i + (hout - 1) * stride + 1,
-                           j + (wout - 1) * stride + 1, bc),
-                          (stride, stride, 1))
+            v = lax.slice(xv, (0, i, j, 0),
+                          (bn, i + (bh - 1) * stride + 1,
+                           j + (bw - 1) * stride + 1, bc),
+                          (1, stride, stride, 1))
             out = v if out is None else jnp.maximum(out, v)
-    o_ref[0] = out
+    o_ref[...] = out
 
 
 def maxpool2d(x: jax.Array, *, window: int = 2, stride: int | None = None,
-              block_c: int = 128, interpret: bool = True,
+              block_c: int = 128, block_n: int = 1,
+              block_h: int | None = None, block_w: int | None = None,
+              interpret: bool | None = None,
               config: dict | None = None) -> jax.Array:
     """VALID max-pool. x: (N,H,W,C) — int8 (the fused-graph path) or float.
 
-    ``config`` (a repro.tune schedule dict) overrides the block parameters.
+    ``config`` (a repro.tune schedule dict) overrides the block parameters
+    (``block_c``, ``block_n``, ``block_h``/``block_w`` — OUTPUT-tile
+    extents). ``interpret=None`` auto-detects the backend.
     """
     if config:
         block_c = int(config.get("block_c", block_c))
+    block_n, block_h, block_w = resolve_tile_config(config, block_n,
+                                                    block_h, block_w)
     return _maxpool2d(x, window=window, stride=stride or window,
-                      block_c=block_c, interpret=interpret)
+                      block_c=block_c, block_n=block_n, block_h=block_h,
+                      block_w=block_w, interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("window", "stride", "block_c",
+                                             "block_n", "block_h", "block_w",
                                              "interpret"))
 def _maxpool2d(x: jax.Array, *, window: int, stride: int, block_c: int,
+               block_n: int = 1, block_h: int | None = None,
+               block_w: int | None = None,
                interpret: bool = True) -> jax.Array:
     n, h, w, c = x.shape
     hout = (h - window) // stride + 1
     wout = (w - window) // stride + 1
     bc = effective_block(c, block_c)
-    kern = functools.partial(_kernel, win=window, stride=stride,
-                             hout=hout, wout=wout)
-    return pl.pallas_call(
+    bn, bh, bw, n_th, n_tw = batch_spatial_schedule(n, hout, wout, block_n,
+                                                    block_h, block_w)
+    # output tile (bh, bw) consumes input rows [th*bh*s, th*bh*s +
+    # (bh-1)*s + win): overlapping tiles at stride bh*s (pad rows only feed
+    # output rows the final crop discards)
+    tiles = halo_tiles(x, n_th, n_tw, bh * stride, bw * stride,
+                       (bh - 1) * stride + window, (bw - 1) * stride + window)
+
+    def x_index(b, s, cb):
+        return (b, s // n_tw, s % n_tw, 0, 0, cb)
+
+    def o_index(b, s, cb):
+        return (b, s // n_tw, s % n_tw, cb)
+
+    kern = functools.partial(_kernel, win=window, stride=stride, bh=bh, bw=bw)
+    out = pl.pallas_call(
         kern,
-        grid=(n, c // bc),
-        in_specs=[pl.BlockSpec((1, h, w, bc), lambda b, cb: (b, 0, 0, cb))],
-        out_specs=pl.BlockSpec((1, hout, wout, bc), lambda b, cb: (b, 0, 0, cb)),
-        out_shape=jax.ShapeDtypeStruct((n, hout, wout, c), x.dtype),
+        grid=(n // bn, n_th * n_tw, c // bc),
+        in_specs=[pl.BlockSpec((bn, 1, 1, (bh - 1) * stride + window,
+                                (bw - 1) * stride + window, bc), x_index)],
+        out_specs=pl.BlockSpec((bn, bh, bw, bc), o_index),
+        out_shape=jax.ShapeDtypeStruct((n, n_th * bh, n_tw * bw, c), x.dtype),
         interpret=interpret,
-    )(x)
+    )(tiles)
+    return out[:, :hout, :wout, :]

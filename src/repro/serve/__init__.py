@@ -1,6 +1,10 @@
-"""Serving: continuous-batching engine over a fixed (max_batch, max_len)
-KV budget, with the legacy static drain scheduler as baseline. See
-engine.Engine / EXPERIMENTS.md §Serving."""
+"""Serving: continuous-batching LM engine over a fixed (max_batch, max_len)
+KV budget (legacy static drain scheduler as baseline; engine.Engine /
+EXPERIMENTS.md §Serving), plus the CNN microbatching engine that admits
+queued image requests into batched CompiledPlan rounds (cnn.CNNEngine /
+EXPERIMENTS.md §Throughput)."""
+from .cnn import CNNEngine, CNNServeConfig, ImageRequest
 from .engine import Engine, Request, ServeConfig
 
-__all__ = ["Engine", "Request", "ServeConfig"]
+__all__ = ["Engine", "Request", "ServeConfig",
+           "CNNEngine", "CNNServeConfig", "ImageRequest"]

@@ -1,0 +1,125 @@
+"""CNN microbatch serving: queued image requests through one CompiledPlan.
+
+The LM engine's admission idea, applied to the vision side: requests queue
+up, and between *batch rounds* the scheduler admits up to ``max_batch``
+queued images into the round's batch slots — the CNN analogue of refilling
+decode slots between rounds. Each round runs ONE batched forward through
+the plan's single jit (``CompiledPlan.forward_batch``), padded to a pow2
+batch bucket so ragged rounds never retrace, and scatters the logits back
+onto the originating requests.
+
+A CNN request is one-shot (no decode loop), so the scheduler is simpler
+than the LM slot machine — the throughput lever is purely the batched
+kernel schedule: every admitted image shares the round's weight-block
+loads (the Fig-3 reuse quantity scaled by ``block_n``), which is what
+``benchmarks/throughput_bench.py`` measures against the N=1 loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.graph.executor import CompiledPlan
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    """One classification request plus engine-filled result/metric fields."""
+    uid: int
+    image: np.ndarray               # (H, W, C) float
+    logits: Optional[np.ndarray] = None
+    done: bool = False
+    # engine-filled metrics
+    submit_t: float = 0.0
+    finish_t: float = 0.0
+    batch_round: int = -1           # round the request was served in
+
+    @property
+    def latency_s(self) -> float:
+        return max(self.finish_t - self.submit_t, 0.0)
+
+
+@dataclasses.dataclass
+class CNNServeConfig:
+    """max_batch: batch slots per round (forward_batch pads a ragged final
+    round to its pow2 bucket, so partial rounds reuse a compiled shape)."""
+    max_batch: int = 8
+
+
+class CNNEngine:
+    """Microbatching frontend over one :class:`CompiledPlan`."""
+
+    def __init__(self, plan: CompiledPlan,
+                 scfg: Optional[CNNServeConfig] = None):
+        scfg = scfg or CNNServeConfig()
+        if scfg.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {scfg.max_batch}")
+        self.plan = plan
+        self.scfg = scfg
+        self.queue: "queue.Queue[ImageRequest]" = queue.Queue()
+        self.reset_stats()
+
+    # ------------------------------------------------------------- metrics --
+
+    def reset_stats(self):
+        self._c = dict(batch_rounds=0, images_done=0)
+        self._batch_time = 0.0
+        self._lat: List[float] = []
+
+    @property
+    def stats(self) -> dict:
+        """Counters + derived scheduler metrics (computed on access);
+        occupancy is served images over offered batch slots."""
+        c = dict(self._c)
+        rounds = c["batch_rounds"]
+        c["occupancy"] = (c["images_done"] / (rounds * self.scfg.max_batch)
+                          if rounds else 0.0)
+        c["latency_avg_s"] = float(np.mean(self._lat)) if self._lat else 0.0
+        c["images_per_s"] = (c["images_done"] / self._batch_time
+                             if self._batch_time > 0 else 0.0)
+        return c
+
+    # ----------------------------------------------------------- frontend --
+
+    def submit(self, req: ImageRequest):
+        req.submit_t = time.time()
+        self.queue.put(req)
+
+    def _take_round(self) -> List[ImageRequest]:
+        # get_nowait, not .empty(): .empty() is only a racy hint once a
+        # producer thread feeds the queue (same contract as the LM engine)
+        out: List[ImageRequest] = []
+        while len(out) < self.scfg.max_batch:
+            try:
+                out.append(self.queue.get_nowait())
+            except queue.Empty:
+                break
+        return out
+
+    def run_until_drained(self) -> List[ImageRequest]:
+        """Admit queued requests into batch rounds until the queue is empty;
+        returns the finished requests in completion order."""
+        finished: List[ImageRequest] = []
+        while True:
+            batch = self._take_round()
+            if not batch:
+                break
+            x = np.stack([r.image for r in batch])
+            t0 = time.perf_counter()
+            logits = np.asarray(self.plan.forward_batch(x))
+            self._batch_time += time.perf_counter() - t0
+            now = time.time()
+            for i, r in enumerate(batch):
+                r.logits = logits[i]
+                r.done = True
+                r.finish_t = now
+                r.batch_round = self._c["batch_rounds"]
+                self._lat.append(r.latency_s)
+            self._c["batch_rounds"] += 1
+            self._c["images_done"] += len(batch)
+            finished.extend(batch)
+        return finished

@@ -7,15 +7,16 @@ from .runner import (analytic_config, autotune, autotune_into, autotune_plan,
                      backend_tag, estimate_s, get_config, plan_jobs,
                      time_config)
 from .space import (KERNELS, ShapeSig, candidates, default_config,
-                    sig_add_conv2d, sig_causal_conv1d, sig_conv2d,
-                    sig_depthwise2d, sig_matmul, sig_shift_conv2d, space_size)
+                    effective_config, sig_add_conv2d, sig_causal_conv1d,
+                    sig_conv2d, sig_depthwise2d, sig_matmul, sig_maxpool2d,
+                    sig_shift_conv2d, space_size)
 
 __all__ = [
     "DEFAULT_CACHE_PATH", "SCHEMA_VERSION", "TuneCache", "cache_key",
     "get_default_cache", "reset", "set_default_cache",
     "analytic_config", "autotune", "autotune_into", "autotune_plan",
     "backend_tag", "estimate_s", "get_config", "plan_jobs", "time_config",
-    "KERNELS", "ShapeSig", "candidates", "default_config",
+    "KERNELS", "ShapeSig", "candidates", "default_config", "effective_config",
     "sig_add_conv2d", "sig_causal_conv1d", "sig_conv2d", "sig_depthwise2d",
-    "sig_matmul", "sig_shift_conv2d", "space_size",
+    "sig_matmul", "sig_maxpool2d", "sig_shift_conv2d", "space_size",
 ]

@@ -23,7 +23,10 @@ import os
 import threading
 from typing import Dict, Optional
 
-SCHEMA_VERSION = 1
+# v2: the batched/spatially-tiled kernel grids added block_n/block_h/block_w
+# to every conv-kernel search space (and maxpool2d became tunable) — configs
+# searched over the v1 spaces are not comparable, so v1 caches are ignored.
+SCHEMA_VERSION = 2
 
 # repo root = .../src/repro/tune/cache.py -> four levels up
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(

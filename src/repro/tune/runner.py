@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core.energy import TPUv5e
 from repro.core.primitives import ConvSpec
+from repro.kernels.common import cdiv
 
 from . import cache as _cache
 from . import space as _space
@@ -77,8 +78,23 @@ def _vmem_cost(footprint_bytes: float) -> float:
     return VMEM_PENALTY if footprint_bytes > TPU.vmem_bytes else 1.0
 
 
+def _tiles(sig: ShapeSig, eff: Dict[str, int]):
+    """Grid geometry of one tiled-schedule kernel: (bn, bh, bw, tile
+    steps-per-image-block). ``eff`` must be an effective config."""
+    h, w = _space._out_hw(sig)
+    bn, bh, bw = eff["block_n"], eff["block_h"], eff["block_w"]
+    return bn, bh, bw, (sig.get("n") // bn) * cdiv(h, bh) * cdiv(w, bw)
+
+
 def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
-    """Estimated seconds for one kernel invocation under ``config``."""
+    """Estimated seconds for one kernel invocation under ``config``.
+
+    The tiled-grid kernels' traffic term reflects the batched schedule's
+    weight reuse: one filter-block load per grid step now covers ``block_n``
+    images (the Fig-3 reuse quantity grows from Cx*BCO to BN*Cx*BCO MACs
+    per weight byte), while spatial tiles shrink the per-step image block —
+    and with it the VMEM footprint — at the cost of halo re-reads.
+    """
     k = sig.kernel
     eb = _bytes_of(dtype)
     ab = 4                                           # int32/f32 accumulator
@@ -88,17 +104,19 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
         ci, co, hk, g = (sig.get("ci"), sig.get("co"), sig.get("k"),
                          max(sig.get("g"), 1))
         cxg, cog = ci // g, co // g
-        bco = effective_config(sig, config)["block_co"]
-        steps = n * g * (cog // bco)
+        eff = effective_config(sig, config)
+        bco = eff["block_co"]
+        bn, bh, bw, sp_steps = _tiles(sig, eff)
+        steps = sp_steps * g * (cog // bco)
         spec = ConvSpec(primitive="grouped" if g > 1 else "standard",
                         in_channels=ci, out_channels=co, kernel_size=hk,
                         groups=g, use_bias=False)
         flops = 2.0 * n * spec.mac_count(w)
-        img = (h + hk) * (w + hk) * cxg * eb         # padded image block
+        img = bn * (bh + hk) * (bw + hk) * cxg * eb  # halo-padded tile block
         wts = hk * hk * cxg * bco * eb
-        out = h * w * bco * eb
+        out = bn * bh * bw * bco * eb
         traffic = steps * (img + wts + out)
-        vmem = img + wts + h * w * bco * ab
+        vmem = img + wts + bn * bh * bw * bco * ab
         compute = flops / (TPU.peak_bf16_flops * _util(bco) * _util(cxg))
         return (_vmem_cost(vmem)
                 * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
@@ -106,12 +124,14 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
     if k == "depthwise2d":
         n, h, w, c, hk = (sig.get("n"), sig.get("h"), sig.get("w"),
                           sig.get("c"), sig.get("k"))
-        bc = effective_config(sig, config)["block_c"]
-        steps = n * (c // bc)
+        eff = effective_config(sig, config)
+        bc = eff["block_c"]
+        bn, bh, bw, sp_steps = _tiles(sig, eff)
+        steps = sp_steps * (c // bc)
         flops = 2.0 * n * h * w * c * hk * hk
-        img = (h + hk) * (w + hk) * bc * eb
-        traffic = steps * (img + hk * hk * bc * eb + h * w * bc * eb)
-        vmem = img + h * w * bc * ab
+        img = bn * (bh + hk) * (bw + hk) * bc * eb
+        traffic = steps * (img + hk * hk * bc * eb + bn * bh * bw * bc * eb)
+        vmem = img + bn * bh * bw * bc * ab
         compute = flops / (TPU.peak_bf16_flops * VPU_DERATE * _util(bc))
         return (_vmem_cost(vmem)
                 * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
@@ -119,12 +139,14 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
     if k == "shift_conv2d":
         n, h, w, c, co = (sig.get("n"), sig.get("h"), sig.get("w"),
                           sig.get("c"), sig.get("co"))
-        bco = effective_config(sig, config)["block_co"]
-        steps = n * (co // bco)
+        eff = effective_config(sig, config)
+        bco = eff["block_co"]
+        bn, bh, bw, sp_steps = _tiles(sig, eff)
+        steps = sp_steps * (co // bco)
         flops = 2.0 * n * h * w * c * co
-        img = (h + 2) * (w + 2) * c * eb             # whole image per step
-        traffic = steps * (img + c * bco * eb + h * w * bco * eb)
-        vmem = img + c * bco * eb + h * w * bco * ab
+        img = bn * (bh + 2) * (bw + 2) * c * eb      # all channels per step
+        traffic = steps * (img + c * bco * eb + bn * bh * bw * bco * eb)
+        vmem = img + c * bco * eb + bn * bh * bw * bco * ab
         compute = flops / (TPU.peak_bf16_flops * _util(bco) * _util(c))
         return (_vmem_cost(vmem)
                 * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
@@ -132,14 +154,33 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
     if k == "add_conv2d":
         n, h, w = sig.get("n"), sig.get("h"), sig.get("w")
         ci, co, hk = sig.get("ci"), sig.get("co"), sig.get("k")
-        bco = effective_config(sig, config)["block_co"]
-        steps = n * (co // bco)
-        # |a-b| broadcast: the (H*W, Cx, BCO) intermediate is the VMEM hog
+        eff = effective_config(sig, config)
+        bco = eff["block_co"]
+        bn, bh, bw, sp_steps = _tiles(sig, eff)
+        steps = sp_steps * (co // bco)
+        # |a-b| broadcast: the (BN*BH*BW, Cx, BCO) intermediate is the VMEM
+        # hog — the spatial tile is what keeps it bounded
         flops = 3.0 * n * h * w * ci * co * hk * hk  # sub+abs+add per tap
-        img = (h + hk) * (w + hk) * ci * eb
-        traffic = steps * (img + hk * hk * ci * bco * eb + h * w * bco * eb)
-        vmem = img + h * w * ci * bco * ab + h * w * bco * ab
+        img = bn * (bh + hk) * (bw + hk) * ci * eb
+        traffic = steps * (img + hk * hk * ci * bco * eb
+                           + bn * bh * bw * bco * eb)
+        vmem = img + bn * bh * bw * ci * bco * ab + bn * bh * bw * bco * ab
         compute = flops / (TPU.peak_bf16_flops * VPU_DERATE * _util(bco, SUBLANE))
+        return (_vmem_cost(vmem)
+                * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
+
+    if k == "maxpool2d":
+        n, c, win, s = sig.get("n"), sig.get("c"), sig.get("k"), sig.get("s")
+        hout, wout = _space._out_hw(sig)
+        eff = effective_config(sig, config)
+        bc = eff["block_c"]
+        bn, bh, bw, sp_steps = _tiles(sig, eff)
+        steps = sp_steps * (c // bc)
+        flops = 1.0 * n * hout * wout * c * win * win    # VPU compares
+        img = bn * ((bh - 1) * s + win) * ((bw - 1) * s + win) * bc * eb
+        traffic = steps * (img + bn * bh * bw * bc * eb)
+        vmem = img + bn * bh * bw * bc * eb
+        compute = flops / (TPU.peak_bf16_flops * VPU_DERATE * _util(bc))
         return (_vmem_cost(vmem)
                 * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
 
@@ -222,6 +263,8 @@ def _kernel_call(kernel: str) -> Callable:
         from repro.kernels.conv1d_causal import causal_conv1d as fn
     elif kernel == "matmul":
         from repro.kernels.matmul_q8 import matmul as fn
+    elif kernel == "maxpool2d":
+        from repro.kernels.pool import maxpool2d as fn
     else:
         raise ValueError(f"unknown kernel {kernel!r}")
     return lambda args, cfg, kw: fn(*args, interpret=interp, config=cfg, **kw)
@@ -279,9 +322,12 @@ def plan_jobs(plan, *, batch: int = 1) -> list:
     """Autotune jobs covering every kernel invocation of a lowered
     ``repro.graph`` Plan: one ``(kernel, sig, arrays, dtype, kwargs)`` tuple
     per distinct (kernel, shape) the executor will dispatch — dws layers
-    contribute their depthwise AND pointwise stages. Shapes/requant shifts
-    are read off the plan's annotated scales, so the timed epilogues are
-    exactly the fused ones (requant + act) the executor runs."""
+    contribute their depthwise AND pointwise stages, and int8 maxpool nodes
+    contribute their own jobs. Shapes/requant shifts are read off the plan's
+    annotated scales, so the timed epilogues are exactly the fused ones
+    (requant + act) the executor runs. ``batch`` is the microbatch the
+    schedules are searched at — tune at the batch you serve, since the
+    block_n/block_h/block_w spaces (and the cache keys) depend on it."""
     import jax
     import jax.numpy as jnp
 
@@ -297,7 +343,16 @@ def plan_jobs(plan, *, batch: int = 1) -> list:
             seen.add(k)
             jobs.append((kernel, sig, arrays, "int8", kwargs))
 
-    for node in plan.conv_nodes():
+    for node in plan.nodes:
+        if node.op == "maxpool" and "in_hw" in node.attrs:
+            h, w = node.attrs["in_hw"]
+            c = node.attrs["in_ch"]
+            win, s = node.attrs["window"], node.attrs["stride"]
+            emit("maxpool2d", _space.sig_maxpool2d(batch, h, w, c, win, s),
+                 (i8((batch, h, w, c)),), dict(window=win, stride=s))
+            continue
+        if node.op != "qconv":
+            continue
         spec = node.spec
         h, w = node.attrs["in_hw"]
         ci, co, hk = spec.in_channels, spec.out_channels, spec.kernel_size
