@@ -1,0 +1,353 @@
+"""Machine-readable benchmark snapshot + perf-regression gate.
+
+Runs the FAST benchmark suite (the kernel / quant / per-layer / throughput
+/ serving sections of ``benchmarks.run``), parses every emitted CSV row,
+and writes a schema-versioned ``BENCH_<UTC-date>.json`` carrying:
+
+* per-section rows (``name -> {us, derived{...}}``) and error status,
+* headline numbers (serve tok/s + speedup, per-primitive e2e throughput
+  speedups, fused-vs-unfused ratios),
+* every ``exact=`` acceptance flag (the bit-exactness contracts),
+* a snapshot of the process metrics registry (``repro.obs.metrics``) —
+  kernel dispatch counts, tune cache hit/miss/fallback, graph compiles.
+
+The committed ``BENCH_*.json`` files are the repo's bench trajectory: one
+snapshot per PR that changes a headline number. Compare two snapshots with
+
+    PYTHONPATH=src python scripts/bench_snapshot.py --compare latest
+
+which re-runs the suite and exits non-zero on any regression:
+
+* **hard failures** (always): a lost ``exact=1`` flag, a section or row
+  that disappeared (coverage), or — unless ``--latency-warn-only`` — a
+  latency/throughput regression beyond ``--threshold`` percent.
+* **warnings** (exit 0): latency/throughput drifts under
+  ``--latency-warn-only``, the right mode for interpret-mode CI runners
+  whose absolute timings are noisy; exactness/coverage still hard-fail.
+
+``--trace out.json`` additionally enables ``repro.obs`` tracing for the
+run and exports the Chrome trace (CI uploads it as a workflow artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import datetime
+import glob
+import io
+import json
+import os
+import sys
+import traceback
+from typing import Dict, List, Optional, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)            # the benchmarks/ namespace package
+
+SCHEMA_VERSION = 1
+
+# The sections whose headline numbers the snapshot records, in run order.
+SECTIONS = ("kernels", "quant", "layers", "throughput", "serving")
+
+# derived keys where bigger is better; everything else numeric (and the us
+# column) is treated as lower-better latency when compared
+HIGHER_BETTER = ("tok_s", "images_per_s", "loop_images_per_s", "speedup",
+                 "continuous_over_static", "reuse_gain")
+
+
+# --------------------------------------------------------------------------
+# Run + parse
+# --------------------------------------------------------------------------
+
+def _coerce(v: str):
+    """CSV derived values -> float where possible ('2.31x' included)."""
+    for s in (v, v[:-1] if v.endswith("x") else v):
+        try:
+            return float(s)
+        except ValueError:
+            continue
+    return v
+
+
+def parse_rows(text: str) -> Dict[str, dict]:
+    rows: Dict[str, dict] = {}
+    for line in text.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) < 2 or parts[0] in ("name", "done"):
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        derived = {}
+        if len(parts) == 3 and parts[2]:
+            for kv in parts[2].split(";"):
+                if "=" in kv:
+                    k, v = kv.split("=", 1)
+                    derived[k] = _coerce(v)
+        rows[parts[0]] = {"us": us, "derived": derived}
+    return rows
+
+
+def _section_mains():
+    from benchmarks import (kernels_bench, layer_bench, quant_bench,
+                            serve_bench, throughput_bench)
+    return {"kernels": kernels_bench.main, "quant": quant_bench.main,
+            "layers": layer_bench.main, "throughput": throughput_bench.main,
+            "serving": serve_bench.main}
+
+
+def run_sections(names) -> Dict[str, dict]:
+    mains = _section_mains()
+    out: Dict[str, dict] = {}
+    for name in names:
+        buf = io.StringIO()
+        err: Optional[str] = None
+        try:
+            with contextlib.redirect_stdout(buf):
+                mains[name]()
+        except Exception as e:      # noqa: BLE001 — record, keep snapshotting
+            err = f"{type(e).__name__}: {e}"
+            traceback.print_exc(file=sys.stderr)
+        out[name] = {"ok": err is None, "error": err,
+                     "rows": parse_rows(buf.getvalue())}
+        status = "ok" if err is None else f"ERROR ({err})"
+        print(f"bench_snapshot: section {name}: "
+              f"{len(out[name]['rows'])} rows, {status}")
+    return out
+
+
+# --------------------------------------------------------------------------
+# Snapshot assembly
+# --------------------------------------------------------------------------
+
+def collect_exact(sections: Dict[str, dict]) -> Dict[str, float]:
+    """Every row-level ``exact=`` acceptance flag, keyed by row name."""
+    return {rname: row["derived"]["exact"]
+            for sec in sections.values()
+            for rname, row in sec["rows"].items()
+            if "exact" in row["derived"]}
+
+
+def collect_headline(sections: Dict[str, dict]) -> Dict[str, float]:
+    h: Dict[str, float] = {}
+    srows = sections.get("serving", {}).get("rows", {})
+    for sched in ("static", "continuous"):
+        row = srows.get(f"serve/{sched}")
+        if row and "tok_s" in row["derived"]:
+            h[f"serve_{sched}_tok_s"] = row["derived"]["tok_s"]
+    sp = srows.get("serve/speedup")
+    if sp and "continuous_over_static" in sp["derived"]:
+        h["serve_speedup"] = sp["derived"]["continuous_over_static"]
+    for rname, row in sections.get("throughput", {}).get("rows", {}).items():
+        if rname.endswith("/e2e") and "speedup" in row["derived"]:
+            prim = rname.split("/")[1]
+            h[f"throughput_{prim}_speedup"] = row["derived"]["speedup"]
+    eng = sections.get("throughput", {}).get("rows", {}).get(
+        "throughput/serve/engine")
+    if eng and "images_per_s" in eng["derived"]:
+        h["cnn_engine_images_per_s"] = eng["derived"]["images_per_s"]
+    for rname, row in sections.get("layers", {}).get("rows", {}).items():
+        if rname.endswith("/e2e") and "fused_over_unfused" in row["derived"]:
+            prim = rname.split("/")[1]
+            h[f"layers_{prim}_fused_over_unfused"] = \
+                row["derived"]["fused_over_unfused"]
+    return h
+
+
+def build_snapshot(section_names) -> dict:
+    from benchmarks.common import FAST
+    from repro.obs import metrics as obs_metrics
+    from repro.tune.runner import backend_tag
+    sections = run_sections(section_names)
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "created_utc": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "fast": FAST,
+        "backend": backend_tag(),
+        "sections": sections,
+        "headline": collect_headline(sections),
+        "exact": collect_exact(sections),
+        "metrics": obs_metrics.snapshot(),
+    }
+
+
+# --------------------------------------------------------------------------
+# Compare (the perf gate)
+# --------------------------------------------------------------------------
+
+def _pct_worse(cur: float, prev: float, higher_better: bool) -> float:
+    """Regression percentage (positive = worse), 0 when prev is ~0."""
+    if prev <= 0:
+        return 0.0
+    return ((prev - cur) / prev if higher_better
+            else (cur - prev) / prev) * 100.0
+
+
+def compare(cur: dict, prev: dict, *, threshold: float,
+            latency_hard: bool) -> Tuple[List[str], List[str]]:
+    """Returns (failures, warnings). Exactness and coverage regressions are
+    always failures; latency/throughput drifts beyond ``threshold`` percent
+    are failures when ``latency_hard`` else warnings."""
+    failures: List[str] = []
+    warnings: List[str] = []
+
+    if cur.get("fast") != prev.get("fast"):
+        warnings.append(
+            f"mode mismatch: cur fast={cur.get('fast')} vs "
+            f"prev fast={prev.get('fast')} — timings are not comparable")
+    if cur.get("backend") != prev.get("backend"):
+        warnings.append(
+            f"backend mismatch: {cur.get('backend')} vs {prev.get('backend')}"
+            " — timings are not comparable")
+
+    # coverage: sections and rows present before must still be present + ok
+    for sec, pdata in prev.get("sections", {}).items():
+        cdata = cur.get("sections", {}).get(sec)
+        if not pdata.get("ok"):
+            continue
+        if cdata is None or not cdata.get("ok"):
+            failures.append(
+                f"coverage: section {sec!r} was ok in the baseline but is "
+                f"{'missing' if cdata is None else 'failing'} now"
+                + (f" ({cdata['error']})" if cdata and cdata.get("error")
+                   else ""))
+            continue
+        for rname in pdata.get("rows", {}):
+            if rname not in cdata.get("rows", {}):
+                failures.append(
+                    f"coverage: row {rname!r} disappeared from {sec!r}")
+
+    # exactness: a 1 -> not-1 transition is a broken bit-exactness contract
+    for key, pv in prev.get("exact", {}).items():
+        cv = cur.get("exact", {}).get(key)
+        if pv == 1 and cv != 1:
+            failures.append(
+                f"exactness: {key} was exact=1 in the baseline, now "
+                f"exact={cv!r}")
+
+    # latency/throughput: us column (lower-better) + known derived keys
+    lat_sink = failures if latency_hard else warnings
+    for sec, pdata in prev.get("sections", {}).items():
+        cdata = cur.get("sections", {}).get(sec)
+        if cdata is None:
+            continue
+        for rname, prow in pdata.get("rows", {}).items():
+            crow = cdata.get("rows", {}).get(rname)
+            if crow is None:
+                continue
+            worse = _pct_worse(crow["us"], prow["us"], higher_better=False)
+            if prow["us"] > 0 and worse > threshold:
+                lat_sink.append(
+                    f"latency: {rname} us {prow['us']:.1f} -> "
+                    f"{crow['us']:.1f} (+{worse:.0f}% > {threshold:.0f}%)")
+            for k in HIGHER_BETTER:
+                pv, cv = prow["derived"].get(k), crow["derived"].get(k)
+                if (isinstance(pv, float) and isinstance(cv, float)
+                        and pv > 0):
+                    worse = _pct_worse(cv, pv, higher_better=True)
+                    if worse > threshold:
+                        lat_sink.append(
+                            f"throughput: {rname} {k} {pv:.2f} -> {cv:.2f} "
+                            f"(-{worse:.0f}% > {threshold:.0f}%)")
+    return failures, warnings
+
+
+def resolve_baseline(arg: str, out_path: str) -> str:
+    """--compare PATH, or --compare latest -> newest committed BENCH_*.json
+    at the repo root (excluding the file this run is about to write)."""
+    if arg != "latest":
+        return arg
+    cands = sorted(p for p in glob.glob(os.path.join(ROOT, "BENCH_*.json"))
+                   if os.path.abspath(p) != os.path.abspath(out_path))
+    if not cands:
+        raise SystemExit("bench_snapshot: --compare latest found no "
+                         "committed BENCH_*.json baseline")
+    return cands[-1]
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=None,
+                    help="snapshot path (default: <repo>/BENCH_<UTC-date>"
+                         ".json)")
+    ap.add_argument("--sections", default=",".join(SECTIONS),
+                    help=f"comma list from {SECTIONS}")
+    ap.add_argument("--compare", default=None, metavar="PREV",
+                    help="baseline BENCH_*.json (or 'latest'); exit non-zero "
+                         "on regression")
+    ap.add_argument("--threshold", type=float, default=10.0,
+                    help="regression threshold in percent (default 10)")
+    ap.add_argument("--latency-warn-only", action="store_true",
+                    help="latency/throughput drifts warn instead of failing "
+                         "(exactness/coverage still hard-fail) — for "
+                         "interpret-mode CI runners")
+    ap.add_argument("--trace", default=None, metavar="TRACE_JSON",
+                    help="enable repro.obs tracing and export the Chrome "
+                         "trace here")
+    args = ap.parse_args(argv)
+
+    # FAST by default: the snapshot is the CI-sized suite unless the caller
+    # explicitly opts out with REPRO_BENCH_FAST=0 in the environment
+    os.environ.setdefault("REPRO_BENCH_FAST", "1")
+
+    names = [s.strip() for s in args.sections.split(",") if s.strip()]
+    unknown = [s for s in names if s not in SECTIONS]
+    if unknown:
+        ap.error(f"unknown sections {unknown}; choose from {SECTIONS}")
+
+    date = datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%d")
+    out_path = args.out or os.path.join(ROOT, f"BENCH_{date}.json")
+
+    if args.trace:
+        os.environ[
+            "REPRO_TRACE"] = "1"     # before any repro import reads it
+    from repro.obs import trace as obs_trace
+    if args.trace:
+        obs_trace.enable()
+
+    snap = build_snapshot(names)
+
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+    print(f"bench_snapshot: wrote {out_path} "
+          f"({len(snap['headline'])} headline numbers, "
+          f"{len(snap['exact'])} exact flags)")
+
+    if args.trace:
+        obs_trace.export(args.trace)
+        print(f"bench_snapshot: wrote trace {args.trace} "
+              f"({len(obs_trace.TRACER.events())} events)")
+
+    rc = 0
+    if args.compare:
+        base_path = resolve_baseline(args.compare, out_path)
+        with open(base_path) as f:
+            prev = json.load(f)
+        if prev.get("schema_version") != SCHEMA_VERSION:
+            print(f"bench_snapshot: baseline {base_path} has schema "
+                  f"{prev.get('schema_version')} != {SCHEMA_VERSION}; "
+                  "skipping compare")
+            return 0
+        failures, warnings = compare(
+            snap, prev, threshold=args.threshold,
+            latency_hard=not args.latency_warn_only)
+        for w in warnings:
+            print(f"WARN: {w}")
+        for e in failures:
+            print(f"REGRESSION: {e}")
+        print(f"bench_snapshot: compared against {base_path}: "
+              f"{len(failures)} regression(s), {len(warnings)} warning(s)")
+        rc = 1 if failures else 0
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

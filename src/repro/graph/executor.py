@@ -24,6 +24,13 @@ Three more entry points share the plan:
   measured latency, analytic MACs and the paper-calibrated MCU
   latency/energy model per node ("Not All Ops Are Created Equal": cost is
   a per-layer, not per-network, quantity).
+
+Observability (``repro.obs``): jit traces count into the process metrics
+registry (``graph.compiles`` + a per-batch-bucket counter, and
+``graph.fallback.xla`` when ``method="auto"`` degrades a node to the
+oracle), and with ``REPRO_TRACE=1`` every ``__call__``/``forward_batch``
+emits a span while ``profile`` emits one ``layer.<name>`` span per row —
+the per-layer executor track in an exported Perfetto trace.
 """
 from __future__ import annotations
 
@@ -36,6 +43,8 @@ from repro.core.energy import MCUModel
 from repro.core.qconv import _kernel_layer_ok, qconv_apply
 from repro.core.quantize import QTensor, quantize, requantize
 from repro.kernels.common import apply_act
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 from .ir import Graph
 from .lower import Plan, PlanNode
@@ -120,6 +129,11 @@ class CompiledPlan:
         from repro.kernels import ops as K
         if node.op == "qconv":
             m = self._node_method(node)
+            if self.method == "auto" and m == "xla":
+                # auto degraded to the oracle for this node (outside the
+                # pallas kernel envelope) — count it so coverage regressions
+                # of the kernel layer are visible in the metrics snapshot
+                obs_metrics.counter("graph.fallback.xla").inc()
             return qconv_apply(node.qparams, h, node.spec, node.out_fb,
                                method=m, act=node.act,
                                configs=self._resolve_configs(node, h))
@@ -138,13 +152,19 @@ class CompiledPlan:
 
     def _forward(self, x):
         self.traces += 1                 # counts jit traces, not calls
-        h = quantize(x, self.plan.in_fb)
-        for node in self.plan.nodes:
-            h = self._run_node(node, h)
-        return h
+        # compile-event counters (trace-time python side effects): one total
+        # plus one per batch bucket, so recompile storms show up per shape
+        obs_metrics.counter("graph.compiles").inc()
+        obs_metrics.counter(f"graph.compiles.n{x.shape[0]}").inc()
+        with obs_trace.span("plan.trace", n=x.shape[0], method=self.method):
+            h = quantize(x, self.plan.in_fb)
+            for node in self.plan.nodes:
+                h = self._run_node(node, h)
+            return h
 
     def __call__(self, x):
-        return self._fn(x)
+        with obs_trace.span("plan.forward", n=x.shape[0]):
+            return self._fn(x)
 
     # ------------------------------------------------------ batched serving
 
@@ -170,10 +190,11 @@ class CompiledPlan:
         don't hash or exact-compare the logits across batch sizes."""
         n = x.shape[0]
         b = self.batch_bucket(n)
-        if b != n:
-            x = jnp.concatenate(
-                [x, jnp.zeros((b - n,) + x.shape[1:], x.dtype)])
-        return self._fn(x)[:n]
+        with obs_trace.span("plan.forward_batch", n=n, bucket=b):
+            if b != n:
+                x = jnp.concatenate(
+                    [x, jnp.zeros((b - n,) + x.shape[1:], x.dtype)])
+            return self._fn(x)[:n]
 
     def throughput(self, x, *, reps: int = 5, warmup: int = 2) -> dict:
         """Measured images/s of the batched path at ``x``'s batch size
@@ -209,7 +230,12 @@ class CompiledPlan:
         h = quantize(x, self.plan.in_fb)
         for node in self.plan.nodes:
             fn = jax.jit(lambda v, _n=node: self._run_node(_n, v))
-            us = time_config(fn, h, reps=reps, warmup=1)
+            # per-layer span aligned with this row: one "layer.<name>" slice
+            # per profile row, carrying the measured us as a span attribute
+            with obs_trace.span(f"layer.{node.name}", cat="graph.profile",
+                                op=node.op, batch=batch) as sp:
+                us = time_config(fn, h, reps=reps, warmup=1)
+                sp.set(us=us)
             row = dict(name=node.name, op=node.op, us=us, macs=0,
                        primitive=node.spec.primitive if node.spec else None)
             if node.op == "qconv":

@@ -16,6 +16,13 @@ Epilogues: the quantized entry points thread ``requant_shift`` (Algorithm-1
 round-to-nearest shift) and ``act="relu"`` (fused activation at accumulator
 scale, applied before the shift) to both engines, so pallas and xla stay
 bit-exact including the fused activation.
+
+Observability: every entry point counts its dispatch into the process
+metrics registry as ``kernels.dispatch.<kernel>.<method>`` (pallas vs xla
+per primitive — the engine-coverage picture ``scripts/bench_snapshot.py``
+snapshots), and ``causal_conv1d``'s auto->xla mesh fallback is counted
+separately as ``kernels.fallback.causal_conv1d.mesh``. Calls from inside a
+jit count once per trace, eager calls once per call.
 """
 from __future__ import annotations
 
@@ -24,6 +31,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs import metrics as _obs_metrics
 
 from . import ref
 from .common import use_interpret
@@ -39,6 +48,10 @@ from .pool import maxpool2d as _pool_pallas
 def _check_method(method: str, allowed=("pallas", "xla")):
     if method not in allowed:
         raise ValueError(f"unknown method {method!r}; expected one of {allowed}")
+
+
+def _count_dispatch(kernel: str, method: str):
+    _obs_metrics.counter(f"kernels.dispatch.{kernel}.{method}").inc()
 
 
 def _check_no_config(method: str, config, *extra_knobs):
@@ -63,6 +76,7 @@ def conv2d(x, w, bias=None, *, groups: int = 1, method: str = "pallas",
            requant_shift: Optional[int] = None, act: Optional[str] = None,
            config: Optional[dict] = None):
     _check_method(method)
+    _count_dispatch("conv2d", method)
     if method == "xla":
         _check_no_config(method, config)
         if requant_shift is not None:
@@ -82,6 +96,7 @@ def depthwise2d(x, w_dw, *, method: str = "pallas",
                 requant_shift: Optional[int] = None, act: Optional[str] = None,
                 config: Optional[dict] = None):
     _check_method(method)
+    _count_dispatch("depthwise2d", method)
     if method == "xla":
         _check_no_config(method, config)
         if requant_shift is not None:
@@ -106,6 +121,7 @@ def shift_conv2d(x, shifts, w_pw, bias=None, *, method: str = "pallas",
     ``kernel_size // 2``; unused when the table is concrete. ``bias`` is
     added at accumulator scale (quantized path only)."""
     _check_method(method)
+    _count_dispatch("shift_conv2d", method)
     if method == "xla":
         _check_no_config(method, config)
         if requant_shift is not None:
@@ -135,6 +151,7 @@ def add_conv2d(x, w, bias=None, *, method: str = "pallas",
     ``x_preshift``/``w_preshift`` are the Algorithm-1 (right) scale-alignment
     left shifts applied to the operands before |x - w|."""
     _check_method(method)
+    _count_dispatch("add_conv2d", method)
     if method == "xla":
         _check_no_config(method, config)
         if requant_shift is not None:
@@ -163,6 +180,7 @@ def maxpool2d(x, *, window: int = 2, stride: Optional[int] = None,
     pooling the dequantized floats (max commutes with the positive pow2
     scale) — the graph executor's integer-only pool boundary."""
     _check_method(method)
+    _count_dispatch("maxpool2d", method)
     if method == "xla":
         _check_no_config(method, config)
         return ref.maxpool2d_ref(x, window=window, stride=stride)
@@ -221,6 +239,9 @@ def causal_conv1d(x, w, *, method: str = "auto",
     if method == "auto":
         from repro.parallel.sharding import current_mesh
         method = "xla" if current_mesh() is not None else "pallas"
+        if method == "xla":     # auto degraded: opaque pallas_call vs SPMD
+            _obs_metrics.counter("kernels.fallback.causal_conv1d.mesh").inc()
+    _count_dispatch("causal_conv1d", method)
     if method == "xla":
         return ref.causal_conv1d_ref(x, w)
     if config is None:
@@ -240,6 +261,7 @@ def matmul(a, b, *, method: str = "pallas", requant_shift: Optional[int] = None,
            bk: Optional[int] = None, config: Optional[dict] = None):
     """Explicit bm/bn/bk win over ``config``, which wins over the tuner."""
     _check_method(method)
+    _count_dispatch("matmul", method)
     if method == "xla":
         _check_no_config(method, config, bm, bn, bk)
         return ref.matmul_ref(a, b, requant_shift=requant_shift, act=act)

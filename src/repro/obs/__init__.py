@@ -1,0 +1,23 @@
+"""repro.obs — unified tracing + metrics for the whole stack.
+
+Two pure-stdlib submodules (no jax import, so every layer can depend on
+them without cycles):
+
+* :mod:`repro.obs.trace` — thread-safe span tracer exporting Chrome
+  trace-event JSON (Perfetto / ``chrome://tracing``), gated by the
+  ``REPRO_TRACE`` env var, near-zero-cost no-op when disabled.
+* :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket histograms
+  (p50/p95/p99) in a process-wide :data:`~repro.obs.metrics.REGISTRY`,
+  with per-engine private registries backing ``Engine.stats`` and
+  ``CNNEngine.stats``.
+
+See EXPERIMENTS.md §Observability for capture/read workflows and
+``scripts/bench_snapshot.py`` for the machine-readable benchmark record
+built on top of both.
+"""
+from . import metrics, trace
+from .metrics import REGISTRY, Registry
+from .trace import TRACER, Tracer, span, traced
+
+__all__ = ["metrics", "trace", "REGISTRY", "Registry", "TRACER", "Tracer",
+           "span", "traced"]

@@ -13,6 +13,14 @@ than the LM slot machine — the throughput lever is purely the batched
 kernel schedule: every admitted image shares the round's weight-block
 loads (the Fig-3 reuse quantity scaled by ``block_n``), which is what
 ``benchmarks/throughput_bench.py`` measures against the N=1 loop.
+
+Observability mirrors the LM engine (``repro.obs``): ``CNNEngine.stats``
+is backed by a private metrics registry (same keys as before plus latency/
+queue-wait quantiles), round timers ``jax.block_until_ready`` the batched
+forward before stopping so ``images_per_s`` measures device time, request
+timestamps are monotonic ``perf_counter`` values with one wall-clock field
+for trace export, and with ``REPRO_TRACE=1`` each round and each request
+lifecycle (queue_wait -> execute) lands on the process tracer.
 """
 from __future__ import annotations
 
@@ -21,9 +29,12 @@ import queue
 import time
 from typing import List, Optional
 
+import jax
 import numpy as np
 
 from repro.graph.executor import CompiledPlan
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -33,14 +44,21 @@ class ImageRequest:
     image: np.ndarray               # (H, W, C) float
     logits: Optional[np.ndarray] = None
     done: bool = False
-    # engine-filled metrics
+    # engine-filled metrics — monotonic perf_counter stamps (negative-proof
+    # intervals); submit_wall_t is the wall-clock field for trace export
     submit_t: float = 0.0
+    submit_wall_t: float = 0.0
+    admit_t: float = 0.0            # perf_counter when its round started
     finish_t: float = 0.0
     batch_round: int = -1           # round the request was served in
 
     @property
     def latency_s(self) -> float:
         return max(self.finish_t - self.submit_t, 0.0)
+
+    @property
+    def queue_wait_s(self) -> float:
+        return max(self.admit_t - self.submit_t, 0.0)
 
 
 @dataclasses.dataclass
@@ -61,32 +79,60 @@ class CNNEngine:
         self.plan = plan
         self.scfg = scfg
         self.queue: "queue.Queue[ImageRequest]" = queue.Queue()
+        # private registry: per-engine stats isolation, in-place reset
+        self.metrics = obs_metrics.Registry()
+        self._m = {
+            "batch_rounds": self.metrics.counter("serve.cnn.batch_rounds"),
+            "images_done": self.metrics.counter("serve.cnn.images_done"),
+            "batch_time": self.metrics.counter("serve.cnn.batch_time_s"),
+            "latency": self.metrics.histogram("serve.cnn.latency_s"),
+            "queue_wait": self.metrics.histogram("serve.cnn.queue_wait_s"),
+        }
         self.reset_stats()
 
     # ------------------------------------------------------------- metrics --
 
     def reset_stats(self):
-        self._c = dict(batch_rounds=0, images_done=0)
-        self._batch_time = 0.0
-        self._lat: List[float] = []
+        self.metrics.reset()
 
     @property
     def stats(self) -> dict:
-        """Counters + derived scheduler metrics (computed on access);
-        occupancy is served images over offered batch slots."""
-        c = dict(self._c)
-        rounds = c["batch_rounds"]
+        """Counters + derived scheduler metrics (computed on access from the
+        engine's registry); occupancy is served images over offered batch
+        slots. Key-compatible with the pre-registry dict plus quantiles."""
+        m = self._m
+        rounds = int(m["batch_rounds"].value)
+        c = dict(batch_rounds=rounds, images_done=int(m["images_done"].value))
         c["occupancy"] = (c["images_done"] / (rounds * self.scfg.max_batch)
                           if rounds else 0.0)
-        c["latency_avg_s"] = float(np.mean(self._lat)) if self._lat else 0.0
-        c["images_per_s"] = (c["images_done"] / self._batch_time
-                             if self._batch_time > 0 else 0.0)
+        c["latency_avg_s"] = m["latency"].mean
+        batch_time = m["batch_time"].value
+        c["images_per_s"] = (c["images_done"] / batch_time
+                             if batch_time > 0 else 0.0)
+        c["latency_p50_s"] = m["latency"].percentile(50)
+        c["latency_p95_s"] = m["latency"].percentile(95)
+        c["latency_p99_s"] = m["latency"].percentile(99)
+        c["queue_wait_avg_s"] = m["queue_wait"].mean
+        c["queue_wait_p99_s"] = m["queue_wait"].percentile(99)
         return c
+
+    def _observe_served(self, req: ImageRequest):
+        self._m["latency"].observe(req.latency_s)
+        self._m["queue_wait"].observe(req.queue_wait_s)
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            lane = obs_trace.next_lane()
+            tr.begin("image_request", ts=req.submit_t, tid=lane, uid=req.uid,
+                     round=req.batch_round, submit_wall_t=req.submit_wall_t)
+            tr.complete("queue_wait", req.submit_t, req.admit_t, tid=lane)
+            tr.complete("execute", req.admit_t, req.finish_t, tid=lane)
+            tr.end("image_request", ts=req.finish_t, tid=lane)
 
     # ----------------------------------------------------------- frontend --
 
     def submit(self, req: ImageRequest):
-        req.submit_t = time.time()
+        req.submit_t = time.perf_counter()
+        req.submit_wall_t = time.time()
         self.queue.put(req)
 
     def _take_round(self) -> List[ImageRequest]:
@@ -109,17 +155,26 @@ class CNNEngine:
             if not batch:
                 break
             x = np.stack([r.image for r in batch])
+            rnd = int(self._m["batch_rounds"].value)
             t0 = time.perf_counter()
-            logits = np.asarray(self.plan.forward_batch(x))
-            self._batch_time += time.perf_counter() - t0
-            now = time.time()
+            for r in batch:
+                r.admit_t = t0
+            with obs_trace.span("cnn.batch_round", round=rnd,
+                                batch=len(batch)):
+                logits = self.plan.forward_batch(x)
+                # sync before stopping the timer: images_per_s must measure
+                # device time, not JAX async-dispatch enqueue time
+                jax.block_until_ready(logits)
+            self._m["batch_time"].inc(time.perf_counter() - t0)
+            logits = np.asarray(logits)
+            now = time.perf_counter()
             for i, r in enumerate(batch):
                 r.logits = logits[i]
                 r.done = True
                 r.finish_t = now
-                r.batch_round = self._c["batch_rounds"]
-                self._lat.append(r.latency_s)
-            self._c["batch_rounds"] += 1
-            self._c["images_done"] += len(batch)
+                r.batch_round = rnd
+                self._observe_served(r)
+            self._m["batch_rounds"].inc()
+            self._m["images_done"].inc(len(batch))
             finished.extend(batch)
         return finished

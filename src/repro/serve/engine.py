@@ -25,7 +25,20 @@ that request to softmax sampling with the engine's seeded host rng.
 
 ``Engine.stats`` surfaces scheduler metrics: prefill/decode-round/token
 counters, slot occupancy (occupied slot-rounds over offered slot-rounds),
-mean time-to-first-token, and decode throughput.
+TTFT/TPOT/queue-wait latency quantiles, and decode throughput. The stats
+are backed by a private ``repro.obs.metrics.Registry`` per engine (same
+keys as the pre-registry dict, plus the histogram quantiles), and with
+``REPRO_TRACE=1`` the engine emits per-request lifecycle spans
+(queue_wait -> prefill -> generate, each request on its own trace lane)
+plus per-round decode spans to the process tracer — export with
+``repro.obs.trace.export(path)`` and open in Perfetto.
+
+Timing discipline: decode-round timers ``jax.block_until_ready`` the round
+outputs before stopping, so ``decode_tok_s`` measures real device time and
+not JAX async-dispatch enqueue time; request timestamps are monotonic
+``time.perf_counter()`` values (intervals can't go negative under clock
+adjustment) with one wall-clock field (``submit_wall_t``) kept for trace
+export.
 """
 from __future__ import annotations
 
@@ -41,6 +54,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import api
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -53,9 +68,14 @@ class Request:
     temperature: Optional[float] = None  # overrides the engine default
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
-    # engine-filled metrics
-    submit_t: float = 0.0           # wall time at Engine.submit
-    first_token_t: float = 0.0      # wall time when the prefill token landed
+    # engine-filled metrics — monotonic time.perf_counter() stamps, so the
+    # derived intervals (ttft, queue wait, tpot) can never go negative under
+    # wall-clock adjustment; submit_wall_t is the one wall-clock field kept
+    # so trace export can recover absolute times
+    submit_t: float = 0.0           # perf_counter at Engine.submit
+    submit_wall_t: float = 0.0      # wall clock at Engine.submit
+    admit_t: float = 0.0            # perf_counter at slot admission
+    first_token_t: float = 0.0      # perf_counter when the prefill token landed
     finish_t: float = 0.0
     admit_round: int = -1           # global decode-round counter at admission
     finish_round: int = -1          # round the request retired on
@@ -63,6 +83,10 @@ class Request:
     @property
     def ttft_s(self) -> float:
         return max(self.first_token_t - self.submit_t, 0.0)
+
+    @property
+    def queue_wait_s(self) -> float:
+        return max(self.admit_t - self.submit_t, 0.0)
 
 
 @dataclasses.dataclass
@@ -150,30 +174,75 @@ class Engine:
                 donate_argnums=() if cpu else (0,))
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self._rng = np.random.default_rng(scfg.seed)
+        # private registry: per-engine stats isolation; handles stay valid
+        # across reset_stats (Registry.reset zeroes in place)
+        self.metrics = obs_metrics.Registry()
+        self._m = {
+            "prefills": self.metrics.counter("serve.prefills"),
+            "decode_steps": self.metrics.counter("serve.decode_steps"),
+            "tokens_out": self.metrics.counter("serve.tokens_out"),
+            "requests_done": self.metrics.counter("serve.requests_done"),
+            "occupied": self.metrics.counter("serve.occupied_slot_rounds"),
+            "decode_time": self.metrics.counter("serve.decode_time_s"),
+            "ttft": self.metrics.histogram("serve.ttft_s"),
+            "tpot": self.metrics.histogram("serve.tpot_s"),
+            "queue_wait": self.metrics.histogram("serve.queue_wait_s"),
+        }
         self.reset_stats()
 
     # ------------------------------------------------------------- metrics --
 
     def reset_stats(self):
         """Zero the counters (e.g. after a compile-warmup drain)."""
-        self._c = dict(prefills=0, decode_steps=0, tokens_out=0,
-                       requests_done=0, occupied_slot_rounds=0)
-        self._ttft: List[float] = []
-        self._decode_time = 0.0
+        self.metrics.reset()
         self._round = 0
 
     @property
     def stats(self) -> dict:
-        """Counters + derived scheduler metrics (computed on access)."""
-        c = dict(self._c)
-        offered = c.pop("occupied_slot_rounds")
-        rounds = c["decode_steps"]
-        c["occupancy"] = offered / (rounds * self.scfg.max_batch) if rounds \
-            else 0.0
-        c["ttft_avg_s"] = float(np.mean(self._ttft)) if self._ttft else 0.0
-        c["decode_tok_s"] = (c["tokens_out"] / self._decode_time
-                             if self._decode_time > 0 else 0.0)
+        """Counters + derived scheduler metrics (computed on access from the
+        engine's registry). Key-compatible with the pre-registry dict
+        (prefills/decode_steps/tokens_out/requests_done/occupancy/
+        ttft_avg_s/decode_tok_s) plus the histogram quantiles."""
+        m = self._m
+        rounds = int(m["decode_steps"].value)
+        c = dict(prefills=int(m["prefills"].value),
+                 decode_steps=rounds,
+                 tokens_out=int(m["tokens_out"].value),
+                 requests_done=int(m["requests_done"].value))
+        c["occupancy"] = (m["occupied"].value
+                          / (rounds * self.scfg.max_batch)) if rounds else 0.0
+        c["ttft_avg_s"] = m["ttft"].mean
+        decode_time = m["decode_time"].value
+        c["decode_tok_s"] = (c["tokens_out"] / decode_time
+                             if decode_time > 0 else 0.0)
+        c["ttft_p50_s"] = m["ttft"].percentile(50)
+        c["ttft_p95_s"] = m["ttft"].percentile(95)
+        c["ttft_p99_s"] = m["ttft"].percentile(99)
+        c["tpot_avg_s"] = m["tpot"].mean
+        c["queue_wait_avg_s"] = m["queue_wait"].mean
+        c["queue_wait_p99_s"] = m["queue_wait"].percentile(99)
         return c
+
+    def _observe_retired(self, req: Request):
+        """Latency histograms + the request's trace-lane replay (the spans
+        are emitted at retirement from recorded perf_counter stamps, so
+        overlapping requests land on separate, properly nested lanes)."""
+        self._m["queue_wait"].observe(req.queue_wait_s)
+        n_out = len(req.out_tokens)
+        if n_out > 1 and req.finish_t > req.first_token_t:
+            self._m["tpot"].observe(
+                (req.finish_t - req.first_token_t) / (n_out - 1))
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            lane = obs_trace.next_lane()
+            tr.begin("request", ts=req.submit_t, tid=lane, uid=req.uid,
+                     prompt_len=int(len(req.prompt)), new_tokens=n_out,
+                     submit_wall_t=req.submit_wall_t)
+            tr.complete("queue_wait", req.submit_t, req.admit_t, tid=lane)
+            tr.complete("prefill", req.admit_t, req.first_token_t, tid=lane)
+            tr.complete("generate", req.first_token_t, req.finish_t, tid=lane,
+                        tokens=n_out)
+            tr.end("request", ts=req.finish_t, tid=lane)
 
     # ----------------------------------------------------------- frontend --
 
@@ -185,7 +254,8 @@ class Engine:
             raise ValueError(
                 f"request {req.uid}: prompt length {len(req.prompt)} exceeds "
                 f"max_len={self.scfg.max_len}")
-        req.submit_t = time.time()
+        req.submit_t = time.perf_counter()
+        req.submit_wall_t = time.time()
         self.queue.put(req)
 
     def _next_request(self) -> Optional[Request]:
@@ -206,9 +276,10 @@ class Engine:
         return out
 
     def run_until_drained(self) -> List[Request]:
-        if self.scfg.scheduler == "static":
-            return self._run_static()
-        return self._run_continuous()
+        with obs_trace.span("engine.drain", scheduler=self.scfg.scheduler):
+            if self.scfg.scheduler == "static":
+                return self._run_static()
+            return self._run_continuous()
 
     # ----------------------------------------------------------- sampling --
 
@@ -251,19 +322,22 @@ class Engine:
             nonlocal cache
             plen = len(req.prompt)
             bucket = self._bucket_len(plen)
+            req.admit_t = time.perf_counter()
             toks = np.zeros((bucket,), np.int32)
             toks[:plen] = req.prompt    # right-pad: positions stay 0..plen-1
-            logits, fresh = self.prefill(self.params, {
-                "tokens": jnp.asarray(toks[None, :]),
-                "prompt_lens": jnp.asarray([plen], jnp.int32)})
-            self._c["prefills"] += 1
-            cache = self._write_slot(cache, fresh, jnp.int32(i))
-            t = self._pick(np.asarray(logits)[0, -1], req)
-            req.first_token_t = time.time()
+            with obs_trace.span("engine.prefill", uid=req.uid, slot=i,
+                                plen=plen, bucket=bucket):
+                logits, fresh = self.prefill(self.params, {
+                    "tokens": jnp.asarray(toks[None, :]),
+                    "prompt_lens": jnp.asarray([plen], jnp.int32)})
+                self._m["prefills"].inc()
+                cache = self._write_slot(cache, fresh, jnp.int32(i))
+                t = self._pick(np.asarray(logits)[0, -1], req)
+            req.first_token_t = time.perf_counter()
             req.admit_round = self._round
             req.out_tokens.append(t)
-            self._c["tokens_out"] += 1
-            self._ttft.append(req.ttft_s)
+            self._m["tokens_out"].inc()
+            self._m["ttft"].observe(req.ttft_s)
             cur[i, 0] = t
             slots[i] = req
             lens[i] = plen
@@ -275,10 +349,11 @@ class Engine:
             if (req.out_tokens[-1] == self._effective_eos(req)
                     or len(req.out_tokens) >= req.max_new_tokens or full):
                 req.done = True
-                req.finish_t = time.time()
+                req.finish_t = time.perf_counter()
                 req.finish_round = self._round
                 finished.append(req)
-                self._c["requests_done"] += 1
+                self._m["requests_done"].inc()
+                self._observe_retired(req)
                 slots[i] = None
                 lens[i] = 0
                 cache = api.cache_free_slot(cache, i)
@@ -298,18 +373,25 @@ class Engine:
             if not active:
                 break                   # the admit loop drained the queue
             t0 = time.perf_counter()
-            logits, cache = self.decode(self.params, jnp.asarray(cur), cache)
-            logits = np.asarray(logits)     # blocks until the round is done
-            self._decode_time += time.perf_counter() - t0
+            with obs_trace.span("engine.decode_round", round=self._round,
+                                active=len(active)):
+                logits, cache = self.decode(self.params, jnp.asarray(cur),
+                                            cache)
+                # block on BOTH outputs before stopping the timer: asarray
+                # alone would sync the logits but leave the cache update in
+                # flight, skewing decode_tok_s by JAX async dispatch
+                jax.block_until_ready((logits, cache))
+            self._m["decode_time"].inc(time.perf_counter() - t0)
+            logits = np.asarray(logits)
             self._round += 1
-            self._c["decode_steps"] += 1
-            self._c["occupied_slot_rounds"] += len(active)
+            self._m["decode_steps"].inc()
+            self._m["occupied"].inc(len(active))
             for i in active:
                 lens[i] += 1            # this round wrote K/V at lens[i]
                 req = slots[i]
                 t = self._pick(logits[i, -1], req)
                 req.out_tokens.append(t)
-                self._c["tokens_out"] += 1
+                self._m["tokens_out"].inc()
                 cur[i, 0] = t
                 maybe_retire(i)
             # decode advanced every row's length, including retired/empty
@@ -334,17 +416,22 @@ class Engine:
         toks = np.zeros((b, plen), np.int32)
         for i, r in enumerate(reqs):
             toks[i, plen - len(r.prompt):] = r.prompt      # left-pad
-        logits, cache = self.prefill(self.params, {"tokens": jnp.asarray(toks)})
-        self._c["prefills"] += 1
-        lg = np.asarray(logits)
+        now = time.perf_counter()
+        for r in reqs:
+            r.admit_t = now
+        with obs_trace.span("engine.prefill", batch=b, plen=plen):
+            logits, cache = self.prefill(self.params,
+                                         {"tokens": jnp.asarray(toks)})
+            self._m["prefills"].inc()
+            lg = np.asarray(logits)
         cur = np.zeros((b, 1), np.int32)
-        now = time.time()
+        now = time.perf_counter()
         for i, r in enumerate(reqs):
             t = self._pick(lg[i, -1], r)
             r.first_token_t = now
-            self._ttft.append(r.ttft_s)
+            self._m["ttft"].observe(r.ttft_s)
             r.out_tokens.append(t)
-            self._c["tokens_out"] += 1
+            self._m["tokens_out"].inc()
             cur[i, 0] = t
             if t == self._effective_eos(r) or r.max_new_tokens <= 1:
                 r.done = True
@@ -353,26 +440,33 @@ class Engine:
             if all(r.done for r in reqs):
                 break
             t0 = time.perf_counter()
-            logits, cache = self.decode(self.params, jnp.asarray(cur), cache)
+            with obs_trace.span("engine.decode_round", round=self._round,
+                                active=sum(not r.done for r in reqs)):
+                logits, cache = self.decode(self.params, jnp.asarray(cur),
+                                            cache)
+                # sync logits AND cache before stopping the timer (see the
+                # continuous path): decode_tok_s must be device time
+                jax.block_until_ready((logits, cache))
+            self._m["decode_time"].inc(time.perf_counter() - t0)
             lg = np.asarray(logits)
-            self._decode_time += time.perf_counter() - t0
             self._round += 1
-            self._c["decode_steps"] += 1
+            self._m["decode_steps"].inc()
             for i, r in enumerate(reqs):
                 if r.done:
                     continue
-                self._c["occupied_slot_rounds"] += 1
+                self._m["occupied"].inc()
                 t = self._pick(lg[i, -1], r)
                 r.out_tokens.append(t)
-                self._c["tokens_out"] += 1
+                self._m["tokens_out"].inc()
                 cur[i, 0] = t
                 if (t == self._effective_eos(r)
                         or len(r.out_tokens) >= r.max_new_tokens):
                     r.done = True
-        now = time.time()
+        now = time.perf_counter()
         for r in reqs:
             r.done = True
             r.finish_t = now
             r.finish_round = self._round
-            self._c["requests_done"] += 1
+            self._m["requests_done"].inc()
+            self._observe_retired(r)
         return reqs

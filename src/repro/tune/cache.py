@@ -23,6 +23,8 @@ import os
 import threading
 from typing import Dict, Optional
 
+from repro.obs import metrics as _obs_metrics
+
 # v2: the batched/spatially-tiled kernel grids added block_n/block_h/block_w
 # to every conv-kernel search space (and maxpool2d became tunable) — configs
 # searched over the v1 spaces are not comparable, so v1 caches are ignored.
@@ -137,7 +139,13 @@ def reset():
 
 
 def memo_get(key: str) -> Optional[dict]:
-    return _memo.get(key)
+    entry = _memo.get(key)
+    # hit/miss counters feed the process metrics registry: a cold memo on a
+    # hot path (or a schema-stale cache silently falling back to analytic
+    # configs) shows up in the bench_snapshot metrics section
+    _obs_metrics.counter(
+        "tune.memo.hit" if entry is not None else "tune.memo.miss").inc()
+    return entry
 
 
 def memo_put(key: str, entry: dict):

@@ -32,6 +32,8 @@ import numpy as np
 from repro.core.energy import TPUv5e
 from repro.core.primitives import ConvSpec
 from repro.kernels.common import cdiv
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 
 from . import cache as _cache
 from . import space as _space
@@ -293,8 +295,13 @@ def autotune(kernel: str, sig: ShapeSig, args: Tuple, *,
     for i, cfg in enumerate(_space.candidates(sig, dtype)):
         if max_candidates is not None and i >= max_candidates:
             break
-        us = time_config(lambda a=args, c=cfg: call(a, c, kw),
-                         reps=reps, warmup=warmup)
+        # one span per measured candidate: an exported trace of a tuning run
+        # shows the whole search, config and measured us on each slice
+        with _obs_trace.span("tune.candidate", cat="tune", kernel=kernel,
+                             shape=sig.key(), config=dict(cfg)) as sp:
+            us = time_config(lambda a=args, c=cfg: call(a, c, kw),
+                             reps=reps, warmup=warmup)
+            sp.set(us=us)
         results.append((cfg, us))
         if verbose:
             print(f"  {kernel}/{sig.key()} {cfg} -> {us:.1f}us")
@@ -419,7 +426,12 @@ def get_config(sig: ShapeSig, dtype: str) -> Dict[str, int]:
     pc = _cache.get_default_cache()
     entry = pc.get(key) if pc is not None else None
     if entry is None:
+        # no tuned entry: the analytic cost model picks the schedule —
+        # counted so untuned shapes are visible in the metrics snapshot
+        _obs_metrics.counter("tune.cache.analytic_fallback").inc()
         entry = {"config": analytic_config(sig, str(dtype)),
                  "us": None, "source": "analytic"}
+    else:
+        _obs_metrics.counter("tune.cache.hit").inc()
     _cache.memo_put(key, entry)
     return entry["config"]
