@@ -1,5 +1,5 @@
 """Paper Tables 3-4 quantized counterpart: integer-only latency + energy per
-primitive (see EXPERIMENTS.md §Quantized).
+primitive (see EXPERIMENTS.md §Quantized and §Sub-byte).
 
 Three engines per Table-2 sweep shape, all running the SAME Algorithm-1
 arithmetic where quantized:
@@ -11,6 +11,14 @@ arithmetic where quantized:
     the direct / no-SIMD baseline (bit-exact with pallas-int8 — asserted
     per row and reported as ``exact=``);
   * float       — the float reference primitive.
+
+Each shape also gets a ``quant_w4/...`` row: the same layer with its
+weights nibble-packed to W4 (``quantize_conv_params(bits=4)``, two int4
+codes per byte + per-group shift scales). ``exact=`` there asserts the
+triple contract pallas == xla == expanded-int8 oracle (packing changes
+data movement, never arithmetic) and the ``w*_wbytes`` fields report the
+weight bytes a decode step moves — W4 must be ~half of W8 modulo the
+group-shift sideband (``±`` packing overhead).
 
 ``derived`` also carries the paper-side model quantities from
 ``core/energy.py`` (MCU @ 84 MHz, constants calibrated to paper Table 3):
@@ -25,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import ConvSpec, MCUModel, apply, init
 from repro.core.qconv import qconv_apply, quantize_conv_params
-from repro.core.quantize import QTensor, frac_bits_for, quantize
+from repro.core.quantize import QTensor, QTensorW4, frac_bits_for, quantize
 
 from .common import FAST, emit, time_fn
 
@@ -88,6 +96,38 @@ def main() -> None:
              f"exact={exact};macs={macs};"
              f"mcu_e_scalar_mj={e_scalar:.3f};mcu_e_simd_mj={e_simd:.3f};"
              f"mcu_e_ratio={e_scalar / max(e_simd, 1e-12):.2f}")
+
+        # ---- W4A8 row: same layer, nibble-packed weights -----------------
+        qp4 = quantize_conv_params(params, spec, bits=4)
+        qp4x = {k: QTensor(v.expand(), v.frac_bits)
+                if isinstance(v, QTensorW4) else v for k, v in qp4.items()}
+
+        def w4_fn(method, qq):
+            fb = xq.frac_bits
+            return jax.jit(lambda q, m=method, s=spec, o=ofb, p=qq:
+                           qconv_apply(p, QTensor(q, fb), s, o, method=m).q)
+
+        f4_pallas, f4_xla = w4_fn("pallas", qp4), w4_fn("xla", qp4)
+        f4_oracle = w4_fn("pallas", qp4x)       # unpacked-int8 oracle codes
+        y4 = f4_pallas(xq.q)
+        exact4 = int(bool(jnp.all(y4 == f4_xla(xq.q))
+                          & jnp.all(y4 == f4_oracle(xq.q))))
+        if not exact4:
+            raise RuntimeError(
+                f"quant_w4/{name}: W4 path diverged from the unpacked-int8 "
+                "oracle — the in-register unpack changed arithmetic")
+        w4_us = time_fn(f4_pallas, xq.q)
+        # weight bytes one forward moves: packed nibbles + shift sideband
+        # vs the int8 codes (biases identical, excluded from both)
+        w8b = sum(v.q.size for k, v in qp.items()
+                  if k.startswith("w") and isinstance(v, QTensor))
+        w4b = sum(v.q.size + v.shifts.size for v in qp4.values()
+                  if isinstance(v, QTensorW4))
+        emit(f"quant_w4/{name}/w={width}", w4_us,
+             f"int8_us={pallas_us:.1f};exact={exact4};"
+             f"w8_wbytes={w8b};w4_wbytes={w4b};"
+             f"wbytes_ratio={w4b / max(w8b, 1):.2f};"
+             f"mcu_e_simd_mj={e_simd:.3f};macs={macs}")
 
 
 if __name__ == "__main__":

@@ -153,6 +153,13 @@ def collect_headline(sections: Dict[str, dict]) -> Dict[str, float]:
             prim = rname.split("/")[1]
             h[f"layers_{prim}_fused_over_unfused"] = \
                 row["derived"]["fused_over_unfused"]
+    # W4A8 (§Sub-byte): weight-bytes-moved ratio per primitive — the
+    # headline sub-byte claim (≈0.5 + group-shift sideband). The per-row
+    # exact flags ride in via collect_exact like every other section.
+    for rname, row in sections.get("quant", {}).get("rows", {}).items():
+        if rname.startswith("quant_w4/") and "wbytes_ratio" in row["derived"]:
+            prim = rname.split("/")[1]
+            h[f"w4_{prim}_wbytes_ratio"] = row["derived"]["wbytes_ratio"]
     return h
 
 

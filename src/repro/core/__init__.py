@@ -2,8 +2,10 @@
 from .primitives import (ConvSpec, Primitives, apply, apply_block, init,
                          init_block, add_conv, depthwise_conv, shift_channels,
                          standard_conv, batchnorm_apply)
-from .quantize import (QTensor, quantize, requantize, frac_bits_for,
-                       mac_inner, addmac_inner, quantize_params)
+from .quantize import (QTensor, QTensorW4, quantize, requantize,
+                       frac_bits_for, mac_inner, addmac_inner,
+                       quantize_params, pack_w4, unpack_w4, expand_w4,
+                       quantize_w4)
 from .folding import fold, FOLDABLE
 from .energy import MCUModel, TPUv5e, accesses_direct, accesses_im2col, reuse_ratio
 from .qconv import qconv_apply, quantize_conv_params

@@ -30,7 +30,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from .primitives import ConvSpec, shift_channels, _DN
-from .quantize import QTensor, addmac_align, requantize, rshift_round
+from .quantize import (QTensor, QTensorW4, addmac_align, quantize_w4,
+                       requantize, rshift_round)
 
 
 def _conv_int(x_q: jax.Array, w_q: jax.Array, *, stride=1, padding="SAME",
@@ -65,6 +66,29 @@ def _kernel_layer_ok(spec: ConvSpec) -> bool:
     return spec.stride == 1 and spec.padding == "SAME"
 
 
+def _wq(w):
+    """(weight array, w_shifts-or-None) for the kernel layer: a QTensorW4
+    leaf stays nibble-packed (the kernels unpack in-register); a QTensor
+    passes through. Scale math is identical either way — ``frac_bits`` is
+    the W4 *base* scale, and the expanded codes live at exactly that
+    scale."""
+    if isinstance(w, QTensorW4):
+        return w.q, w.shifts
+    return w.q, None
+
+
+def _expand_w4_qparams(qparams: dict) -> dict:
+    """W4 leaves -> equivalent int8 QTensors (for the raw-lax fallback path,
+    which has no packed-weight kernels)."""
+    out = {}
+    for k, v in qparams.items():
+        if isinstance(v, QTensorW4):
+            out[k] = QTensor(v.expand(), v.frac_bits)
+        else:
+            out[k] = v
+    return out
+
+
 def qconv_apply(qparams: dict, x: QTensor, spec: ConvSpec, out_frac_bits: int,
                 *, method: str = "xla", act: Optional[str] = None,
                 configs: Optional[dict] = None) -> QTensor:
@@ -95,49 +119,55 @@ def qconv_apply(qparams: dict, x: QTensor, spec: ConvSpec, out_frac_bits: int,
                 f"qconv_apply(method='pallas'): the Pallas kernel layer only "
                 f"supports stride=1 SAME layers, got stride={spec.stride} "
                 f"padding={spec.padding!r}; use method='xla'")
-        return _qconv_apply_lax(qparams, x, spec, out_frac_bits, act=act)
+        return _qconv_apply_lax(_expand_w4_qparams(qparams), x, spec,
+                                out_frac_bits, act=act)
 
     if p in ("standard", "grouped"):
         w = qparams["w"]
+        wq, ws = _wq(w)
         groups = spec.groups if p == "grouped" else 1
         acc_fb = x.frac_bits + w.frac_bits
-        y = K.conv2d(x.q, w.q, _bias_acc(bias, acc_fb), groups=groups,
+        y = K.conv2d(x.q, wq, _bias_acc(bias, acc_fb), groups=groups,
                      method=method, requant_shift=acc_fb - out_frac_bits,
-                     act=act, config=cfgs.get("main"))
+                     act=act, config=cfgs.get("main"), w_shifts=ws)
         return QTensor(y, out_frac_bits)
 
     if p == "dws":
         w_dw, w_pw = qparams["w_dw"], qparams["w_pw"]
+        wdq, wds = _wq(w_dw)
+        wpq, wps = _wq(w_pw)
         # depthwise at an intermediate scale, then pointwise
         mid_fb = qparams.get("mid_frac_bits", out_frac_bits)
-        h = K.depthwise2d(x.q, w_dw.q, method=method,
+        h = K.depthwise2d(x.q, wdq, method=method,
                           requant_shift=x.frac_bits + w_dw.frac_bits - mid_fb,
-                          config=cfgs.get("dw"))
+                          config=cfgs.get("dw"), w_shifts=wds)
         acc_fb = mid_fb + w_pw.frac_bits
-        y = K.conv2d(h, w_pw.q, _bias_acc(bias, acc_fb), method=method,
+        y = K.conv2d(h, wpq, _bias_acc(bias, acc_fb), method=method,
                      requant_shift=acc_fb - out_frac_bits, act=act,
-                     config=cfgs.get("pw"))
+                     config=cfgs.get("pw"), w_shifts=wps)
         return QTensor(y, out_frac_bits)
 
     if p == "shift":
         # shift is pure data movement: exact in integer domain (paper's
         # point) — the Pallas kernel fuses it into the pointwise matmul
         w_pw = qparams["w_pw"]
+        wpq, wps = _wq(w_pw)
         acc_fb = x.frac_bits + w_pw.frac_bits
-        y = K.shift_conv2d(x.q, qparams["shifts"], w_pw.q,
+        y = K.shift_conv2d(x.q, qparams["shifts"], wpq,
                            _bias_acc(bias, acc_fb), method=method,
                            requant_shift=acc_fb - out_frac_bits, act=act,
                            max_shift=spec.kernel_size // 2,
-                           config=cfgs.get("main"))
+                           config=cfgs.get("main"), w_shifts=wps)
         return QTensor(y, out_frac_bits)
 
     if p == "add":
         w = qparams["w"]
+        wq, ws = _wq(w)
         x_pre, w_pre, acc_fb = _add_preshifts(x.frac_bits, w.frac_bits)
-        y = K.add_conv2d(x.q, w.q, _bias_acc(bias, acc_fb), method=method,
+        y = K.add_conv2d(x.q, wq, _bias_acc(bias, acc_fb), method=method,
                          requant_shift=acc_fb - out_frac_bits,
                          x_preshift=x_pre, w_preshift=w_pre, act=act,
-                         config=cfgs.get("main"))
+                         config=cfgs.get("main"), w_shifts=ws)
         return QTensor(y, out_frac_bits)
 
     raise ValueError(p)
@@ -205,13 +235,36 @@ def _qconv_apply_lax(qparams: dict, x: QTensor, spec: ConvSpec,
     raise ValueError(p)
 
 
-def quantize_conv_params(params: dict, spec: ConvSpec) -> dict:
-    """Per-tensor power-of-two PTQ of a float primitive layer."""
+def _w4_axis(key: str, v) -> int:
+    """W4 packing axis per parameter key: the axis the kernels unpack along
+    — always one the grid does NOT block (input channels for the
+    matmul-family weights — ``ndim - 2`` so 2D pointwise layouts work too —
+    tap rows for depthwise, so channels keep the 128-lane axis)."""
+    return 0 if key == "w_dw" else v.ndim - 2
+
+
+def quantize_conv_params(params: dict, spec: ConvSpec, *, bits: int = 8,
+                         group_size: int = 32) -> dict:
+    """Power-of-two PTQ of a float primitive layer.
+
+    ``bits=8`` (default): per-tensor int8 QTensors, as before. ``bits=4``:
+    weight tensors become nibble-packed :class:`QTensorW4` with per-group
+    scales (``group_size`` consecutive elements along the unpack axis);
+    biases stay int8 (they are added at int32 accumulator scale, packing
+    them buys nothing). ``qconv_apply`` routes W4 leaves to the packed
+    kernel paths; the raw-lax fallback expands them first.
+    """
     from .quantize import quantize
+    if bits not in (8, 4):
+        raise ValueError(f"quantize_conv_params: bits must be 8 or 4, "
+                         f"got {bits}")
     out = {}
     for k, v in params.items():
         if k == "shifts":
             out[k] = v
+        elif bits == 4 and k in ("w", "w_dw", "w_pw"):
+            out[k] = quantize_w4(v, axis=_w4_axis(k, v),
+                                 group_size=group_size)
         else:
             out[k] = quantize(v)
     return out

@@ -79,6 +79,144 @@ def requantize(acc: jax.Array, acc_frac_bits: int, out_frac_bits: int) -> jax.Ar
 
 
 # --------------------------------------------------------------------------
+# W4: packed sub-byte weights (two int4 codes per byte, per-group scales).
+#
+# Storage halves weight traffic (the paper's Fig. 3 reuse lever); kernels
+# nibble-unpack in-register and then run the unchanged int8 body, so the
+# packed path stays bit-exact against the unpacked-int8 oracle. Per-group
+# power-of-two scales are folded into per-element left shifts relative to a
+# single base ``frac_bits``: the expanded code ``q4 << shift`` is an
+# ordinary int8 weight at the base scale, and all downstream requant
+# arithmetic (Algorithm 1) is untouched.
+# --------------------------------------------------------------------------
+
+W4_MIN, W4_MAX = -8, 7
+W4_MAX_GROUP_SHIFT = 4         # |q4| <= 8, 8 << 4 = 128: still an int8 code
+
+
+def pack_w4(q: jax.Array, axis: int = 0) -> jax.Array:
+    """Pack int4-valued codes (each in [-8, 7]) two-per-byte along ``axis``.
+
+    Element ``2i`` lands in the low nibble of byte ``i``, element ``2i+1``
+    in the high nibble; an odd extent is zero-padded. Output is int8 with
+    ``shape[axis] = ceil(n / 2)``.
+    """
+    q = jnp.asarray(q)
+    axis = axis % q.ndim
+    n = q.shape[axis]
+    if n % 2:
+        pad = [(0, 0)] * q.ndim
+        pad[axis] = (0, 1)
+        q = jnp.pad(q, pad)
+    qi = q.astype(jnp.int32)
+    lo = jax.lax.slice_in_dim(qi, 0, None, stride=2, axis=axis)
+    hi = jax.lax.slice_in_dim(qi, 1, None, stride=2, axis=axis)
+    b = (lo & 0xF) | ((hi & 0xF) << 4)          # 0..255
+    return jnp.where(b >= 128, b - 256, b).astype(jnp.int8)
+
+
+def unpack_w4(packed: jax.Array, size: int, axis: int = 0) -> jax.Array:
+    """Inverse of :func:`pack_w4`: nibble-packed int8 -> int8 codes in
+    [-8, 7] with ``shape[axis] = size`` (the pad element, if any, dropped).
+    """
+    packed = jnp.asarray(packed)
+    axis = axis % packed.ndim
+    pi = packed.astype(jnp.int32)
+    lo = jnp.right_shift(jnp.left_shift(pi, 28), 28)    # sign-extend bits 0-3
+    hi = jnp.right_shift(jnp.left_shift(pi, 24), 28)    # sign-extend bits 4-7
+    out = jnp.stack([lo, hi], axis=axis + 1)
+    shape = list(packed.shape)
+    shape[axis] = shape[axis] * 2
+    out = out.reshape(shape)
+    return jax.lax.slice_in_dim(out, 0, size, axis=axis).astype(jnp.int8)
+
+
+def expand_w4(packed: jax.Array, shifts: jax.Array, size: int,
+              axis: int = 0) -> jax.Array:
+    """Unpack + apply the per-element group shifts: the unpacked-int8 oracle
+    weights (``q4 << shift`` at the base scale). Always fits int8 because
+    group shifts are clamped to :data:`W4_MAX_GROUP_SHIFT`."""
+    w4 = unpack_w4(packed, size, axis).astype(jnp.int32)
+    bshape = [1] * w4.ndim
+    bshape[axis % w4.ndim] = size
+    s = shifts.astype(jnp.int32).reshape(bshape)
+    return jnp.left_shift(w4, s).astype(jnp.int8)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QTensorW4:
+    """Nibble-packed int4 weights with per-group power-of-two scales.
+
+    ``q`` holds two codes per byte along ``axis`` (extent ``ceil(size/2)``);
+    ``shifts`` is the per-element left shift (one entry per unpacked element
+    along ``axis``, constant within a scale group) that brings each group's
+    codes to the shared base scale ``2^-frac_bits``. ``expand()`` is the
+    int8 weight tensor every W4 kernel must match bit-for-bit.
+
+    For lax.scan-stacked parameter trees the arrays carry an extra leading
+    layer axis; ``axis``/``size`` describe the per-layer slice the consumer
+    sees after scan slicing.
+    """
+
+    q: jax.Array                       # int8, nibble-packed along `axis`
+    shifts: jax.Array                  # int8, shape (..., size) along `axis`
+    frac_bits: int = dataclasses.field(metadata=dict(static=True))
+    size: int = dataclasses.field(metadata=dict(static=True))
+    axis: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def scale(self) -> float:
+        return 2.0 ** (-self.frac_bits)
+
+    def expand(self) -> jax.Array:
+        """Unpacked int8 codes at the base scale (the W8 oracle weights)."""
+        return expand_w4(self.q, self.shifts, self.size, self.axis)
+
+
+def quantize_w4(w: jax.Array, *, axis: int = 0, group_size: int = 32,
+                frac_bits: Optional[int] = None) -> QTensorW4:
+    """Quantize float weights to packed int4 with per-group pow2 scales.
+
+    Groups are ``group_size`` consecutive elements along ``axis`` (scales
+    shared across every other axis). Each group g gets its natural int4
+    scale ``fb_g = 3 - ceil(log2 max|w_g|)``, clamped so the group shift
+    ``frac_bits - fb_g`` stays in [0, 4] (expanded codes must fit int8).
+    The base ``frac_bits`` defaults to the finest usable common scale.
+    """
+    w = jnp.asarray(w)
+    axis = axis % w.ndim
+    n = w.shape[axis]
+    if group_size <= 0:
+        raise ValueError(f"quantize_w4: group_size must be > 0, "
+                         f"got {group_size}")
+    n_groups = -(-n // group_size)
+
+    wa = jnp.moveaxis(w.astype(jnp.float32), axis, 0)
+    natural = []
+    for g in range(n_groups):
+        m = float(jnp.max(jnp.abs(wa[g * group_size:(g + 1) * group_size])))
+        # int4: 3 usable magnitude bits; zero groups get a large sentinel
+        # that the clamp below pins to the base scale (codes are all zero).
+        natural.append(3 - math.ceil(math.log2(m)) if m > 0.0 else 127)
+    if frac_bits is None:
+        lo, hi = min(natural), max(natural)
+        frac_bits = min(lo + W4_MAX_GROUP_SHIFT, hi)
+
+    q_groups, shift_groups = [], []
+    for g, nat in enumerate(natural):
+        fb_g = min(max(nat, frac_bits - W4_MAX_GROUP_SHIFT), frac_bits)
+        q4 = jnp.floor(wa[g * group_size:(g + 1) * group_size] * (2.0 ** fb_g))
+        q_groups.append(jnp.clip(q4, W4_MIN, W4_MAX).astype(jnp.int8))
+        shift_groups.append(frac_bits - fb_g)
+    q4 = jnp.moveaxis(jnp.concatenate(q_groups, axis=0), 0, axis)
+    shifts = jnp.asarray(
+        [shift_groups[i // group_size] for i in range(n)], jnp.int8)
+    return QTensorW4(q=pack_w4(q4, axis), shifts=shifts,
+                     frac_bits=frac_bits, size=n, axis=axis)
+
+
+# --------------------------------------------------------------------------
 # Algorithm 1 (left): multiplicative inner loop  out = (i*w) >> shift
 # --------------------------------------------------------------------------
 

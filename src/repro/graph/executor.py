@@ -41,13 +41,22 @@ import jax.numpy as jnp
 
 from repro.core.energy import MCUModel
 from repro.core.qconv import _kernel_layer_ok, qconv_apply
-from repro.core.quantize import QTensor, quantize, requantize
+from repro.core.quantize import QTensor, QTensorW4, quantize, requantize
 from repro.kernels.common import apply_act
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
 from .ir import Graph
 from .lower import Plan, PlanNode
+
+
+def _node_dtype(node: PlanNode) -> str:
+    """Tune-space dtype key for one qconv node: "w4a8" when its weights are
+    nibble-packed (the W4-aware cost model prices halved weight traffic),
+    else "int8"."""
+    if any(isinstance(v, QTensorW4) for v in (node.qparams or {}).values()):
+        return "w4a8"
+    return "int8"
 
 
 def _qbn_apply(qp: dict, x: QTensor, out_fb: int, act: Optional[str]) -> QTensor:
@@ -101,25 +110,26 @@ class CompiledPlan:
         n, h, w, c = xq.q.shape
         spec = node.spec
         p = spec.primitive
+        dt = _node_dtype(node)
         if p in ("standard", "grouped"):
             g = spec.groups if p == "grouped" else 1
             cfg = {"main": tune.get_config(
                 tune.sig_conv2d(n, h, w, c, spec.out_channels,
-                                spec.kernel_size, g), "int8")}
+                                spec.kernel_size, g), dt)}
         elif p == "dws":
             cfg = {"dw": tune.get_config(
                        tune.sig_depthwise2d(n, h, w, c, spec.kernel_size),
-                       "int8"),
+                       dt),
                    "pw": tune.get_config(
                        tune.sig_conv2d(n, h, w, c, spec.out_channels, 1, 1),
-                       "int8")}
+                       dt)}
         elif p == "shift":
             cfg = {"main": tune.get_config(
-                tune.sig_shift_conv2d(n, h, w, c, spec.out_channels), "int8")}
+                tune.sig_shift_conv2d(n, h, w, c, spec.out_channels), dt)}
         else:                            # add
             cfg = {"main": tune.get_config(
                 tune.sig_add_conv2d(n, h, w, c, spec.out_channels,
-                                    spec.kernel_size), "int8")}
+                                    spec.kernel_size), dt)}
         self.node_configs[node.name] = cfg
         return cfg
 

@@ -154,9 +154,16 @@ def _quantize_bn_affine(bn: dict, in_fb: int, eps: float = 1e-5) -> dict:
     }
 
 
-def lower(graph: Graph, params: dict, calib_x: jax.Array) -> Plan:
+def lower(graph: Graph, params: dict, calib_x: jax.Array, *,
+          weight_bits: int = 8, group_size: int = 32) -> Plan:
     """Lower a float graph to an integer-only Plan (single calibration
-    sweep; see module docstring for the pass structure)."""
+    sweep; see module docstring for the pass structure).
+
+    ``weight_bits=4`` lowers every conv/dws/shift/add weight tensor to
+    nibble-packed W4 with per-group scales (``group_size`` elements per
+    scale group along the unpack axis) — the executor then dispatches the
+    packed kernel paths (W4A8); activations and the whole scale-chaining
+    arithmetic are unchanged (int8 end to end)."""
     ann = annotate(graph, params, calib_x)
     acts, bn_calib, node_params = ann["acts"], ann["bn"], ann["params"]
     in_fb = frac_bits_for(calib_x)
@@ -185,7 +192,8 @@ def lower(graph: Graph, params: dict, calib_x: jax.Array) -> Plan:
             h_in, w_in = acts[src].shape[1], acts[src].shape[2]
             if bnode is not None and spec.primitive in FOLDABLE:
                 qp = quantize_conv_params(
-                    fold(conv_p, bn_calib[bnode.name], spec), spec)
+                    fold(conv_p, bn_calib[bnode.name], spec), spec,
+                    bits=weight_bits, group_size=group_size)
                 plan_nodes.append(PlanNode(
                     n.name, "qconv", spec=spec, qparams=qp, in_fb=fb[src],
                     out_fb=out_fb, act="relu" if rnode is not None else None,
@@ -194,7 +202,9 @@ def lower(graph: Graph, params: dict, calib_x: jax.Array) -> Plan:
                 fb[tail.name] = out_fb
             elif bnode is not None:              # add-conv: integer BN node
                 conv_fb = frac_bits_for(acts[n.name])
-                qp = quantize_conv_params(conv_p, spec)
+                qp = quantize_conv_params(conv_p, spec,
+                                          bits=weight_bits,
+                                          group_size=group_size)
                 plan_nodes.append(PlanNode(
                     n.name, "qconv", spec=spec, qparams=qp, in_fb=fb[src],
                     out_fb=conv_fb, act=None, attrs={"in_hw": (h_in, w_in)}))
@@ -207,7 +217,9 @@ def lower(graph: Graph, params: dict, calib_x: jax.Array) -> Plan:
                 consumed.update(c.name for c in (bnode, rnode) if c)
                 fb[tail.name] = out_fb
             else:                                # bare conv (no BN in graph)
-                qp = quantize_conv_params(conv_p, spec)
+                qp = quantize_conv_params(conv_p, spec,
+                                          bits=weight_bits,
+                                          group_size=group_size)
                 plan_nodes.append(PlanNode(
                     n.name, "qconv", spec=spec, qparams=qp, in_fb=fb[src],
                     out_fb=out_fb, act=None, attrs={"in_hw": (h_in, w_in)}))

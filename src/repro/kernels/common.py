@@ -158,6 +158,37 @@ def halo_tiles(x: jax.Array, n_th: int, n_tw: int, step_h: int, step_w: int,
                       for j in range(n_tw)], axis=2)
 
 
+def unpack_w4_block(wp: jax.Array, size: int, axis: int = 0) -> jax.Array:
+    """In-register nibble unpack for a W4-packed weight block: int8 bytes
+    holding two two's-complement int4 codes -> int32 codes, ``shape[axis]``
+    going ``ceil(size/2) * 2 -> size``. Element ``2i`` is the low nibble of
+    byte ``i`` (``core.quantize.pack_w4``'s layout). Runs inside kernel
+    bodies on VPU registers, so the packed block is what crosses HBM->VMEM
+    (the halved-weight-traffic contract); the arithmetic mirrors
+    ``core.quantize.unpack_w4`` bit-for-bit. Zero bytes unpack to zero
+    codes, so Pallas' zero-padded ragged blocks stay neutral."""
+    axis = axis % wp.ndim
+    pi = wp.astype(jnp.int32)
+    lo = jnp.right_shift(jnp.left_shift(pi, 28), 28)    # sign-extend bits 0-3
+    hi = jnp.right_shift(jnp.left_shift(pi, 24), 28)    # sign-extend bits 4-7
+    out = jnp.stack([lo, hi], axis=axis + 1)
+    shape = list(wp.shape)
+    shape[axis] = shape[axis] * 2
+    out = out.reshape(shape)
+    if out.shape[axis] == size:
+        return out
+    return jax.lax.slice_in_dim(out, 0, size, axis=axis)
+
+
+def shift_w4_block(w4: jax.Array, ws: jax.Array, axis: int = 0) -> jax.Array:
+    """Apply a W4 per-element group-scale shift vector along ``axis`` of an
+    unpacked int32 code block: ``q4 << shift`` at the shared base scale —
+    the in-kernel half of ``core.quantize.expand_w4``."""
+    bshape = [1] * w4.ndim
+    bshape[axis % w4.ndim] = ws.shape[-1]
+    return jnp.left_shift(w4, ws.astype(jnp.int32).reshape(bshape))
+
+
 def effective_block(dim: int, block: int) -> int:
     """The block size a divisor-gridded kernel actually runs: the largest
     divisor of ``dim`` that is <= ``block``. Single source of truth shared by

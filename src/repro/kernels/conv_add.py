@@ -24,12 +24,16 @@ from jax.experimental import pallas as pl
 
 from .common import (acc_dtype, apply_act, apply_requant,
                      batch_spatial_schedule, effective_block, halo_tiles,
-                     resolve_interpret, resolve_tile_config)
+                     resolve_interpret, resolve_tile_config, shift_w4_block,
+                     unpack_w4_block)
 
 
 def _kernel(x_ref, w_ref, o_ref, *, hk, bh, bw, out_dtype, requant_shift,
-            x_preshift, w_preshift, act=None, bias_ref=None):
+            x_preshift, w_preshift, act=None, bias_ref=None, ws_ref=None):
     # x_ref: (BN, 1, 1, BH+HK-1, BW+HK-1, Cx); w_ref: (HK, HK, Cx, BCO)
+    # (W4: (HK, HK, ceil(Cx/2), BCO) nibble-packed + ws_ref (Cx,) shifts.
+    # The unpack slices the packed tail element off before |x - w| — a
+    # zero-padded weight channel is NOT neutral for L1 distance.)
     adt = acc_dtype(x_ref.dtype)
     cx = x_ref.shape[-1]
     bco = w_ref.shape[-1]
@@ -40,7 +44,12 @@ def _kernel(x_ref, w_ref, o_ref, *, hk, bh, bw, out_dtype, requant_shift,
             patch = x_ref[:, 0, 0, i:i + bh, j:j + bw, :].astype(adt)
             if x_preshift:                  # Algorithm 1 (right): align scales
                 patch = jnp.left_shift(patch, x_preshift)
-            wv = w_ref[i, j].astype(adt)    # (Cx, BCO)
+            if ws_ref is None:
+                wv = w_ref[i, j].astype(adt)    # (Cx, BCO)
+            else:                           # group shifts first (to the base
+                wv = shift_w4_block(        # scale), then the common align
+                    unpack_w4_block(w_ref[i, j], cx, 0),
+                    ws_ref[...], 0).astype(adt)
             if w_preshift:
                 wv = jnp.left_shift(wv, w_preshift)
             a = patch.reshape(bn * bh * bw, cx)
@@ -59,7 +68,8 @@ def add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
                requant_shift: int | None = None, x_preshift: int = 0,
                w_preshift: int = 0, act: str | None = None, out_dtype=None,
                interpret: bool | None = None,
-               config: dict | None = None) -> jax.Array:
+               config: dict | None = None,
+               w_shifts: jax.Array | None = None) -> jax.Array:
     """SAME stride-1 AdderNet conv (Eq. 3). x: (N,H,W,Cx); w: (HK,HK,Cx,Cy).
 
     ``bias`` (optional, (Cy,)) is added at accumulator scale before the
@@ -67,12 +77,18 @@ def add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
     accumulator scale after it. ``config`` (a repro.tune schedule dict)
     overrides the block parameters (``block_co``, ``block_n``,
     ``block_h``/``block_w``). ``interpret=None`` auto-detects the backend.
+
+    W4A8: with ``w_shifts`` (per-input-channel group shifts), ``w`` is
+    nibble-packed along the Cx axis (``(HK, HK, ceil(Cx/2), Cy)``); the
+    kernel unpacks in-register, applies the group shifts, then the usual
+    ``w_preshift`` scale alignment. Quantized path only.
     """
     if config:
         block_co = int(config.get("block_co", block_co))
     block_n, block_h, block_w = resolve_tile_config(config, block_n,
                                                     block_h, block_w)
-    return _add_conv2d(x, w, bias, block_co=block_co, block_n=block_n,
+    return _add_conv2d(x, w, bias, w_shifts, block_co=block_co,
+                       block_n=block_n,
                        block_h=block_h, block_w=block_w,
                        requant_shift=requant_shift,
                        x_preshift=x_preshift, w_preshift=w_preshift, act=act,
@@ -84,7 +100,8 @@ def add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
                                              "block_w", "requant_shift",
                                              "x_preshift", "w_preshift",
                                              "act", "out_dtype", "interpret"))
-def _add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
+def _add_conv2d(x: jax.Array, w: jax.Array, bias=None, w_shifts=None, *,
+                block_co: int = 8,
                 block_n: int = 1, block_h: int | None = None,
                 block_w: int | None = None,
                 requant_shift: int | None = None, x_preshift: int = 0,
@@ -92,6 +109,13 @@ def _add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
                 interpret: bool = True) -> jax.Array:
     n, h, wd, cx = x.shape
     hk, _, _, cy = w.shape
+    w4 = w_shifts is not None
+    if w4:
+        if requant_shift is None:
+            raise ValueError("add_conv2d: W4 weights need the quantized "
+                             "path (requant_shift)")
+        assert w.shape[2] == (cx + 1) // 2, \
+            f"packed Cx extent {w.shape[2]} != ceil({cx}/2)"
     out_dtype = out_dtype or (jnp.int8 if requant_shift is not None else x.dtype)
     ph, pw = hk // 2, (hk - 1) // 2
     xp = jnp.pad(x, ((0, 0), (ph, pw), (ph, pw), (0, 0)))
@@ -114,24 +138,27 @@ def _add_conv2d(x: jax.Array, w: jax.Array, bias=None, *, block_co: int = 8,
     def o_index(b, s, cb):
         return (b, s // n_tw, s % n_tw, cb)
 
-    kern = functools.partial(_kernel, hk=hk, bh=bh, bw=bw,
-                             out_dtype=out_dtype, requant_shift=requant_shift,
-                             x_preshift=x_preshift, w_preshift=w_preshift,
-                             act=act)
     in_specs = [
         pl.BlockSpec((bn, 1, 1, bh + halo, bw + halo, cx), x_index),
-        pl.BlockSpec((hk, hk, cx, bco), w_index),
+        pl.BlockSpec((hk, hk, (cx + 1) // 2 if w4 else cx, bco), w_index),
     ]
     args = [tiles, w]
+    if w4:
+        in_specs.append(pl.BlockSpec((cx,), lambda b, s, cb: (0,)))
+        args.append(w_shifts)
     if bias is not None:
-        def kern_bias(x_ref, w_ref, b_ref, o_ref):
-            _kernel(x_ref, w_ref, o_ref, hk=hk, bh=bh, bw=bw,
-                    out_dtype=out_dtype, requant_shift=requant_shift,
-                    x_preshift=x_preshift, w_preshift=w_preshift,
-                    act=act, bias_ref=b_ref)
-        kern = kern_bias
         in_specs.append(pl.BlockSpec((bco,), co_index))
         args.append(bias)
+
+    def kern(*refs):
+        it = iter(refs)
+        x_ref, w_ref = next(it), next(it)
+        ws_ref = next(it) if w4 else None
+        b_ref = next(it) if bias is not None else None
+        _kernel(x_ref, w_ref, next(it), hk=hk, bh=bh, bw=bw,
+                out_dtype=out_dtype, requant_shift=requant_shift,
+                x_preshift=x_preshift, w_preshift=w_preshift,
+                act=act, bias_ref=b_ref, ws_ref=ws_ref)
     out = pl.pallas_call(
         kern,
         grid=(n // bn, n_th * n_tw, n_co),

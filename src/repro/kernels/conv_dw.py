@@ -22,20 +22,27 @@ from jax.experimental import pallas as pl
 
 from .common import (acc_dtype, apply_act, apply_requant,
                      batch_spatial_schedule, effective_block, halo_tiles,
-                     resolve_interpret, resolve_tile_config)
+                     resolve_interpret, resolve_tile_config, shift_w4_block,
+                     unpack_w4_block)
 
 
 def _kernel(x_ref, w_ref, o_ref, *, hk, bh, bw, out_dtype, requant_shift,
-            act=None):
+            act=None, ws_ref=None):
     # x_ref: (BN, 1, 1, BH+HK-1, BW+HK-1, BC); w_ref: (HK, HK, BC)
+    # (W4: (ceil(HK/2), HK, BC) nibble-packed along the tap-row axis —
+    # channels stay the blocked 128-lane axis — + ws_ref (HK,) shifts)
     adt = acc_dtype(x_ref.dtype)
     bc = w_ref.shape[-1]
     bn = x_ref.shape[0]
+    if ws_ref is None:
+        wv = w_ref[...]
+    else:
+        wv = shift_w4_block(unpack_w4_block(w_ref[...], hk, 0), ws_ref[...], 0)
     acc = jnp.zeros((bn, bh, bw, bc), adt)
     for i in range(hk):
         for j in range(hk):
             acc = acc + (x_ref[:, 0, 0, i:i + bh, j:j + bw, :].astype(adt)
-                         * w_ref[i, j].astype(adt)[None, None, None, :])
+                         * wv[i, j].astype(adt)[None, None, None, :])
     acc = apply_act(acc, act)
     acc = apply_requant(acc, requant_shift)
     o_ref[...] = acc.astype(out_dtype)
@@ -47,19 +54,25 @@ def depthwise2d(x: jax.Array, w_dw: jax.Array, *, block_c: int = 128,
                 requant_shift: int | None = None, act: str | None = None,
                 out_dtype=None,
                 interpret: bool | None = None,
-                config: dict | None = None) -> jax.Array:
+                config: dict | None = None,
+                w_shifts: jax.Array | None = None) -> jax.Array:
     """SAME stride-1 depthwise conv. x: (N,H,W,C); w_dw: (HK,HK,C).
 
     ``act="relu"`` fuses the activation at accumulator scale before the
     requantization epilogue. ``config`` (a repro.tune schedule dict)
     overrides the block parameters (``block_c``, ``block_n``,
     ``block_h``/``block_w``). ``interpret=None`` auto-detects the backend.
+
+    W4A8: with ``w_shifts`` (per-tap-row group shifts), ``w_dw`` is
+    nibble-packed along the tap-row axis — ``(ceil(HK/2), HK, C)`` — so the
+    channel axis keeps arbitrary ``block_c`` blocking while the weight block
+    crossing HBM->VMEM is halved. Quantized path only.
     """
     if config:
         block_c = int(config.get("block_c", block_c))
     block_n, block_h, block_w = resolve_tile_config(config, block_n,
                                                     block_h, block_w)
-    return _depthwise2d(x, w_dw, block_c=block_c, block_n=block_n,
+    return _depthwise2d(x, w_dw, w_shifts, block_c=block_c, block_n=block_n,
                         block_h=block_h, block_w=block_w,
                         requant_shift=requant_shift,
                         act=act, out_dtype=out_dtype,
@@ -69,16 +82,24 @@ def depthwise2d(x: jax.Array, w_dw: jax.Array, *, block_c: int = 128,
 @functools.partial(jax.jit, static_argnames=("block_c", "block_n", "block_h",
                                              "block_w", "requant_shift",
                                              "act", "out_dtype", "interpret"))
-def _depthwise2d(x: jax.Array, w_dw: jax.Array, *, block_c: int = 128,
+def _depthwise2d(x: jax.Array, w_dw: jax.Array, w_shifts=None, *,
+                 block_c: int = 128,
                  block_n: int = 1, block_h: int | None = None,
                  block_w: int | None = None,
                  requant_shift: int | None = None, act: str | None = None,
                  out_dtype=None,
                  interpret: bool = True) -> jax.Array:
     n, h, wd, c = x.shape
-    hk = w_dw.shape[0]
+    w4 = w_shifts is not None
     if w_dw.ndim == 4:                       # accept (HK,HK,C,1) layout
         w_dw = w_dw[..., 0]
+    hk = w_dw.shape[1] if w4 else w_dw.shape[0]
+    if w4:
+        if requant_shift is None:
+            raise ValueError("depthwise2d: W4 weights need the quantized "
+                             "path (requant_shift)")
+        assert w_dw.shape[0] == (hk + 1) // 2, \
+            f"packed HK extent {w_dw.shape[0]} != ceil({hk}/2)"
     out_dtype = out_dtype or (jnp.int8 if requant_shift is not None else x.dtype)
     ph, pw = hk // 2, (hk - 1) // 2
     xp = jnp.pad(x, ((0, 0), (ph, pw), (ph, pw), (0, 0)))
@@ -97,18 +118,29 @@ def _depthwise2d(x: jax.Array, w_dw: jax.Array, *, block_c: int = 128,
     def o_index(b, s, cb):
         return (b, s // n_tw, s % n_tw, cb)
 
-    kern = functools.partial(_kernel, hk=hk, bh=bh, bw=bw,
-                             out_dtype=out_dtype, requant_shift=requant_shift,
-                             act=act)
+    in_specs = [
+        pl.BlockSpec((bn, 1, 1, bh + halo, bw + halo, bc), x_index),
+        pl.BlockSpec(((hk + 1) // 2 if w4 else hk, hk, bc), w_index),
+    ]
+    args = [tiles, w_dw]
+    if w4:
+        in_specs.append(pl.BlockSpec((hk,), lambda b, s, cb: (0,)))
+        args.append(w_shifts)
+
+    def kern(*refs):
+        it = iter(refs)
+        x_ref, w_ref = next(it), next(it)
+        ws_ref = next(it) if w4 else None
+        _kernel(x_ref, w_ref, next(it), hk=hk, bh=bh, bw=bw,
+                out_dtype=out_dtype, requant_shift=requant_shift, act=act,
+                ws_ref=ws_ref)
+
     out = pl.pallas_call(
         kern,
         grid=(n // bn, n_th * n_tw, c // bc),
-        in_specs=[
-            pl.BlockSpec((bn, 1, 1, bh + halo, bw + halo, bc), x_index),
-            pl.BlockSpec((hk, hk, bc), w_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bn, bh, bw, bc), o_index),
         out_shape=jax.ShapeDtypeStruct((n, n_th * bh, n_tw * bw, c), out_dtype),
         interpret=interpret,
-    )(tiles, w_dw)
+    )(*args)
     return out[:, :h, :wd, :]

@@ -31,13 +31,15 @@ from jax.experimental import pallas as pl
 
 from .common import (acc_dtype, apply_act, apply_requant,
                      batch_spatial_schedule, effective_block, halo_tiles,
-                     resolve_interpret, resolve_tile_config)
+                     resolve_interpret, resolve_tile_config, shift_w4_block,
+                     unpack_w4_block)
 
 
 def _kernel(x_ref, w_ref, o_ref, *, hk: int, bh: int, bw: int,
             out_dtype, requant_shift: int | None, act: str | None = None,
-            bias_ref=None):
+            bias_ref=None, ws_ref=None):
     # x_ref: (BN, 1, 1, BH+HK-1, BW+HK-1, Cx); w_ref: (HK, HK, Cx, BCO)
+    # (W4: (HK, HK, ceil(Cx/2), BCO) nibble-packed + ws_ref (Cx,) shifts)
     cx = x_ref.shape[-1]
     bco = w_ref.shape[-1]
     bn = x_ref.shape[0]
@@ -47,7 +49,11 @@ def _kernel(x_ref, w_ref, o_ref, *, hk: int, bh: int, bw: int,
         for j in range(hk):
             patch = x_ref[:, 0, 0, i:i + bh, j:j + bw, :]
             a = patch.reshape(bn * bh * bw, cx)
-            b = w_ref[i, j]
+            if ws_ref is None:
+                b = w_ref[i, j]
+            else:                            # unpack W4 in-register, then the
+                b = shift_w4_block(          # unchanged int8 MXU body
+                    unpack_w4_block(w_ref[i, j], cx, 0), ws_ref[...], 0)
             acc = acc + jnp.dot(a.astype(adt), b.astype(adt),
                                 preferred_element_type=adt)
     if bias_ref is not None:
@@ -65,7 +71,8 @@ def conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
                   requant_shift: int | None = None,
                   act: str | None = None, out_dtype=None,
                   interpret: bool | None = None,
-                  config: dict | None = None) -> jax.Array:
+                  config: dict | None = None,
+                  w_shifts: jax.Array | None = None) -> jax.Array:
     """SAME-padded stride-1 conv. x: (N,H,W,Cx); w: (HK,HK,Cx/g,Cy).
 
     int8 x int8 -> int8 when ``requant_shift`` is given (int32 accumulate);
@@ -75,12 +82,18 @@ def conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
     ``block_co`` (filters per step), ``block_n`` (images per step — weight
     reuse), ``block_h``/``block_w`` (halo-padded spatial tile; ``None`` =
     whole map). ``interpret=None`` auto-detects the backend.
+
+    W4A8: passing ``w_shifts`` (the per-input-channel group-scale shifts of
+    a ``QTensorW4``) marks ``w`` as nibble-packed along the Cx/g axis
+    (extent ``ceil(Cx/g / 2)``); the kernel unpacks in-register so only the
+    half-width weight block crosses HBM->VMEM. Quantized path only.
     """
     if config:
         block_co = int(config.get("block_co", block_co))
     block_n, block_h, block_w = resolve_tile_config(config, block_n,
                                                     block_h, block_w)
-    return _conv2d_im2col(x, w, bias, groups=groups, block_co=block_co,
+    return _conv2d_im2col(x, w, bias, w_shifts, groups=groups,
+                          block_co=block_co,
                           block_n=block_n, block_h=block_h, block_w=block_w,
                           requant_shift=requant_shift, act=act,
                           out_dtype=out_dtype,
@@ -91,15 +104,24 @@ def conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
                                              "block_h", "block_w",
                                              "requant_shift",
                                              "act", "out_dtype", "interpret"))
-def _conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
+def _conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, w_shifts=None, *,
+                   groups: int = 1,
                    block_co: int = 128, block_n: int = 1,
                    block_h: int | None = None, block_w: int | None = None,
                    requant_shift: int | None = None,
                    act: str | None = None,
                    out_dtype=None, interpret: bool = True) -> jax.Array:
     n, h, wd, cx = x.shape
-    hk, _, cxg, cy = w.shape
+    hk, _, _, cy = w.shape
+    w4 = w_shifts is not None
+    cxg = cx // groups if w4 else w.shape[2]
     assert cx == cxg * groups and cy % groups == 0
+    if w4:
+        if requant_shift is None:
+            raise ValueError("conv2d_im2col: W4 weights need the quantized "
+                             "path (requant_shift)")
+        assert w.shape[2] == (cxg + 1) // 2, \
+            f"packed Cx/g extent {w.shape[2]} != ceil({cxg}/2)"
     out_dtype = out_dtype or (jnp.int8 if requant_shift is not None else x.dtype)
     ph, pw = hk // 2, (hk - 1) // 2
     xp = jnp.pad(x, ((0, 0), (ph, pw), (ph, pw), (0, 0)))
@@ -129,22 +151,26 @@ def _conv2d_im2col(x: jax.Array, w: jax.Array, bias=None, *, groups: int = 1,
     def o_index(b, s, g, c):
         return (b, s // n_tw, s % n_tw, g * n_co + c)
 
-    kern = functools.partial(_kernel, hk=hk, bh=bh, bw=bw,
-                             out_dtype=out_dtype, requant_shift=requant_shift,
-                             act=act)
     in_specs = [
         pl.BlockSpec((bn, 1, 1, bh + halo, bw + halo, cxg), x_index),
-        pl.BlockSpec((hk, hk, cxg, bco), w_index),
+        pl.BlockSpec((hk, hk, (cxg + 1) // 2 if w4 else cxg, bco), w_index),
     ]
     args = [tiles, w]
+    if w4:                  # shifts ride whole (the packed axis is unblocked)
+        in_specs.append(pl.BlockSpec((cxg,), lambda b, s, g, c: (0,)))
+        args.append(w_shifts)
     if bias is not None:
-        def kern_bias(x_ref, w_ref, b_ref, o_ref):
-            _kernel(x_ref, w_ref, o_ref, hk=hk, bh=bh, bw=bw,
-                    out_dtype=out_dtype, requant_shift=requant_shift,
-                    act=act, bias_ref=b_ref)
-        kern = kern_bias
         in_specs.append(pl.BlockSpec((bco,), co_index))
         args.append(bias)
+
+    def kern(*refs):
+        it = iter(refs)
+        x_ref, w_ref = next(it), next(it)
+        ws_ref = next(it) if w4 else None
+        b_ref = next(it) if bias is not None else None
+        _kernel(x_ref, w_ref, next(it), hk=hk, bh=bh, bw=bw,
+                out_dtype=out_dtype, requant_shift=requant_shift,
+                act=act, bias_ref=b_ref, ws_ref=ws_ref)
 
     out = pl.pallas_call(
         kern,

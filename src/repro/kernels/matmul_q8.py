@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import acc_dtype, apply_act, apply_requant, cdiv, resolve_interpret
+from .common import (acc_dtype, apply_act, apply_requant, cdiv,
+                     resolve_interpret, shift_w4_block, unpack_w4_block)
 
 
 def _make_compiler_params(n_parallel: int):
@@ -33,13 +34,21 @@ def _make_compiler_params(n_parallel: int):
 
 
 def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk, out_dtype, requant_shift,
-            act=None):
+            act=None, ws_ref=None):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     adt = acc_ref.dtype
-    acc_ref[...] += jnp.dot(a_ref[...].astype(adt), b_ref[...].astype(adt),
+    if ws_ref is None:
+        bv = b_ref[...].astype(adt)
+    else:
+        # W4: b block is (BK/2, BN) nibble-packed along K; padded tail bytes
+        # unpack to zero codes, matching a's zero-padded ragged block
+        bv = shift_w4_block(
+            unpack_w4_block(b_ref[...], 2 * b_ref.shape[0], 0),
+            ws_ref[...], 0).astype(adt)
+    acc_ref[...] += jnp.dot(a_ref[...].astype(adt), bv,
                             preferred_element_type=adt)
 
     @pl.when(pl.program_id(2) == nk - 1)
@@ -52,9 +61,16 @@ def matmul(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
            bk: int = 512, requant_shift: int | None = None,
            act: str | None = None, out_dtype=None,
            interpret: bool | None = None,
-           config: dict | None = None) -> jax.Array:
+           config: dict | None = None,
+           w_shifts: jax.Array | None = None) -> jax.Array:
     """a: (M, K) or (N_batch, M, K) @ b: (K, N). int8 inputs +
     requant_shift -> int8 output.
+
+    W4A8: with ``w_shifts`` (per-K group-scale shifts), ``b`` is
+    nibble-packed along K (``(ceil(K/2), N)``); the K block size is forced
+    even so packed blocks never straddle a byte, and the kernel unpacks
+    in-register — only the half-width weight block crosses HBM->VMEM.
+    Quantized path only.
 
     A 3-D ``a`` is the batched serving path: the leading batch dim is
     folded into M, so one kernel launch covers the whole microbatch and the
@@ -74,40 +90,64 @@ def matmul(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
         bk = int(config.get("bk", bk))
     if a.ndim == 3:
         nb, m, k = a.shape
-        out = _matmul(a.reshape(nb * m, k), b, bm=bm, bn=bn, bk=bk,
+        out = _matmul(a.reshape(nb * m, k), b, w_shifts, bm=bm, bn=bn, bk=bk,
                       requant_shift=requant_shift, act=act,
                       out_dtype=out_dtype,
                       interpret=resolve_interpret(interpret))
         return out.reshape(nb, m, b.shape[-1])
-    return _matmul(a, b, bm=bm, bn=bn, bk=bk, requant_shift=requant_shift,
+    return _matmul(a, b, w_shifts, bm=bm, bn=bn, bk=bk,
+                   requant_shift=requant_shift,
                    act=act, out_dtype=out_dtype,
                    interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "requant_shift",
                                              "act", "out_dtype", "interpret"))
-def _matmul(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
+def _matmul(a: jax.Array, b: jax.Array, w_shifts=None, *, bm: int = 256,
+            bn: int = 256,
             bk: int = 512, requant_shift: int | None = None,
             act: str | None = None, out_dtype=None,
             interpret: bool = True) -> jax.Array:
     m, k = a.shape
+    w4 = w_shifts is not None
     k2, n = b.shape
-    assert k == k2
+    if w4:
+        if requant_shift is None:
+            raise ValueError("matmul: W4 weights need the quantized path "
+                             "(requant_shift)")
+        assert k2 == (k + 1) // 2, f"packed K extent {k2} != ceil({k}/2)"
+    else:
+        assert k == k2
     out_dtype = out_dtype or (jnp.int8 if requant_shift is not None else a.dtype)
     adt = acc_dtype(a.dtype)
     bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    if w4 and bk_ % 2:          # packed K blocks must not straddle a byte
+        bk_ += 1
     grid = (cdiv(m, bm_), cdiv(n, bn_), cdiv(k, bk_))
-    kern = functools.partial(_kernel, nk=grid[2], out_dtype=out_dtype,
-                             requant_shift=requant_shift, act=act)
+    in_specs = [
+        pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk_ // 2 if w4 else bk_, bn_), lambda i, j, kk: (kk, j)),
+    ]
+    args = [a, b]
+    if w4:
+        in_specs.append(pl.BlockSpec((bk_,), lambda i, j, kk: (kk,)))
+        args.append(w_shifts)
+
+    def kern(*refs):
+        it = iter(refs)
+        a_ref, b_ref = next(it), next(it)
+        ws_ref = next(it) if w4 else None
+        o_ref = next(it)
+        _kernel(a_ref, b_ref, o_ref, next(it), nk=grid[2],
+                out_dtype=out_dtype, requant_shift=requant_shift, act=act,
+                ws_ref=ws_ref)
+
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), adt)],
         interpret=interpret,
-    )(a, b)
+    )(*args)

@@ -72,13 +72,28 @@ def _tuned(sig_fn, *dims, dtype):
     return tune.get_config(sig_fn(*dims), str(dtype))
 
 
+def _w4_dtype(x, w_shifts):
+    """Tune-space dtype key: W4-packed weights get their own signature
+    dtype ('w4a8') so v2-era int8 cache entries are never misapplied to the
+    halved-weight-traffic search space (see tune.cache.SCHEMA_VERSION)."""
+    if w_shifts is None:
+        return x.dtype
+    if x.dtype != jnp.int8:
+        raise ValueError("W4 weights require int8 activations (W4A8)")
+    return "w4a8"
+
+
 def conv2d(x, w, bias=None, *, groups: int = 1, method: str = "pallas",
            requant_shift: Optional[int] = None, act: Optional[str] = None,
-           config: Optional[dict] = None):
+           config: Optional[dict] = None,
+           w_shifts: Optional[jax.Array] = None):
     _check_method(method)
     _count_dispatch("conv2d", method)
     if method == "xla":
         _check_no_config(method, config)
+        if w_shifts is not None:
+            return ref.conv2d_w4_ref(x, w, w_shifts, bias, groups=groups,
+                                     requant_shift=requant_shift, act=act)
         if requant_shift is not None:
             return ref.conv2d_q8_ref(x, w, bias, groups=groups,
                                      requant_shift=requant_shift, act=act)
@@ -87,18 +102,23 @@ def conv2d(x, w, bias=None, *, groups: int = 1, method: str = "pallas",
         from repro.tune import sig_conv2d
         n, h, wd, cx = x.shape
         config = _tuned(sig_conv2d, n, h, wd, cx, w.shape[-1], w.shape[0],
-                        groups, dtype=x.dtype)
+                        groups, dtype=_w4_dtype(x, w_shifts))
     return _conv_pallas(x, w, bias, groups=groups, requant_shift=requant_shift,
-                        act=act, interpret=use_interpret(), config=config)
+                        act=act, interpret=use_interpret(), config=config,
+                        w_shifts=w_shifts)
 
 
 def depthwise2d(x, w_dw, *, method: str = "pallas",
                 requant_shift: Optional[int] = None, act: Optional[str] = None,
-                config: Optional[dict] = None):
+                config: Optional[dict] = None,
+                w_shifts: Optional[jax.Array] = None):
     _check_method(method)
     _count_dispatch("depthwise2d", method)
     if method == "xla":
         _check_no_config(method, config)
+        if w_shifts is not None:
+            return ref.depthwise2d_w4_ref(x, w_dw, w_shifts,
+                                          requant_shift=requant_shift, act=act)
         if requant_shift is not None:
             return ref.depthwise2d_q8_ref(x, w_dw, requant_shift=requant_shift,
                                           act=act)
@@ -106,17 +126,20 @@ def depthwise2d(x, w_dw, *, method: str = "pallas",
     if config is None:
         from repro.tune import sig_depthwise2d
         n, h, wd, c = x.shape
-        config = _tuned(sig_depthwise2d, n, h, wd, c, w_dw.shape[0],
-                        dtype=x.dtype)
+        hk = w_dw.shape[1] if w_shifts is not None else w_dw.shape[0]
+        config = _tuned(sig_depthwise2d, n, h, wd, c, hk,
+                        dtype=_w4_dtype(x, w_shifts))
     return _dw_pallas(x, w_dw, requant_shift=requant_shift, act=act,
-                      interpret=use_interpret(), config=config)
+                      interpret=use_interpret(), config=config,
+                      w_shifts=w_shifts)
 
 
 def shift_conv2d(x, shifts, w_pw, bias=None, *, method: str = "pallas",
                  requant_shift: Optional[int] = None,
                  act: Optional[str] = None,
                  config: Optional[dict] = None,
-                 max_shift: Optional[int] = None):
+                 max_shift: Optional[int] = None,
+                 w_shifts: Optional[jax.Array] = None):
     """``max_shift`` bounds |shift| when the table is traced (jit): pass
     ``kernel_size // 2``; unused when the table is concrete. ``bias`` is
     added at accumulator scale (quantized path only)."""
@@ -124,6 +147,10 @@ def shift_conv2d(x, shifts, w_pw, bias=None, *, method: str = "pallas",
     _count_dispatch("shift_conv2d", method)
     if method == "xla":
         _check_no_config(method, config)
+        if w_shifts is not None:
+            return ref.shift_conv2d_w4_ref(x, shifts, w_pw, w_shifts, bias,
+                                           requant_shift=requant_shift,
+                                           max_shift=max_shift, act=act)
         if requant_shift is not None:
             return ref.shift_conv2d_q8_ref(x, shifts, w_pw, bias,
                                            requant_shift=requant_shift,
@@ -137,16 +164,18 @@ def shift_conv2d(x, shifts, w_pw, bias=None, *, method: str = "pallas",
         from repro.tune import sig_shift_conv2d
         n, h, wd, c = x.shape
         config = _tuned(sig_shift_conv2d, n, h, wd, c, w_pw.shape[-1],
-                        dtype=x.dtype)
+                        dtype=_w4_dtype(x, w_shifts))
     return _shift_pallas(x, shifts, w_pw, bias, requant_shift=requant_shift,
-                         act=act, interpret=use_interpret(), config=config)
+                         act=act, interpret=use_interpret(), config=config,
+                         w_shifts=w_shifts)
 
 
 def add_conv2d(x, w, bias=None, *, method: str = "pallas",
                requant_shift: Optional[int] = None,
                x_preshift: int = 0, w_preshift: int = 0,
                act: Optional[str] = None,
-               config: Optional[dict] = None):
+               config: Optional[dict] = None,
+               w_shifts: Optional[jax.Array] = None):
     """``bias`` is added at accumulator scale (quantized path only);
     ``x_preshift``/``w_preshift`` are the Algorithm-1 (right) scale-alignment
     left shifts applied to the operands before |x - w|."""
@@ -154,6 +183,11 @@ def add_conv2d(x, w, bias=None, *, method: str = "pallas",
     _count_dispatch("add_conv2d", method)
     if method == "xla":
         _check_no_config(method, config)
+        if w_shifts is not None:
+            return ref.add_conv2d_w4_ref(x, w, w_shifts, bias,
+                                         requant_shift=requant_shift,
+                                         x_preshift=x_preshift,
+                                         w_preshift=w_preshift, act=act)
         if requant_shift is not None:
             return ref.add_conv2d_q8_ref(x, w, bias,
                                          requant_shift=requant_shift,
@@ -168,10 +202,11 @@ def add_conv2d(x, w, bias=None, *, method: str = "pallas",
         from repro.tune import sig_add_conv2d
         n, h, wd, cx = x.shape
         config = _tuned(sig_add_conv2d, n, h, wd, cx, w.shape[-1], w.shape[0],
-                        dtype=x.dtype)
+                        dtype=_w4_dtype(x, w_shifts))
     return _add_pallas(x, w, bias, requant_shift=requant_shift,
                        x_preshift=x_preshift, w_preshift=w_preshift, act=act,
-                       interpret=use_interpret(), config=config)
+                       interpret=use_interpret(), config=config,
+                       w_shifts=w_shifts)
 
 
 def maxpool2d(x, *, window: int = 2, stride: Optional[int] = None,
@@ -258,20 +293,25 @@ def causal_conv1d(x, w, *, method: str = "auto",
 def matmul(a, b, *, method: str = "pallas", requant_shift: Optional[int] = None,
            act: Optional[str] = None,
            bm: Optional[int] = None, bn: Optional[int] = None,
-           bk: Optional[int] = None, config: Optional[dict] = None):
+           bk: Optional[int] = None, config: Optional[dict] = None,
+           w_shifts: Optional[jax.Array] = None):
     """Explicit bm/bn/bk win over ``config``, which wins over the tuner."""
     _check_method(method)
     _count_dispatch("matmul", method)
     if method == "xla":
         _check_no_config(method, config, bm, bn, bk)
+        if w_shifts is not None:
+            return ref.matmul_w4_ref(a, b, w_shifts,
+                                     requant_shift=requant_shift, act=act)
         return ref.matmul_ref(a, b, requant_shift=requant_shift, act=act)
     if config is None and None in (bm, bn, bk):
         from repro.tune import sig_matmul
         config = _tuned(sig_matmul, a.shape[0], a.shape[1], b.shape[1],
-                        dtype=a.dtype)
+                        dtype=_w4_dtype(a, w_shifts))
     config = dict(config or {})
     for name, val in (("bm", bm), ("bn", bn), ("bk", bk)):
         if val is not None:
             config[name] = val
     return _mm_pallas(a, b, requant_shift=requant_shift, act=act,
-                      interpret=use_interpret(), config=config)
+                      interpret=use_interpret(), config=config,
+                      w_shifts=w_shifts)

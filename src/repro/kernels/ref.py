@@ -93,6 +93,60 @@ def add_conv2d_q8_ref(x_q, w_q, bias_q=None, *, requant_shift: int = 0,
     return apply_requant(acc, requant_shift).astype(jnp.int8)
 
 
+# --------------------------------------------------------------------------
+# W4 oracles: expand the nibble-packed weights to their int8 codes on the
+# host (``core.quantize.expand_w4`` — unpack + per-group shift to the base
+# scale), then run the UNCHANGED int8 oracle. This is the contract every W4
+# Pallas kernel is tested bit-exact against: pallas == xla == oracle.
+# --------------------------------------------------------------------------
+
+def _w4_codes(w_p, w_shifts, size: int, axis: int):
+    from repro.core.quantize import expand_w4
+    return expand_w4(w_p, w_shifts, size, axis)
+
+
+def conv2d_w4_ref(x_q, w_p, w_shifts, bias_q=None, *, groups: int = 1,
+                  requant_shift: int = 0, act=None):
+    cxg = x_q.shape[-1] // groups
+    return conv2d_q8_ref(x_q, _w4_codes(w_p, w_shifts, cxg, 2), bias_q,
+                         groups=groups, requant_shift=requant_shift, act=act)
+
+
+def depthwise2d_w4_ref(x_q, w_dw_p, w_shifts, *, requant_shift: int = 0,
+                       act=None):
+    if w_dw_p.ndim == 4:
+        w_dw_p = w_dw_p[..., 0]
+    hk = w_dw_p.shape[1]                     # axis 0 is the packed tap axis
+    return depthwise2d_q8_ref(x_q, _w4_codes(w_dw_p, w_shifts, hk, 0),
+                              requant_shift=requant_shift, act=act)
+
+
+def shift_conv2d_w4_ref(x_q, shifts, w_pw_p, w_shifts, bias_q=None, *,
+                        requant_shift: int = 0, max_shift=None, act=None):
+    if w_pw_p.ndim == 4:
+        w_pw_p = w_pw_p[0, 0]
+    c = x_q.shape[-1]
+    return shift_conv2d_q8_ref(x_q, shifts, _w4_codes(w_pw_p, w_shifts, c, 0),
+                               bias_q, requant_shift=requant_shift,
+                               max_shift=max_shift, act=act)
+
+
+def add_conv2d_w4_ref(x_q, w_p, w_shifts, bias_q=None, *,
+                      requant_shift: int = 0, x_preshift: int = 0,
+                      w_preshift: int = 0, act=None):
+    cx = x_q.shape[-1]
+    return add_conv2d_q8_ref(x_q, _w4_codes(w_p, w_shifts, cx, 2), bias_q,
+                             requant_shift=requant_shift,
+                             x_preshift=x_preshift, w_preshift=w_preshift,
+                             act=act)
+
+
+def matmul_w4_ref(a, b_p, w_shifts, *, requant_shift, act=None):
+    k = a.shape[-1]
+    return matmul_ref(a, _w4_codes(b_p, w_shifts, k, 0),
+                      requant_shift=requant_shift, act=act)
+
+
 def causal_conv1d_ref(x, w, *, act=None):
     """x: (B,L,D); w: (K,D). Zero history before t=0."""
     if w.ndim == 3:

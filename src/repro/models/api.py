@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 
+from . import attention as A
 from . import encdec as E
 from . import transformer as T
 
@@ -99,15 +100,34 @@ def slot_batch_axes(cfg: ModelConfig) -> dict:
 
 
 def init_slot_cache(cfg: ModelConfig, batch: int, max_len: int,
-                    dtype=jnp.bfloat16):
+                    dtype=jnp.bfloat16, kv: str = "float"):
     """A batched decode cache with per-slot lengths.
 
     Identical to ``transformer.init_cache`` except ``"len"`` is a (batch,)
     int32 vector — one logical sequence length per slot. Every slot starts
     empty: length 0 masks the entire row out of attention, so uninitialized
     K/V never pollutes a live sequence.
+
+    ``kv="int8"`` stores K/V as int8 codes plus per-(position, head) f32
+    scales (``k_scale``/``v_scale``, (L, B, S, Hkv)) — ~halved cache bytes.
+    ``cache_write_slot`` quantizes prefilled float K/V on the way in and
+    ``decode_step`` quantizes each new token's K/V at its own position
+    (per-token scales: refill/retire never re-scales a neighbour).
+    Attention-family dense caches only.
     """
+    if kv not in ("float", "int8"):
+        raise ValueError(f"init_slot_cache: kv must be 'float' or 'int8', "
+                         f"got {kv!r}")
+    if kv == "int8" and cfg.family in ("ssm", "hybrid", "encdec"):
+        raise NotImplementedError(
+            "int8 KV slot cache only covers attention-family dense caches")
     cache = T.init_cache(cfg, batch, max_len, dtype)
+    if kv == "int8":
+        sc = cache["k"].shape[:-1]          # (L, B, S, Hkv)
+        cache["k"] = jnp.zeros(cache["k"].shape, jnp.int8)
+        cache["v"] = jnp.zeros(cache["v"].shape, jnp.int8)
+        cache["k_scale"] = jnp.ones(sc, jnp.float32)
+        cache["v_scale"] = jnp.ones(sc, jnp.float32)
     cache["len"] = jnp.zeros((batch,), jnp.int32)
     return cache
 
@@ -120,10 +140,21 @@ def cache_write_slot(cfg: ModelConfig, live: dict, new: dict, slot,
     ``slot`` may be a traced scalar, so a single jit of this function covers
     every slot index. ``new["len"]`` may be the scalar a plain prefill
     produces or the (B,) vector of a ``prompt_lens`` prefill.
+
+    When ``live`` is an int8 KV cache (has ``k_scale``), the prefilled
+    *float* K/V row is quantized on the way in — prefill always runs float;
+    only the resident cache is int8.
     """
     out = dict(live)
+    kv8 = "k_scale" in live
     for key, ax in slot_batch_axes(cfg).items():
-        row = jnp.take(new[key], src, axis=ax).astype(live[key].dtype)
+        row = jnp.take(new[key], src, axis=ax)
+        if kv8 and key in ("k", "v"):
+            qrow, srow = A.quantize_kv(row)          # (L,S,Hkv,D) -> (L,S,Hkv)
+            out[key] = live[key].at[:, slot].set(qrow)
+            out[key + "_scale"] = live[key + "_scale"].at[:, slot].set(srow)
+            continue
+        row = row.astype(live[key].dtype)
         if ax == 1:
             out[key] = live[key].at[:, slot].set(row)
         else:

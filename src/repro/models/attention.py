@@ -185,6 +185,45 @@ def attention(q, k, v, *, causal: bool, impl: str = "full", q_offset=0,
     return full_attention(q, k, v, causal=causal, q_offset=q_offset)
 
 
+# ----------------------------------------------------- int8 KV cache ------
+#
+# Serving-time KV quantization (same Eq.-4 family as the paper's activation
+# quantization, but with a per-token-per-head float scale instead of a
+# global pow2 one): each cache position stores int8 codes plus one f32
+# scale per (position, kv-head) — a 127-max symmetric quantizer over the
+# head_dim vector. Storage is ~halved vs bf16 (1 byte/elem + scale/D), and
+# the quantize-on-write / dequantize-on-read pair keeps the attention
+# arithmetic itself unchanged. Per-token scales mean a slot refill or
+# retirement never re-scales neighbouring positions — exactly the property
+# continuous batching needs.
+
+def quantize_kv(x):
+    """x: (..., H, D) -> (int8 codes, f32 scales (..., H)).
+
+    Symmetric per-(position, head) quantization: scale = amax/127 over the
+    head_dim vector (1.0 for all-zero vectors so the codes stay zero)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q, scale, dtype):
+    """Inverse of :func:`quantize_kv` (up to the rounding step)."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def decode_attention_q8(q, k_cache, v_cache, k_scale, v_scale, cache_len):
+    """:func:`decode_attention` over an int8 KV cache: caches are int8
+    (B,S,Hkv,D) + per-(position, head) f32 scales (B,S,Hkv); K/V are
+    dequantized on read so masking/softmax numerics match the float path
+    on the same codes."""
+    k = dequantize_kv(k_cache, k_scale, q.dtype)
+    v = dequantize_kv(v_cache, v_scale, q.dtype)
+    return decode_attention(q, k, v, cache_len)
+
+
 # ------------------------------------------------------------- decoding ---
 
 def decode_attention(q, k_cache, v_cache, cache_len):

@@ -49,12 +49,40 @@ def mlp(h, p, act: str, cdt):
 ACT_FRAC_BITS = 4      # activation scale 2^-4: post-rmsnorm streams are O(1)
 
 
-def quantize_mlp_params(p):
-    """PTQ of one (possibly layer-stacked) MLP parameter tree -> QTensor per
-    weight. Stacked (L, d, ff) tensors share one scale across layers so the
-    static frac_bits survive a lax.scan over the stack."""
-    from repro.core.quantize import quantize
-    return {k: quantize(v) for k, v in p.items()}
+def quantize_mlp_params(p, *, bits: int = 8, group_size: int = 32):
+    """PTQ of one (possibly layer-stacked) MLP parameter tree.
+
+    ``bits=8``: QTensor per weight; stacked (L, d, ff) tensors share one
+    scale across layers so the static frac_bits survive a lax.scan over the
+    stack. ``bits=4``: nibble-packed :class:`QTensorW4` per weight —
+    per-layer group scales along the contraction (K) axis, but ONE base
+    ``frac_bits`` pinned across the whole stack (min of the per-layer
+    defaults, the clip-safe choice) so every scan slice carries identical
+    statics; the per-layer slice ``(q[l], shifts[l])`` is exactly the 2D
+    packed operand ``matmul_q8`` consumes (see QTensorW4's stacked-tree
+    note)."""
+    from repro.core.quantize import QTensorW4, quantize, quantize_w4
+    if bits not in (8, 4):
+        raise ValueError(f"quantize_mlp_params: bits must be 8 or 4, "
+                         f"got {bits}")
+    if bits == 8:
+        return {k: quantize(v) for k, v in p.items()}
+    out = {}
+    for k, v in p.items():
+        if v.ndim == 2:                       # single layer: (d_in, d_out)
+            out[k] = quantize_w4(v, axis=0, group_size=group_size)
+            continue
+        layers = [quantize_w4(v[l], axis=0, group_size=group_size)
+                  for l in range(v.shape[0])]
+        fb = min(t.frac_bits for t in layers)
+        if any(t.frac_bits != fb for t in layers):
+            layers = [quantize_w4(v[l], axis=0, group_size=group_size,
+                                  frac_bits=fb)
+                      for l in range(v.shape[0])]
+        out[k] = QTensorW4(jnp.stack([t.q for t in layers]),
+                           jnp.stack([t.shifts for t in layers]),
+                           frac_bits=fb, size=v.shape[1], axis=0)
+    return out
 
 
 def qmlp(h, qp, act: str, cdt, *, a_fb: int = ACT_FRAC_BITS,
@@ -64,14 +92,18 @@ def qmlp(h, qp, act: str, cdt, *, a_fb: int = ACT_FRAC_BITS,
     ``method="pallas"``, the jnp integer oracle under ``"xla"``). Both
     methods are bit-exact against each other. Serve-path only (no sharding
     constraints — the engine runs unpartitioned decode)."""
-    from repro.core.quantize import quantize
+    from repro.core.quantize import QTensorW4, quantize
     from repro.kernels import ops as K
     b, s, d = h.shape
     x = quantize(h.reshape(b * s, d), frac_bits=a_fb)
 
     def mm(xq, w):
         # acc frac bits = a_fb + w.fb; requantize back to the activation
-        # scale => shift by w.fb (static per tensor)
+        # scale => shift by w.fb (static per tensor). W4 leaves stay
+        # nibble-packed — matmul_q8 unpacks the half-width block in-register
+        if isinstance(w, QTensorW4):
+            return K.matmul(xq.q, w.q, method=method,
+                            requant_shift=w.frac_bits, w_shifts=w.shifts)
         return K.matmul(xq.q, w.q, method=method, requant_shift=w.frac_bits)
 
     scale = 2.0 ** -a_fb

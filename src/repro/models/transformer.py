@@ -189,26 +189,46 @@ def attn_forward(lp, x, cfg: ModelConfig, cdt, *, impl: str, q_offset=0):
 
 
 def attn_decode(lp, x, cfg: ModelConfig, cdt, k_cache, v_cache, cache_len,
-                *, sp_axis: Optional[str] = None):
+                *, sp_axis: Optional[str] = None, kv_scales=None):
     """One decode step against the KV cache.
 
     ``cache_len`` is a () scalar for lockstep decode, or a (B,) vector for
     per-slot decode (continuous batching): row i writes its new K/V at its
     own position cache_len[i] and attends only its own valid prefix. The
     sequence-parallel path (``sp_axis``) supports scalar lengths only.
+
+    ``kv_scales=(k_scale, v_scale)`` marks an int8 KV cache (codes in
+    ``k_cache``/``v_cache``, per-(position, head) f32 scales (B,S,Hkv)):
+    the new K/V row is quantized on write at its own position — per-token
+    scales, so no other position is ever re-scaled — and the cache is
+    dequantized on read. Returns a 5-tuple ``(out, k, v, k_scale,
+    v_scale)`` in that mode (3-tuple otherwise); sp decode is float-only.
     """
     b = x.shape[0]
     cl = jnp.asarray(cache_len)
+    kv8 = kv_scales is not None
+    if kv8 and sp_axis is not None:
+        raise NotImplementedError("int8 KV decode: sequence-parallel path "
+                                  "is float-only")
     if cl.ndim == 0:
         positions = jnp.full((b, 1), cl, jnp.int32)
     else:
         positions = cl[:, None].astype(jnp.int32)
     q, k, v = _qkv(lp, x, cfg, cdt, positions)
+    if kv8:
+        k_scale, v_scale = kv_scales
+        k, ks_new = A.quantize_kv(k)          # (B,1,Hkv,D) int8, (B,1,Hkv) f32
+        v, vs_new = A.quantize_kv(v)
     if cl.ndim == 0:
         k_cache = lax.dynamic_update_slice_in_dim(
             k_cache, k.astype(k_cache.dtype), cl, axis=1)
         v_cache = lax.dynamic_update_slice_in_dim(
             v_cache, v.astype(v_cache.dtype), cl, axis=1)
+        if kv8:
+            k_scale = lax.dynamic_update_slice_in_dim(k_scale, ks_new, cl,
+                                                      axis=1)
+            v_scale = lax.dynamic_update_slice_in_dim(v_scale, vs_new, cl,
+                                                      axis=1)
     else:
         # per-row scatter at each slot's own length; rows whose length is
         # past the end of the cache (retired slots) simply write nothing
@@ -217,11 +237,19 @@ def attn_decode(lp, x, cfg: ModelConfig, cdt, k_cache, v_cache, cache_len,
                             k_cache)
         v_cache = jnp.where(hot[:, :, None, None], v.astype(v_cache.dtype),
                             v_cache)
-    if sp_axis is None:
+        if kv8:
+            k_scale = jnp.where(hot[:, :, None], ks_new, k_scale)
+            v_scale = jnp.where(hot[:, :, None], vs_new, v_scale)
+    if kv8:
+        o = A.decode_attention_q8(q, k_cache, v_cache, k_scale, v_scale,
+                                  cl + 1)
+    elif sp_axis is None:
         o = A.decode_attention(q, k_cache, v_cache, cl + 1)
     else:
         o = _sp_decode(q, k_cache, v_cache, cl + 1, sp_axis)
     out = o.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ lp["wo"].astype(cdt)
+    if kv8:
+        return out, k_cache, v_cache, k_scale, v_scale
     return out, k_cache, v_cache
 
 
@@ -427,6 +455,10 @@ def decode_step(params, token, cache, cfg: ModelConfig, *,
     if precision != "float" and cfg.family in ("ssm", "hybrid"):
         raise NotImplementedError(
             "integer-FFN decode only covers attention-family dense MLPs")
+    kv8 = "k_scale" in cache
+    if kv8 and cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            "int8 KV decode only covers attention-family dense caches")
     cdt = _cdt(cfg)
     h = embed_tokens(params, token, cfg, cdt)
     clen = cache["len"]
@@ -477,6 +509,21 @@ def decode_step(params, token, cache, cfg: ModelConfig, *,
             body, h, (params["blocks"], cache["k"], cache["v"],
                       cache["conv"], cache["ssm"]))
         new_cache.update(k=k_new, v=v_new, conv=conv_new, ssm=ssm_new)
+    elif kv8:
+        def body(hh, xs):
+            lp, kc, vc, ks, vs = xs
+            x = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+            a, kc, vc, ks, vs = attn_decode(lp["attn"], x, cfg, cdt, kc, vc,
+                                            clen, sp_axis=sp_axis,
+                                            kv_scales=(ks, vs))
+            hh = hh + a
+            f = ffn_forward(lp, rmsnorm(hh, lp["ln2"], cfg.norm_eps), cfg, cdt,
+                            precision=precision)
+            return hh + f, (kc, vc, ks, vs)
+        h, (k_new, v_new, ks_new, vs_new) = lax.scan(
+            body, h, (params["layers"], cache["k"], cache["v"],
+                      cache["k_scale"], cache["v_scale"]))
+        new_cache.update(k=k_new, v=v_new, k_scale=ks_new, v_scale=vs_new)
     else:
         def body(hh, xs):
             lp, kc, vc = xs

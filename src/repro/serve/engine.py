@@ -120,8 +120,19 @@ class ServeConfig:
                 through the Pallas ``matmul_q8`` kernel with its fused
                 Algorithm-1 shift-requantized epilogue; "int8-xla" is the
                 same arithmetic on the jnp integer oracle (bit-exact with
-                "int8" — the direct / no-SIMD baseline). Attention-family
-                dense-MLP configs only (no moe / ssm / hybrid / encdec).
+                "int8" — the direct / no-SIMD baseline). "w4a8" additionally
+                nibble-packs the FFN weights (4-bit codes + per-group shift
+                scales, ``quantize_w4``) and the matmul unpacks them
+                in-register — half the weight bytes per decode step at the
+                same int8 activation path. Attention-family dense-MLP
+                configs only (no moe / ssm / hybrid / encdec).
+    kv_cache:   "float" (default) keeps the resident KV cache in the model
+                compute dtype. "int8" stores K/V as int8 codes with
+                per-(position, head) f32 scales — ~halved KV bytes;
+                quantize-on-write, dequantize-on-read, per-token scales so
+                slot refill/retire never re-scales a neighbour. Continuous
+                scheduler + attention-family dense caches only (the static
+                path decodes straight off the float prefill cache).
     """
     max_batch: int = 4
     max_len: int = 256
@@ -133,6 +144,7 @@ class ServeConfig:
     attn_impl: str = "flash"
     seed: int = 0
     precision: str = "float"
+    kv_cache: str = "float"
 
 
 class Engine:
@@ -143,18 +155,32 @@ class Engine:
             raise NotImplementedError(
                 "continuous batching needs slotted caches; encdec is not "
                 "slotted (models/api.slot_batch_axes) — use scheduler='static'")
-        if scfg.precision not in ("float", "int8", "int8-xla"):
+        if scfg.precision not in ("float", "int8", "int8-xla", "w4a8"):
             raise ValueError(f"unknown precision: {scfg.precision!r}")
+        if scfg.kv_cache not in ("float", "int8"):
+            raise ValueError(f"unknown kv_cache: {scfg.kv_cache!r}")
+        if scfg.kv_cache == "int8":
+            if scfg.scheduler != "continuous":
+                raise NotImplementedError(
+                    "kv_cache='int8' quantizes the resident slot cache; the "
+                    "static scheduler decodes off the float prefill cache — "
+                    "use scheduler='continuous'")
+            if cfg.family in ("ssm", "hybrid", "encdec"):
+                raise NotImplementedError(
+                    "kv_cache='int8' covers attention-family dense KV caches "
+                    "only (no ssm / hybrid / encdec)")
         if scfg.precision != "float":
             if cfg.family in ("ssm", "hybrid", "encdec") or cfg.moe is not None:
                 raise NotImplementedError(
                     "ServeConfig.precision='int8' quantizes dense FFN "
                     "matmuls; moe/ssm/hybrid/encdec configs are unsupported")
             # PTQ the FFN stack once; the quantized tree rides along in
-            # params["layers"] so the layer scan slices it like any weight
+            # params["layers"] so the layer scan slices it like any weight.
+            # w4a8: same tree, but nibble-packed QTensorW4 leaves
             from repro.models.blocks import quantize_mlp_params
             layers = dict(params["layers"])
-            layers["qmlp"] = quantize_mlp_params(layers["mlp"])
+            layers["qmlp"] = quantize_mlp_params(
+                layers["mlp"], bits=4 if scfg.precision == "w4a8" else 8)
             params = dict(params, layers=layers)
         self.cfg = cfg
         self.scfg = scfg
@@ -312,7 +338,8 @@ class Engine:
 
     def _run_continuous(self) -> List[Request]:
         B = self.scfg.max_batch
-        cache = api.init_slot_cache(self.cfg, B, self.scfg.max_len)
+        cache = api.init_slot_cache(self.cfg, B, self.scfg.max_len,
+                                    kv=self.scfg.kv_cache)
         slots: List[Optional[Request]] = [None] * B
         lens = [0] * B                  # host mirror of cache["len"]
         cur = np.zeros((B, 1), np.int32)

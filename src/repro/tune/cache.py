@@ -28,7 +28,11 @@ from repro.obs import metrics as _obs_metrics
 # v2: the batched/spatially-tiled kernel grids added block_n/block_h/block_w
 # to every conv-kernel search space (and maxpool2d became tunable) — configs
 # searched over the v1 spaces are not comparable, so v1 caches are ignored.
-SCHEMA_VERSION = 2
+# v3: W4A8 packed-weight kernels added the "w4a8" dtype key (halved weight
+# traffic reranks schedules, and matmul rounds bk up to even for packing) —
+# v2 caches carry no "w4a8" entries and their int8 entries predate the
+# W4-aware cost model, so they are ignored rather than misapplied.
+SCHEMA_VERSION = 3
 
 # repo root = .../src/repro/tune/cache.py -> four levels up
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(

@@ -73,7 +73,17 @@ def _util(block: int, tile: int = LANE) -> float:
 
 
 def _bytes_of(dtype: str) -> int:
-    return {"int8": 1, "uint8": 1, "bfloat16": 2, "float16": 2}.get(dtype, 4)
+    # "w4a8": the *activation* element width (int8) — the nibble-packed
+    # weight side is priced separately via _wbytes_of
+    return {"int8": 1, "uint8": 1, "w4a8": 1,
+            "bfloat16": 2, "float16": 2}.get(dtype, 4)
+
+
+def _wbytes_of(dtype: str) -> float:
+    """Bytes per *weight* element: 0.5 for nibble-packed W4, else the
+    element width. This is the term the W4 schedules are reranked by —
+    halved filter-block traffic shifts the traffic/compute balance point."""
+    return 0.5 if dtype == "w4a8" else float(_bytes_of(dtype))
 
 
 def _vmem_cost(footprint_bytes: float) -> float:
@@ -99,6 +109,7 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
     """
     k = sig.kernel
     eb = _bytes_of(dtype)
+    wb = _wbytes_of(dtype)                           # 0.5 for W4-packed weights
     ab = 4                                           # int32/f32 accumulator
 
     if k == "conv2d":
@@ -115,7 +126,7 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
                         groups=g, use_bias=False)
         flops = 2.0 * n * spec.mac_count(w)
         img = bn * (bh + hk) * (bw + hk) * cxg * eb  # halo-padded tile block
-        wts = hk * hk * cxg * bco * eb
+        wts = hk * hk * cxg * bco * wb
         out = bn * bh * bw * bco * eb
         traffic = steps * (img + wts + out)
         vmem = img + wts + bn * bh * bw * bco * ab
@@ -132,7 +143,7 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
         steps = sp_steps * (c // bc)
         flops = 2.0 * n * h * w * c * hk * hk
         img = bn * (bh + hk) * (bw + hk) * bc * eb
-        traffic = steps * (img + hk * hk * bc * eb + bn * bh * bw * bc * eb)
+        traffic = steps * (img + hk * hk * bc * wb + bn * bh * bw * bc * eb)
         vmem = img + bn * bh * bw * bc * ab
         compute = flops / (TPU.peak_bf16_flops * VPU_DERATE * _util(bc))
         return (_vmem_cost(vmem)
@@ -147,8 +158,8 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
         steps = sp_steps * (co // bco)
         flops = 2.0 * n * h * w * c * co
         img = bn * (bh + 2) * (bw + 2) * c * eb      # all channels per step
-        traffic = steps * (img + c * bco * eb + bn * bh * bw * bco * eb)
-        vmem = img + c * bco * eb + bn * bh * bw * bco * ab
+        traffic = steps * (img + c * bco * wb + bn * bh * bw * bco * eb)
+        vmem = img + c * bco * wb + bn * bh * bw * bco * ab
         compute = flops / (TPU.peak_bf16_flops * _util(bco) * _util(c))
         return (_vmem_cost(vmem)
                 * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
@@ -164,7 +175,7 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
         # hog — the spatial tile is what keeps it bounded
         flops = 3.0 * n * h * w * ci * co * hk * hk  # sub+abs+add per tap
         img = bn * (bh + hk) * (bw + hk) * ci * eb
-        traffic = steps * (img + hk * hk * ci * bco * eb
+        traffic = steps * (img + hk * hk * ci * bco * wb
                            + bn * bh * bw * bco * eb)
         vmem = img + bn * bh * bw * ci * bco * ab + bn * bh * bw * bco * ab
         compute = flops / (TPU.peak_bf16_flops * VPU_DERATE * _util(bco, SUBLANE))
@@ -206,8 +217,9 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
         gi, gj, gk = -(-m // bm), -(-n // bn), -(-kk // bk)
         steps = gi * gj * gk
         flops = 2.0 * m * n * kk
-        traffic = steps * (bm * bk + bk * bn) * eb + gi * gj * bm * bn * eb
-        vmem = (bm * bk + bk * bn) * eb + bm * bn * ab
+        traffic = (steps * (bm * bk * eb + bk * bn * wb)
+                   + gi * gj * bm * bn * eb)
+        vmem = bm * bk * eb + bk * bn * wb + bm * bn * ab
         compute = flops / (TPU.peak_bf16_flops
                            * _util(bn) * _util(bk) * _util(bm, SUBLANE))
         return (_vmem_cost(vmem)
@@ -337,18 +349,27 @@ def plan_jobs(plan, *, batch: int = 1) -> list:
     block_n/block_h/block_w spaces (and the cache keys) depend on it."""
     import jax
     import jax.numpy as jnp
+    from repro.core.quantize import QTensorW4
 
     def i8(shape, seed=0):
         return jax.random.randint(jax.random.PRNGKey(seed), shape, -100, 100,
                                   jnp.int32).astype(jnp.int8)
 
+    def wkw(wq):
+        """(extra kwargs, dtype key) for one weight leaf: W4-packed leaves
+        tune under their own "w4a8" signature (halved weight traffic reranks
+        the space) and carry their group shifts into the timed call."""
+        if isinstance(wq, QTensorW4):
+            return {"w_shifts": wq.shifts}, "w4a8"
+        return {}, "int8"
+
     jobs, seen = [], set()
 
-    def emit(kernel, sig, arrays, kwargs):
-        k = (kernel, sig.key())
+    def emit(kernel, sig, arrays, kwargs, dtype="int8"):
+        k = (kernel, sig.key(), dtype)
         if k not in seen:
             seen.add(k)
-            jobs.append((kernel, sig, arrays, "int8", kwargs))
+            jobs.append((kernel, sig, arrays, dtype, kwargs))
 
     for node in plan.nodes:
         if node.op == "maxpool" and "in_hw" in node.attrs:
@@ -367,36 +388,42 @@ def plan_jobs(plan, *, batch: int = 1) -> list:
         if p in ("standard", "grouped"):
             g = spec.groups if p == "grouped" else 1
             wq = node.qparams["w"]
+            kw, dt = wkw(wq)
             shift = node.in_fb + wq.frac_bits - node.out_fb
             emit("conv2d", _space.sig_conv2d(batch, h, w, ci, co, hk, g),
                  (i8((batch, h, w, ci)), wq.q),
-                 dict(groups=g, requant_shift=shift, act=node.act))
+                 dict(groups=g, requant_shift=shift, act=node.act, **kw), dt)
         elif p == "dws":
             w_dw, w_pw = node.qparams["w_dw"], node.qparams["w_pw"]
             mid_fb = node.qparams.get("mid_frac_bits", node.out_fb)
+            kw_dw, dt_dw = wkw(w_dw)
+            kw_pw, dt_pw = wkw(w_pw)
             emit("depthwise2d", _space.sig_depthwise2d(batch, h, w, ci, hk),
                  (i8((batch, h, w, ci)), w_dw.q[..., 0]),
-                 dict(requant_shift=node.in_fb + w_dw.frac_bits - mid_fb))
+                 dict(requant_shift=node.in_fb + w_dw.frac_bits - mid_fb,
+                      **kw_dw), dt_dw)
             emit("conv2d", _space.sig_conv2d(batch, h, w, ci, co, 1, 1),
                  (i8((batch, h, w, ci)), w_pw.q),
                  dict(requant_shift=mid_fb + w_pw.frac_bits - node.out_fb,
-                      act=node.act))
+                      act=node.act, **kw_pw), dt_pw)
         elif p == "shift":
             w_pw = node.qparams["w_pw"]
+            kw, dt = wkw(w_pw)
             emit("shift_conv2d", _space.sig_shift_conv2d(batch, h, w, ci, co),
                  (i8((batch, h, w, ci)), node.qparams["shifts"],
                   w_pw.q[0, 0] if w_pw.q.ndim == 4 else w_pw.q),
                  dict(requant_shift=node.in_fb + w_pw.frac_bits - node.out_fb,
-                      act=node.act))
+                      act=node.act, **kw), dt)
         elif p == "add":
             wq = node.qparams["w"]
+            kw, dt = wkw(wq)
             x_pre = max(0, wq.frac_bits - node.in_fb)
             w_pre = max(0, node.in_fb - wq.frac_bits)
             acc_fb = max(node.in_fb, wq.frac_bits)
             emit("add_conv2d", _space.sig_add_conv2d(batch, h, w, ci, co, hk),
                  (i8((batch, h, w, ci)), wq.q),
                  dict(requant_shift=acc_fb - node.out_fb, x_preshift=x_pre,
-                      w_preshift=w_pre, act=node.act))
+                      w_preshift=w_pre, act=node.act, **kw), dt)
     return jobs
 
 

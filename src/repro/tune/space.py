@@ -51,7 +51,10 @@ _MM_BLOCKS_INT8 = _MM_BLOCKS + (1024,)
 
 
 def _int8(dtype: str) -> bool:
-    return str(dtype) in ("int8", "uint8")
+    # "w4a8" = nibble-packed weights, int8 activations: same lane widths /
+    # block feasibility as int8, so it shares the int8 candidate space (the
+    # cost model, not the space, sees the halved weight bytes)
+    return str(dtype) in ("int8", "uint8", "w4a8")
 
 
 @dataclasses.dataclass(frozen=True)

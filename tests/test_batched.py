@@ -149,6 +149,106 @@ def test_tiled_schedule_with_fused_epilogue_matches_oracle():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+# ------------------------------------------- W4 weights x tiled schedules --
+#
+# Packed weights are grid-invariant (only activations are spatially tiled),
+# but the ragged final halo tiles and non-pow2 batch blocks exercise the
+# in-register unpack against partial blocks — W4 under the tiled schedule
+# must stay bit-exact with the unpacked-int8 oracle AND the per-image loop.
+
+def _w4(w, axis, group=4):
+    from repro.core.quantize import quantize_w4
+    qt = quantize_w4(w, axis=axis, group_size=group)
+    return qt.q, qt.shifts, qt.expand()
+
+
+def test_conv2d_w4_tiled_vs_oracle_and_looped():
+    from repro.kernels import ref
+    x = rnd((N, H, W, 5), jnp.int8)                  # odd Cx: pad nibble
+    wp, ws, w8 = _w4(rnd((3, 3, 5, 8), key=jax.random.PRNGKey(1)), 2)
+    kw = dict(requant_shift=5, w_shifts=ws)
+    _assert_batched_equals_looped(conv2d_im2col, x, wp,
+                                  cfg={**TILED_CFG, "block_co": 4}, **kw)
+    got = conv2d_im2col(x, wp, config={**TILED_CFG, "block_co": 4}, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.conv2d_q8_ref(x, w8, requant_shift=5)))
+
+
+def test_depthwise_w4_tiled_vs_oracle_and_looped():
+    from repro.kernels import ref
+    x = rnd((N, H, W, 8), jnp.int8)
+    wp, ws, w8 = _w4(rnd((3, 3, 8), key=jax.random.PRNGKey(1)), 0, group=2)
+    kw = dict(requant_shift=4, w_shifts=ws)
+    _assert_batched_equals_looped(depthwise2d, x, wp,
+                                  cfg={**TILED_CFG, "block_c": 4}, **kw)
+    got = depthwise2d(x, wp, config={**TILED_CFG, "block_c": 4}, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(ref.depthwise2d_q8_ref(x, w8, requant_shift=4)))
+
+
+def test_shift_w4_tiled_vs_oracle_and_looped():
+    from repro.kernels import ref
+    c, cy = 6, 8
+    x = rnd((N, H, W, c), jnp.int8)
+    shifts = np.array([[(i % 3) - 1, ((i * 2) % 3) - 1] for i in range(c)],
+                      np.int32)
+    wp, ws, w8 = _w4(rnd((c, cy), key=jax.random.PRNGKey(1)), 0, group=2)
+    kw = dict(requant_shift=5, w_shifts=ws)
+    _assert_batched_equals_looped(shift_conv2d, x, shifts, wp,
+                                  cfg={**TILED_CFG, "block_co": 4}, **kw)
+    got = shift_conv2d(x, shifts, wp,
+                       config={**TILED_CFG, "block_co": 4}, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(ref.shift_conv2d_q8_ref(x, shifts, w8, requant_shift=5)))
+
+
+def test_add_w4_tiled_vs_oracle_and_looped():
+    from repro.kernels import ref
+    x = rnd((N, H, W, 4), jnp.int8)
+    wp, ws, w8 = _w4(rnd((3, 3, 4, 6), key=jax.random.PRNGKey(1)), 2)
+    kw = dict(requant_shift=3, w_preshift=1, w_shifts=ws)
+    _assert_batched_equals_looped(add_conv2d, x, wp,
+                                  cfg={**TILED_CFG, "block_co": 2}, **kw)
+    got = add_conv2d(x, wp, config={**TILED_CFG, "block_co": 2}, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(ref.add_conv2d_q8_ref(x, w8, requant_shift=3,
+                                         w_preshift=1)))
+
+
+def test_matmul_w4_batched_vs_looped():
+    from repro.kernels import ref
+    a = rnd((N, 16, 17), jnp.int8)                  # odd K: packed pad byte
+    wp, ws, w8 = _w4(rnd((17, 8), key=jax.random.PRNGKey(1)), 0, group=4)
+    kw = dict(requant_shift=5, w_shifts=ws)
+    got = matmul(a, wp, bm=16, bn=8, bk=7, **kw)    # odd bk rounds even
+    loop = jnp.stack([matmul(a[i], wp, bm=16, bn=8, bk=7, **kw)
+                      for i in range(N)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(loop))
+    np.testing.assert_array_equal(
+        np.asarray(got[0]),
+        np.asarray(ref.matmul_ref(a[0], w8, requant_shift=5)))
+
+
+def test_plan_jobs_emit_w4_dtype():
+    """A W4-lowered plan's tune jobs carry the "w4a8" dtype key (own cache
+    signature + halved-weight-byte cost ranking) and the packed weights'
+    group shifts, so the timed calls are the real W4 dispatches."""
+    from repro.core.quantize import QTensorW4
+    cfg = CNNConfig(primitive="standard", widths=(8, 12), image_size=16)
+    params = init_cnn(cfg, jax.random.PRNGKey(1))
+    calib = jax.random.normal(jax.random.PRNGKey(2), (4, 16, 16, 3)) * 0.5
+    plan = lower(build_cnn_graph(cfg), params, calib, weight_bits=4,
+                 group_size=8)
+    jobs = tune.plan_jobs(plan, batch=2)
+    w4_jobs = [j for j in jobs if j[3] == "w4a8"]
+    assert w4_jobs, "W4 plan produced no w4a8 tune jobs"
+    for kernel, sig, arrays, dtype, kwargs in w4_jobs:
+        assert "w_shifts" in kwargs
+
+
 def test_ops_dispatch_accepts_tiled_configs():
     """The ops layer threads the new knobs through config= like any other
     schedule parameter (pallas == xla on a tiled schedule)."""
@@ -277,10 +377,11 @@ def test_analytic_fallback_feasible_on_batched_shapes():
         assert tune.estimate_s(sig, cfg, "int8") > 0
 
 
-def test_schema_v2_rejects_v1_cache(tmp_path):
-    """The knob-space change bumped the cache schema: a v1 cache (the old
-    artifacts format) must be ignored wholesale, not misapplied."""
-    assert tune.SCHEMA_VERSION == 2
+def test_schema_v3_rejects_v1_cache(tmp_path):
+    """Schema bumps (v2: tiled knobs; v3: the W4A8 "w4a8" dtype key + its
+    halved-weight-traffic reranking) must make old caches be ignored
+    wholesale, not misapplied."""
+    assert tune.SCHEMA_VERSION == 3
     path = str(tmp_path / "v1.json")
     key = tune.cache_key("conv2d", "n1_h8_w8_ci4_co8_k3_g1", "float32",
                          tune.backend_tag())

@@ -273,3 +273,93 @@ def test_int8_precision_rejected_for_unsupported_configs(dense_setup):
     ssm_params = api.init_params(ssm_cfg, jax.random.PRNGKey(0))
     with pytest.raises(NotImplementedError, match="int8"):
         Engine(ssm_cfg, ssm_params, ServeConfig(precision="int8"))
+
+
+# ---------------------------------------------------------- int8 KV cache --
+
+
+def test_int8_kv_token_stream_identical_to_float_kv(dense_setup):
+    """Acceptance: kv_cache="int8" decode is token-stream-identical to the
+    float-KV engine on the SAME workload — including mid-decode slot refill
+    (more requests than slots, skewed lengths) and retirement. Per-token
+    scales keep the quantization per-position, so splicing a new request
+    into a freed slot never re-scales a neighbour's K/V."""
+    cfg, params = dense_setup
+    reqs = lambda: [make_req(0, max_new=3), make_req(1, max_new=12),
+                    make_req(2, plen=7, max_new=6), make_req(3, max_new=5)]
+    _, done_f = drain(cfg, params, reqs(), max_batch=2, max_len=32)
+    _, done_q = drain(cfg, params, reqs(), max_batch=2, max_len=32,
+                      kv_cache="int8")
+    # the workload actually exercised mid-decode refill, not just a drain
+    assert any(r.admit_round > 0 for r in done_q)
+    assert [r.out_tokens for r in done_q] == [r.out_tokens for r in done_f]
+    assert all(r.done for r in done_q)
+
+
+def test_int8_kv_slot_cache_layout_and_write(dense_setup):
+    """init_slot_cache(kv="int8") stores int8 K/V + per-(position, head)
+    f32 scales; cache_write_slot quantizes the float prefill row on the way
+    in (dequantized row close to the float row); freeing only zeroes len."""
+    cfg, params = dense_setup
+    prefill = api.prefill_fn(cfg, max_len=16)
+    cache = api.init_slot_cache(cfg, 3, 16, kv="int8")
+    assert cache["k"].dtype == jnp.int8 and cache["v"].dtype == jnp.int8
+    assert cache["k_scale"].shape == cache["k"].shape[:-1]  # (L, B, S, Hkv)
+    assert cache["k_scale"].dtype == jnp.float32
+    rng = np.random.default_rng(0)
+    plen = 5
+    toks = np.zeros((1, 8), np.int32)
+    toks[0, :plen] = rng.integers(0, 64, (plen,))
+    _, fresh = prefill(params, {"tokens": jnp.asarray(toks),
+                                "prompt_lens": jnp.asarray([plen], jnp.int32)})
+    cache = api.cache_write_slot(cfg, cache, fresh, 1)
+    assert cache["len"].tolist() == [0, plen, 0]
+    deq = (np.asarray(cache["k"][:, 1], np.float32)
+           * np.asarray(cache["k_scale"][:, 1])[..., None])
+    want = np.asarray(fresh["k"][:, 0], np.float32)
+    # symmetric 127-level rounding: |err| <= scale/2 elementwise
+    half = np.asarray(cache["k_scale"][:, 1])[..., None] / 2 + 1e-6
+    assert (np.abs(deq[:, :plen] - want[:, :plen]) <= half[:, :plen]).all()
+    freed = api.cache_free_slot(cache, 1)
+    assert freed["len"].tolist() == [0, 0, 0]
+    np.testing.assert_array_equal(np.asarray(freed["k"]),
+                                  np.asarray(cache["k"]))
+
+
+def test_int8_kv_rejected_for_unsupported_configs(dense_setup):
+    cfg, params = dense_setup
+    with pytest.raises(ValueError, match="kv_cache"):
+        Engine(cfg, params, ServeConfig(kv_cache="fp8"))
+    with pytest.raises(NotImplementedError, match="static"):
+        Engine(cfg, params, ServeConfig(kv_cache="int8", scheduler="static"))
+    ssm_cfg = dataclasses.replace(get_config("falcon-mamba-7b"), n_layers=2,
+                                  d_model=32, vocab=64)
+    ssm_params = api.init_params(ssm_cfg, jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="kv_cache"):
+        Engine(ssm_cfg, ssm_params, ServeConfig(kv_cache="int8"))
+    with pytest.raises(NotImplementedError):
+        api.init_slot_cache(ssm_cfg, 2, 16, kv="int8")
+
+
+# ------------------------------------------------------------- W4A8 serve --
+
+
+def test_w4a8_precision_serves_with_packed_weights(dense_setup):
+    """ServeConfig(precision="w4a8"): the FFN stack is nibble-packed
+    (QTensorW4 leaves ride in params["layers"]["qmlp"]) and decode streams
+    full token sequences; combining with kv_cache="int8" also drains."""
+    from repro.core.quantize import QTensorW4
+    cfg, params = dense_setup
+    eng = Engine(cfg, params, ServeConfig(max_batch=2, max_len=32,
+                                          precision="w4a8"))
+    assert all(isinstance(v, QTensorW4)
+               for v in eng.params["layers"]["qmlp"].values())
+    for i in range(3):
+        eng.submit(make_req(i, max_new=4))
+    done = sorted(eng.run_until_drained(), key=lambda r: r.uid)
+    assert [len(r.out_tokens) for r in done] == [4, 4, 4]
+    assert all(0 <= t < 64 for r in done for t in r.out_tokens)
+    _, done_kv = drain(cfg, params, [make_req(i, max_new=4) for i in range(3)],
+                       max_batch=2, max_len=32, precision="w4a8",
+                       kv_cache="int8")
+    assert [len(r.out_tokens) for r in done_kv] == [4, 4, 4]

@@ -1,0 +1,337 @@
+"""W4A8 packed sub-byte path: pack/unpack invariants, rshift_round boundary
+regressions, and bit-exactness of every W4 kernel against the unpacked-int8
+oracle (pallas == xla == ref expand), through the qconv / graph / qmlp
+layers, plus the tune-layer contracts (halved weight bytes, schema bump).
+
+Deterministic companions to ``test_w4_props.py`` (the hypothesis suite):
+these sweeps always run, so the W4 contract is enforced even where
+hypothesis is not installed.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tune
+from repro.core import ConvSpec, Primitives, apply, init, quantize
+from repro.core.qconv import qconv_apply, quantize_conv_params
+from repro.core.quantize import (QTensor, QTensorW4, W4_MAX_GROUP_SHIFT,
+                                 expand_w4, frac_bits_for, pack_w4,
+                                 quantize_w4, rshift_round, unpack_w4)
+from repro.graph import CompiledPlan, build_cnn_graph, lower
+from repro.kernels import ops, ref
+from repro.kernels.conv_add import add_conv2d
+from repro.kernels.conv_dw import depthwise2d
+from repro.kernels.conv_im2col import conv2d_im2col
+from repro.kernels.conv_shift import shift_conv2d
+from repro.kernels.matmul_q8 import matmul
+from repro.models.convnet import CNNConfig, init_cnn
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _clean_tuner_state():
+    tune.set_default_cache(tune.TuneCache(None))
+    yield
+    tune.reset()
+
+
+def codes(shape, key=KEY, lo=-8, hi=8):
+    return jax.random.randint(key, shape, lo, hi, jnp.int32).astype(jnp.int8)
+
+
+def rnd_i8(shape, key=KEY):
+    return jax.random.randint(key, shape, -100, 100, jnp.int32).astype(jnp.int8)
+
+
+# ------------------------------------------------------------ pack/unpack --
+
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 8, 17])      # odd extents: pad path
+@pytest.mark.parametrize("axis", [0, 1])
+def test_pack_unpack_roundtrip(n, axis):
+    shape = (n, 5) if axis == 0 else (5, n)
+    q = codes(shape)
+    p = pack_w4(q, axis)
+    assert p.dtype == jnp.int8
+    assert p.shape[axis] == (n + 1) // 2                # two codes per byte
+    np.testing.assert_array_equal(unpack_w4(p, n, axis), q)
+
+
+def test_pack_unpack_extreme_codes():
+    """All-negative (-8, the asymmetric two's-complement corner) and
+    all-saturated (+7) codes survive the nibble trip, odd extent included."""
+    for v in (-8, 7):
+        q = jnp.full((5, 3), v, jnp.int8)
+        np.testing.assert_array_equal(unpack_w4(pack_w4(q, 0), 5, 0), q)
+
+
+def test_pack_pad_nibble_is_zero():
+    """The odd-extent pad nibble must hold code 0: ragged Pallas blocks read
+    it as a neutral multiplicand."""
+    q = jnp.full((3,), -8, jnp.int8)
+    p = pack_w4(q, 0)
+    # byte 1 = [code -8, pad]: low nibble 8, high nibble must be 0
+    assert int(p[1]) & 0xF0 == 0
+    np.testing.assert_array_equal(unpack_w4(p, 4, 0),
+                                  jnp.array([-8, -8, -8, 0], jnp.int8))
+
+
+def test_expand_w4_applies_group_shifts():
+    q = codes((6, 4), jax.random.PRNGKey(1))
+    shifts = jnp.array([0, 0, 2, 2, 4, 4], jnp.int8)
+    got = expand_w4(pack_w4(q, 0), shifts, 6, 0)
+    want = (q.astype(jnp.int32) << shifts[:, None].astype(jnp.int32))
+    np.testing.assert_array_equal(got, want.astype(jnp.int8))
+
+
+@pytest.mark.parametrize("n,group", [(32, 8), (17, 4), (5, 32), (48, 16)])
+def test_quantize_w4_invariants(n, group):
+    w = jax.random.normal(jax.random.PRNGKey(2), (n, 6)) * \
+        (2.0 ** jax.random.randint(jax.random.PRNGKey(3), (n, 1), -3, 3))
+    qt = quantize_w4(w, axis=0, group_size=group)
+    assert qt.size == n and qt.q.shape[0] == (n + 1) // 2
+    q4 = unpack_w4(qt.q, n, 0)
+    assert int(q4.min()) >= -8 and int(q4.max()) <= 7
+    s = np.asarray(qt.shifts)
+    assert s.shape == (n,) and s.min() >= 0 and s.max() <= W4_MAX_GROUP_SHIFT
+    # per-group constant shifts
+    for g in range(0, n, group):
+        assert len(set(s[g:g + group].tolist())) == 1
+    # expanded codes dequantize to within one group ULP of the float weights
+    eff = qt.scale * (2.0 ** s.astype(np.float64))[:, None]
+    err = np.abs(np.asarray(qt.expand(), np.float64) * qt.scale - np.asarray(w))
+    assert (err <= eff + 1e-9).all()
+
+
+def test_quantize_w4_zero_group():
+    qt = quantize_w4(jnp.zeros((8, 4)), axis=0, group_size=4)
+    np.testing.assert_array_equal(qt.expand(), jnp.zeros((8, 4), jnp.int8))
+
+
+# ------------------------------------------- rshift_round shift boundaries --
+
+def test_rshift_round_negative_acc_at_shift_boundaries():
+    """Regression: negative accumulators at the degenerate shifts. shift=0
+    must be the identity (no spurious +0.5 rounding term), shift=1 rounds
+    half UP (-3 -> -1), and shift=31 — the int32 limit — must collapse every
+    representable accumulator to 0 or -1 without overflowing the rounding
+    addend (1 << 30 is still a valid int32)."""
+    acc = jnp.array([-1, -2, -3, -(2 ** 31) + 1, -(2 ** 30), -1024, 1023],
+                    jnp.int32)
+    np.testing.assert_array_equal(rshift_round(acc, 0), acc)
+    np.testing.assert_array_equal(
+        rshift_round(jnp.array([-1, -2, -3, -4, -5], jnp.int32), 1),
+        [0, -1, -1, -2, -2])            # round-half-up on negatives
+    # shift=31: the rounding addend (1 << 30) is still a valid int32, and no
+    # negative accumulator can overflow it (min is -2^31 + 2^30 = -2^30)
+    got = np.asarray(rshift_round(acc, 31), np.int64)
+    want = np.floor((np.asarray(acc, np.int64) + (1 << 30)) / (1 << 31))
+    np.testing.assert_array_equal(got, want)
+    assert set(got.tolist()) <= {0, -1}
+
+
+# --------------------------------------------------- kernel bit-exactness --
+
+def w4ize(w, axis, group=4):
+    """Float weights -> (packed, shifts, expanded-int8-oracle)."""
+    qt = quantize_w4(w, axis=axis, group_size=group)
+    return qt.q, qt.shifts, qt.expand()
+
+
+def wf(shape, key, spread=True):
+    w = jax.random.normal(key, shape)
+    if spread:      # per-channel magnitude spread => non-trivial group shifts
+        w = w * (2.0 ** jax.random.randint(jax.random.PRNGKey(99),
+                                           (shape[-1],), -3, 2))
+    return w
+
+
+@pytest.mark.parametrize("shape", [
+    # (N, H, W, Cx, Cy, HK, groups)
+    (1, 8, 8, 8, 8, 3, 1),
+    (2, 7, 5, 6, 9, 3, 3),      # odd dims, grouped, odd Cx/g
+    (1, 6, 6, 5, 4, 1, 1),      # odd Cx: packed pad nibble in-flight
+])
+def test_conv_im2col_w4_bit_exact(shape):
+    n, h, w_, cx, cy, hk, g = shape
+    x = rnd_i8((n, h, w_, cx))
+    wp, ws, w8 = w4ize(wf((hk, hk, cx // g, cy), jax.random.PRNGKey(1)), 2)
+    got = conv2d_im2col(x, wp, groups=g, requant_shift=5, w_shifts=ws,
+                        block_co=4)
+    want = ref.conv2d_q8_ref(x, w8, groups=g, requant_shift=5)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        ref.conv2d_w4_ref(x, wp, ws, groups=g, requant_shift=5), want)
+
+
+def test_conv_im2col_w4_bias_relu_epilogue():
+    x = rnd_i8((1, 6, 6, 4))
+    wp, ws, w8 = w4ize(wf((3, 3, 4, 8), jax.random.PRNGKey(2)), 2)
+    b = jnp.arange(8, dtype=jnp.int32) * 50 - 100
+    got = conv2d_im2col(x, wp, b, requant_shift=4, act="relu", w_shifts=ws)
+    want = ref.conv2d_q8_ref(x, w8, b, requant_shift=4, act="relu")
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("hk", [3, 5])
+def test_depthwise_w4_bit_exact(hk):
+    x = rnd_i8((2, 8, 8, 8))
+    wp, ws, w8 = w4ize(wf((hk, hk, 8), jax.random.PRNGKey(3)), 0, group=2)
+    got = depthwise2d(x, wp, requant_shift=4, w_shifts=ws)
+    want = ref.depthwise2d_q8_ref(x, w8, requant_shift=4)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        ref.depthwise2d_w4_ref(x, wp, ws, requant_shift=4), want)
+
+
+def test_shift_conv_w4_bit_exact():
+    c, cy = 6, 8
+    x = rnd_i8((2, 7, 5, c))
+    shifts = np.array([[(i % 3) - 1, ((i * 2) % 3) - 1] for i in range(c)],
+                      np.int32)
+    wp, ws, w8 = w4ize(wf((c, cy), jax.random.PRNGKey(4)), 0, group=2)
+    got = shift_conv2d(x, shifts, wp, requant_shift=5, w_shifts=ws)
+    want = ref.shift_conv2d_q8_ref(x, shifts, w8, requant_shift=5)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        ref.shift_conv2d_w4_ref(x, shifts, wp, ws, requant_shift=5), want)
+
+
+@pytest.mark.parametrize("cx", [4, 5])        # odd Cx: pad channel sliced off
+def test_add_conv_w4_bit_exact(cx):
+    x = rnd_i8((1, 6, 6, cx))
+    wp, ws, w8 = w4ize(wf((3, 3, cx, 6), jax.random.PRNGKey(5)), 2)
+    got = add_conv2d(x, wp, requant_shift=3, w_preshift=1, w_shifts=ws,
+                     block_co=2)
+    want = ref.add_conv2d_q8_ref(x, w8, requant_shift=3, w_preshift=1)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        ref.add_conv2d_w4_ref(x, wp, ws, requant_shift=3, w_preshift=1), want)
+
+
+@pytest.mark.parametrize("mk", [(16, 24), (8, 17), (5, 33)])  # odd K: pad
+def test_matmul_w4_bit_exact(mk):
+    m, k = mk
+    a = rnd_i8((m, k))
+    wp, ws, w8 = w4ize(wf((k, 8), jax.random.PRNGKey(6)), 0, group=8)
+    got = matmul(a, wp, requant_shift=5, w_shifts=ws, bm=8, bn=8, bk=7)
+    want = ref.matmul_ref(a, w8, requant_shift=5)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        ref.matmul_w4_ref(a, wp, ws, requant_shift=5), want)
+
+
+def test_w4_requires_requant_shift():
+    wp, ws, _ = w4ize(wf((3, 3, 4, 8), jax.random.PRNGKey(7)), 2)
+    with pytest.raises(ValueError):
+        conv2d_im2col(rnd_i8((1, 6, 6, 4)), wp, w_shifts=ws)   # float path
+    with pytest.raises(ValueError):
+        matmul(rnd_i8((4, 8)), pack_w4(codes((8, 4)), 0),
+               w_shifts=jnp.zeros((8,), jnp.int8))
+
+
+# ------------------------------------------------------------ ops dispatch --
+
+def test_ops_w4_pallas_matches_xla():
+    """The ops layer routes w_shifts through both dispatch methods; they
+    must agree bit-for-bit (the ISSUE's pallas == xla == oracle gate)."""
+    x = rnd_i8((2, 8, 8, 8))
+    wp, ws, w8 = w4ize(wf((3, 3, 8, 8), jax.random.PRNGKey(8)), 2)
+    got_p = ops.conv2d(x, wp, requant_shift=5, w_shifts=ws, method="pallas")
+    got_x = ops.conv2d(x, wp, requant_shift=5, w_shifts=ws, method="xla")
+    np.testing.assert_array_equal(got_p, got_x)
+    np.testing.assert_array_equal(
+        got_p, ref.conv2d_q8_ref(x, w8, requant_shift=5))
+
+
+# ----------------------------------------------------------- qconv / graph --
+
+@pytest.mark.parametrize("prim", Primitives)
+def test_qconv_w4_matches_expanded_int8(prim):
+    """quantize_conv_params(bits=4) through qconv_apply must equal the SAME
+    parameters expanded to int8 QTensors — the packing changes data
+    movement, never arithmetic."""
+    spec = ConvSpec(primitive=prim, in_channels=8, out_channels=12,
+                    kernel_size=3, groups=4 if prim == "grouped" else 1)
+    p = init(KEY, spec)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 10, 10, 8)) * 0.5
+    xq = quantize(x)
+    out_fb = frac_bits_for(apply(p, x, spec))
+    qp4 = quantize_conv_params(p, spec, bits=4, group_size=4)
+    qp8 = {k: QTensor(v.expand(), v.frac_bits) if isinstance(v, QTensorW4)
+           else v for k, v in qp4.items()}
+    for method in ("pallas", "xla"):
+        y4 = qconv_apply(qp4, xq, spec, out_fb, method=method)
+        y8 = qconv_apply(qp8, xq, spec, out_fb, method=method)
+        np.testing.assert_array_equal(np.asarray(y4.q), np.asarray(y8.q))
+
+
+def test_quantize_conv_params_rejects_bad_bits():
+    spec = ConvSpec(primitive="standard", in_channels=4, out_channels=4)
+    with pytest.raises(ValueError):
+        quantize_conv_params(init(KEY, spec), spec, bits=2)
+
+
+@pytest.mark.parametrize("prim", ["standard", "dws", "shift", "add"])
+def test_graph_lower_w4_plan_pallas_matches_xla(prim):
+    cfg = CNNConfig(primitive=prim, widths=(8, 12), image_size=12)
+    params = init_cnn(cfg, jax.random.PRNGKey(1))
+    calib = jax.random.normal(jax.random.PRNGKey(2), (4, 12, 12, 3)) * 0.5
+    plan = lower(build_cnn_graph(cfg), params, calib, weight_bits=4,
+                 group_size=8)
+    assert any(isinstance(v, QTensorW4)
+               for node in plan.nodes if node.qparams
+               for v in node.qparams.values())
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 12, 12, 3)) * 0.5
+    got = CompiledPlan(plan, method="pallas")(x)
+    want = CompiledPlan(plan, method="xla")(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------- qmlp (W4) ---
+
+def test_qmlp_w4_bit_exact_vs_expanded_int8():
+    from repro.models import blocks as B
+    p = B.init_mlp(jax.random.PRNGKey(0), 32, 48, "silu", jnp.float32)
+    ps = {k: jnp.stack([v, v * 1.3]) for k, v in p.items()}   # 2-layer stack
+    qp4 = B.quantize_mlp_params(ps, bits=4, group_size=8)
+    h = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 32), jnp.float32)
+    for layer in range(2):
+        lp4 = jax.tree_util.tree_map(lambda a: a[layer], qp4)
+        lp8 = {k: QTensor(v.expand(), v.frac_bits) for k, v in lp4.items()}
+        y4p = B.qmlp(h, lp4, "silu", jnp.float32, method="pallas")
+        y4x = B.qmlp(h, lp4, "silu", jnp.float32, method="xla")
+        y8 = B.qmlp(h, lp8, "silu", jnp.float32, method="pallas")
+        np.testing.assert_array_equal(np.asarray(y4p), np.asarray(y4x))
+        np.testing.assert_array_equal(np.asarray(y4p), np.asarray(y8))
+
+
+# ----------------------------------------------------------- tune contracts --
+
+def test_cost_model_w4_halves_weight_bytes():
+    """The analytic model must score W4 weight traffic at half the int8
+    bytes — that's what re-ranks schedules toward fatter weight blocks."""
+    from repro.tune.runner import estimate_s
+    from repro.tune.space import sig_conv2d
+    sig = sig_conv2d(4, 16, 16, 8, 16, 3)
+    cfg = {"block_co": 8, "block_n": 1}
+    t8 = estimate_s(sig, cfg, dtype="int8")
+    t4 = estimate_s(sig, cfg, dtype="w4a8")
+    assert t4 < t8
+    # isolate the weight-traffic term: it is the only dtype-dependent part
+    from repro.tune.runner import _bytes_of, _wbytes_of
+    assert _wbytes_of("w4a8") == 0.5
+    assert _wbytes_of("int8") == 1.0
+    assert _bytes_of("w4a8") == 1       # activations stay int8
+
+
+def test_schema_v3_and_w4_dtype_in_space():
+    assert tune.SCHEMA_VERSION == 3
+    from repro.tune.space import candidates, sig_conv2d
+    sig = sig_conv2d(1, 12, 12, 8, 16, 3)
+    c8 = list(candidates(sig, dtype="int8"))
+    c4 = list(candidates(sig, dtype="w4a8"))
+    assert c4 == c8 and len(c4) > 0     # same knobs; ranking differs via cost

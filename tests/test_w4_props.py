@@ -1,0 +1,75 @@
+"""Property-based tests for the W4 nibble packing (hypothesis; optional dep
+like ``test_quantize.py`` — the deterministic sweeps in ``test_w4.py`` cover
+the same contracts where hypothesis is absent).
+
+Properties:
+  * pack -> unpack is the identity for ANY int4 code tensor — random shapes,
+    random pack axis, odd extents (pad nibble), all-negative (-8) and
+    all-saturated (+7) corners;
+  * quantize_w4 round-trips within one group ULP for ANY float weights and
+    group size, and its expanded codes always fit int8;
+  * rshift_round matches the float round-half-up model for ANY negative
+    accumulator at ANY shift in [0, 31].
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import (W4_MAX_GROUP_SHIFT, pack_w4, quantize_w4,
+                                 rshift_round, unpack_w4)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 33), st.integers(1, 5), st.integers(0, 1),
+       st.integers(0, 2 ** 32 - 1))
+def test_pack_unpack_roundtrip_random(n, m, axis, seed):
+    rng = np.random.default_rng(seed)
+    shape = (n, m) if axis == 0 else (m, n)
+    q = rng.integers(-8, 8, size=shape).astype(np.int8)
+    got = unpack_w4(pack_w4(jnp.asarray(q), axis), n, axis)
+    np.testing.assert_array_equal(np.asarray(got), q)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 9), st.sampled_from([-8, 7]))
+def test_pack_unpack_saturated_corners(n, v):
+    """The two's-complement corners: -8 (0b1000, the value with no positive
+    partner) and +7 must survive any extent, including the odd-pad path."""
+    q = jnp.full((n, 3), v, jnp.int8)
+    np.testing.assert_array_equal(unpack_w4(pack_w4(q, 0), n, 0), q)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 16), st.integers(0, 2 ** 32 - 1),
+       st.floats(0.01, 64.0))
+def test_quantize_w4_roundtrip_bounded(n, group, seed, spread):
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_normal((n, 4)) * spread).astype(np.float32)
+    qt = quantize_w4(jnp.asarray(w), axis=0, group_size=group)
+    q4 = np.asarray(unpack_w4(qt.q, n, 0))
+    assert q4.min() >= -8 and q4.max() <= 7
+    s = np.asarray(qt.shifts, np.int64)
+    assert s.min() >= 0 and s.max() <= W4_MAX_GROUP_SHIFT
+    w8 = np.asarray(qt.expand(), np.int64)
+    assert w8.min() >= -128 and w8.max() <= 127     # expanded codes fit int8
+    # floor quantization: one ULP at each group's effective scale, unless the
+    # group was clamped (its natural scale below the reachable window)
+    eff = qt.scale * (2.0 ** s)[:, None]
+    clamped = (q4 == -8) | (q4 == 7)
+    err = np.abs(w8.astype(np.float64) * qt.scale - w)
+    assert ((err <= eff + 1e-7) | clamped).all()
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(-(2 ** 31) + 2 ** 30, -1), st.integers(0, 31))
+def test_rshift_round_negative_accumulators(acc, shift):
+    """Round-half-up on any negative accumulator at any shift 0..31 —
+    including the boundary shifts 0 (identity), 1, and 31 (the rounding
+    addend 1 << 30 must not overflow int32 for any acc >= -2^30 - 2^30)."""
+    got = int(rshift_round(jnp.int32(acc), shift))
+    want = acc if shift == 0 else int(np.floor((acc + (1 << (shift - 1)))
+                                               / (1 << shift)))
+    assert got == want
