@@ -51,11 +51,11 @@ def make_requests(n, vocab, max_new, seed=0):
 def run_one(scheduler, cfg, params, args):
     eng = Engine(cfg, params, ServeConfig(max_batch=4, max_len=128,
                                           scheduler=scheduler))
-    t0 = time.time()
+    t0 = time.perf_counter()
     for r in make_requests(args.requests, cfg.vocab, args.max_new):
         eng.submit(r)
     done = eng.run_until_drained()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     for r in done[:4]:
         print(f"  req {r.uid}: +{len(r.out_tokens)} tokens "
               f"{r.out_tokens[:8]}...")

@@ -53,7 +53,7 @@ def main():
         params, state, om = apply_updates(params, grads, state, opt)
         return params, state, {"loss": loss, "acc": acc, **om}
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     skipped = 0
     for i in range(start, args.steps):
         batch = jax.tree_util.tree_map(jnp.asarray, ds.batch(i))
@@ -65,7 +65,7 @@ def main():
         if (i + 1) % 50 == 0:
             ckpt.save(i + 1, {"params": params, "opt": state})
             print(f"step {i+1:4d} loss {float(m['loss']):.4f} "
-                  f"acc {float(m['acc']):.3f} ({time.time()-t0:.0f}s)",
+                  f"acc {float(m['acc']):.3f} ({time.perf_counter()-t0:.0f}s)",
                   flush=True)
     ckpt.wait()
 

@@ -84,7 +84,8 @@ def check_markdown_links() -> list:
 # happens to cite them at check time (e.g. §Per-layer backs
 # benchmarks/layer_bench.py's section of the benchmark book).
 REQUIRED_SECTIONS = ("Roofline", "Perf", "Dry-run", "Serving", "Quantized",
-                     "Sub-byte", "Per-layer", "Throughput", "Observability")
+                     "Sub-byte", "Per-layer", "Throughput", "Observability",
+                     "Static-checks")
 
 
 def check_section_citations() -> list:

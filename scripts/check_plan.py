@@ -1,0 +1,187 @@
+"""Static-verification CLI: every ``repro.check`` pass over the committed
+artifacts, exercised plans, and the source tree — no kernel executes.
+
+Sections, in run order:
+
+1. **cache** — re-verify every entry of the committed tune cache
+   (``artifacts/tune_cache.json``) against the authoritative VMEM
+   footprint model (``repro.check.footprint.audit_cache``). An entry that
+   no longer fits the budget is an error (re-tune or drop it);
+   ``--write-audit`` persists the row-level result to
+   ``artifacts/tune_cache_audit.json``.
+2. **plans** — lower one small CNN plan per primitive x weight width
+   (int8 and W4A8) and run the dataflow abstract interpreter plus the
+   int32-accumulator / requant-shift range analysis over each. These are
+   the same passes ``CompiledPlan`` runs at build time; here they gate CI.
+3. **serve** — ``check_serve_config`` over the default LM ServeConfig
+   against a small ModelConfig, and ``check_cnn_serve_config`` over the
+   default CNN config.
+4. **lint** — the AST lint (``repro.check.astlint``) over ``src/`` and
+   ``scripts/``: Pallas index-map default-arg captures, ``time.time()``
+   elapsed timing, timers stopped before ``block_until_ready``.
+
+Exit status: non-zero on any error; ``--strict`` also promotes warnings
+(schedule degradation notes, submit-time serve-config hazards) to
+failures. Lowering needs a few seconds of CPU tracing — run with
+``JAX_PLATFORMS=cpu REPRO_PALLAS_INTERPRET=1`` on CI runners.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+AUDIT_PATH = os.path.join(ROOT, "artifacts", "tune_cache_audit.json")
+
+# one plan per primitive per weight width; small shapes keep lowering
+# cheap while still crossing every scale-chain / fusion rule
+PLAN_WIDTHS = (8, 12)
+PLAN_IMAGE = 16
+WEIGHT_BITS = (8, 4)
+
+
+def section(title: str):
+    print(f"\n== {title} " + "=" * max(0, 66 - len(title)))
+
+
+def run_cache(args, errors: List[str], warnings: List[str]) -> None:
+    from repro.check import audit_cache
+    from repro.check.footprint import summarize_audit
+    from repro.tune import cache as tune_cache
+
+    section("tune cache audit")
+    path = args.cache or tune_cache.default_cache_path()
+    if path is None or not os.path.exists(path):
+        print("no persistent tune cache found — nothing to audit")
+        return
+    rows = audit_cache(path)
+    summ = summarize_audit(rows)
+    print(f"cache: {path}")
+    print(f"entries={summ['entries']} feasible={summ['feasible']} "
+          f"warnings={summ['warnings']} notes={summ['notes']}")
+    for r in rows:
+        if not r["ok"]:
+            for e in r["errors"]:
+                errors.append(f"cache[{r['key']}]: {e}")
+        for w in r["warnings"]:
+            warnings.append(f"cache[{r['key']}]: {w}")
+        for n in r["notes"]:
+            print(f"note: {r['key']}: {n}")
+    if args.write_audit:
+        blob = {"cache": os.path.relpath(path, ROOT),
+                "summary": summ, "rows": rows}
+        with open(AUDIT_PATH, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {os.path.relpath(AUDIT_PATH, ROOT)}")
+
+
+def run_plans(errors: List[str], warnings: List[str]) -> None:
+    import jax
+
+    from repro.check import overflow_errors
+    from repro.check.dataflow import check_plan
+    from repro.check.overflow import check_plan_overflow
+    from repro.core import Primitives
+    from repro.graph import build_cnn_graph, lower
+    from repro.models.convnet import CNNConfig, init_cnn
+
+    section("plan dataflow + overflow")
+    for prim in Primitives:
+        cfg = CNNConfig(primitive=prim, widths=PLAN_WIDTHS,
+                        image_size=PLAN_IMAGE)
+        params = init_cnn(cfg, jax.random.PRNGKey(1))
+        calib = jax.random.normal(jax.random.PRNGKey(2),
+                                  (4, PLAN_IMAGE, PLAN_IMAGE, 3)) * 0.5
+        graph = build_cnn_graph(cfg)
+        for bits in WEIGHT_BITS:
+            plan = lower(graph, params, calib, weight_bits=bits)
+            diags = check_plan(plan)
+            for d in diags:
+                line = f"plan[{prim}/w{bits}] {d.node}: {d.message}"
+                (errors if d.level == "error" else warnings).append(line)
+            bounds = check_plan_overflow(plan)
+            for e in overflow_errors(bounds):
+                errors.append(f"plan[{prim}/w{bits}] {e}")
+            worst = min(b.headroom_bits for b in bounds)
+            flags = sum(1 for d in diags if d.level == "error") \
+                + len(overflow_errors(bounds))
+            print(f"{prim:>8s}/w{bits}: nodes={len(plan.nodes)} "
+                  f"bounds={len(bounds)} min_headroom={worst:.1f}b "
+                  f"{'FAIL' if flags else 'ok'}")
+
+
+def run_serve(args, errors: List[str], warnings: List[str]) -> None:
+    from repro.check import check_cnn_serve_config, check_serve_config
+    from repro.configs.base import ModelConfig
+    from repro.serve.cnn import CNNServeConfig
+    from repro.serve.engine import ServeConfig
+
+    section("serve configs")
+    cfg = ModelConfig(name="check-tiny", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                      vocab=256)
+    checks = [
+        ("lm/default", check_serve_config(ServeConfig(), cfg,
+                                          strict=args.strict)),
+        ("lm/int8-kv", check_serve_config(
+            ServeConfig(precision="int8", kv_cache="int8"), cfg,
+            strict=args.strict)),
+        ("cnn/default", check_cnn_serve_config(CNNServeConfig())),
+    ]
+    for name, errs in checks:
+        print(f"{name}: {'FAIL' if errs else 'ok'}")
+        errors.extend(f"serve[{name}]: {e}" for e in errs)
+
+
+def run_lint(errors: List[str]) -> None:
+    from repro.check.astlint import lint_paths
+
+    section("ast lint")
+    findings = lint_paths([os.path.join(ROOT, "src"),
+                           os.path.join(ROOT, "scripts")])
+    print(f"findings={len(findings)}")
+    for f in findings:
+        errors.append(f"lint: {f.path}:{f.line}: [{f.rule}] {f.message}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--strict", action="store_true",
+                    help="promote warnings to failures and enable "
+                         "submit-time serve-config checks")
+    ap.add_argument("--cache", default=None,
+                    help="tune cache path (default: committed cache)")
+    ap.add_argument("--write-audit", action="store_true",
+                    help=f"write row-level cache audit to "
+                         f"{os.path.relpath(AUDIT_PATH, ROOT)}")
+    ap.add_argument("--skip-plans", action="store_true",
+                    help="skip plan lowering (fast artifact-only mode)")
+    args = ap.parse_args(argv)
+
+    errors: List[str] = []
+    warnings: List[str] = []
+    run_cache(args, errors, warnings)
+    if not args.skip_plans:
+        run_plans(errors, warnings)
+    run_serve(args, errors, warnings)
+    run_lint(errors)
+
+    section("summary")
+    for w in warnings:
+        print(f"warning: {w}")
+    for e in errors:
+        print(f"error: {e}")
+    fail = bool(errors) or (args.strict and bool(warnings))
+    print(f"{len(errors)} error(s), {len(warnings)} warning(s)"
+          + (" [strict]" if args.strict else ""))
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

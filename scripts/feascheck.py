@@ -6,9 +6,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 
-t0 = time.time()
+t0 = time.perf_counter()
 mesh = jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
-print("mesh built", time.time() - t0, "s; ndev", len(jax.devices()))
+print("mesh built", time.perf_counter() - t0, "s; ndev", len(jax.devices()))
 
 
 def step(x, w1, w2):
@@ -32,12 +32,12 @@ with mesh:
         ),
         out_shardings=NamedSharding(mesh, P(("pod", "data"), None)),
     )
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered = f.lower(x, w1, w2)
-    print("lower:", time.time() - t0, "s")
-    t0 = time.time()
+    print("lower:", time.perf_counter() - t0, "s")
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    print("compile:", time.time() - t0, "s")
+    print("compile:", time.perf_counter() - t0, "s")
     ma = compiled.memory_analysis()
     print("memory_analysis:", ma)
     ca = compiled.cost_analysis()

@@ -45,7 +45,7 @@ def main():
                 if done(cell):
                     print(f"[have] {cell}", flush=True)
                     continue
-                t0 = time.time()
+                t0 = time.perf_counter()
                 r = subprocess.run(
                     [sys.executable, "-m", "repro.launch.dryrun",
                      "--arch", arch, "--shape", shape, "--multi-pod", mp,
@@ -64,7 +64,7 @@ def main():
                                        error=f"subprocess rc={r.returncode}: "
                                        + (r.stderr or "")[-400:]),
                                   open(p, "w"), indent=1)
-                print(f"{msg}  [{time.time()-t0:.0f}s]", flush=True)
+                print(f"{msg}  [{time.perf_counter()-t0:.0f}s]", flush=True)
 
 
 if __name__ == "__main__":

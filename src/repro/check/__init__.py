@@ -1,0 +1,68 @@
+"""repro.check — static feasibility, overflow, and dataflow verification.
+
+Everything in this package reasons about kernels, plans, and schedules
+WITHOUT executing any kernel: the analyses read block shapes, dtype widths,
+quantized weight codes, and graph structure, and return hard verdicts. It
+is the feasibility oracle the paper's workflow needs explicitly — the
+microTVM exemplar hand-picks per-conv strategies "because certain strategy
+combos exceed available memory", and CMSIS-NN's q7/q15 kernels are only
+correct because accumulator ranges and shift amounts are proven safe ahead
+of time. Four passes:
+
+* :mod:`~repro.check.footprint` — the single authoritative per-kernel
+  VMEM/scratch footprint model (shared with the ``repro.tune`` cost model)
+  plus :func:`check_schedule`, the hard per-schedule feasibility verdict,
+  and the tune-cache audit.
+* :mod:`~repro.check.overflow` — int32 accumulator and requant-shift range
+  analysis per quantized plan node, from the actual weight codes.
+* :mod:`~repro.check.dataflow` — an abstract interpreter over the graph IR
+  checking shape/grid coverage, dtype flow (int8 conv -> gap), and fusion
+  legality.
+* :mod:`~repro.check.astlint` — an AST lint encoding the repo's historic
+  bug classes (default-arg index-map captures, wall-clock timing,
+  timers stopped before ``block_until_ready``).
+
+``validate_plan`` bundles dataflow + overflow into the one call
+``graph.executor.CompiledPlan`` runs at build; ``scripts/check_plan.py``
+is the CLI over all of it. See EXPERIMENTS.md §Static-checks.
+"""
+from __future__ import annotations
+
+from .config import (check_cnn_serve_config, check_serve_config,
+                     kv_cache_bytes)
+from .dataflow import Diagnostic, check_plan
+from .footprint import (Footprint, Verdict, audit_cache, check_schedule,
+                        kernel_footprint, parse_cache_key, vmem_budget)
+from .overflow import (INT32_MAX, NodeBound, check_plan_overflow,
+                       check_requant_shift, overflow_errors)
+
+
+class CheckError(ValueError):
+    """A static check failed; ``str(exc)`` lists every diagnostic."""
+
+    def __init__(self, header: str, messages):
+        self.messages = tuple(messages)
+        body = "\n".join(f"  - {m}" for m in self.messages)
+        super().__init__(f"{header}\n{body}" if self.messages else header)
+
+
+def validate_plan(plan) -> None:
+    """Build-time plan verification: dataflow legality + accumulator/shift
+    safety from the actual weight codes. Raises :class:`CheckError` listing
+    every failure; returns None when the plan is statically safe."""
+    errors = [d.message for d in check_plan(plan) if d.level == "error"]
+    errors += overflow_errors(check_plan_overflow(plan))
+    if errors:
+        raise CheckError(
+            "plan failed static verification (repro.check.validate_plan; "
+            "pass validate=False to bypass):", errors)
+
+
+__all__ = [
+    "CheckError", "Diagnostic", "Footprint", "INT32_MAX", "NodeBound",
+    "Verdict", "audit_cache", "check_cnn_serve_config", "check_plan",
+    "check_plan_overflow", "check_requant_shift", "check_schedule",
+    "check_serve_config",
+    "kernel_footprint", "kv_cache_bytes", "overflow_errors",
+    "parse_cache_key", "validate_plan", "vmem_budget",
+]

@@ -1,0 +1,211 @@
+"""AST lint for the repo's historic bug classes — stdlib ``ast`` only.
+
+Each rule encodes a bug a previous PR fixed by hand, so the class can
+never silently come back:
+
+* **R1 index-map-default-arg** — a Pallas ``BlockSpec`` index map (inline
+  lambda or a named local function) must not take default arguments. The
+  PR-5 ``_n=n_co`` capture made an index map's arity lie about the grid:
+  Pallas calls index maps with exactly one positional argument per grid
+  axis, so a defaulted trailing parameter silently absorbs a grid axis and
+  every block lands at index 0 of it — numerically wrong, no error raised.
+* **R2 wall-clock-elapsed** — an elapsed-time subtraction must not be
+  computed from ``time.time()``; PR 6 moved every timing path to monotonic
+  ``time.perf_counter()`` (wall clock steps under NTP adjustment, so
+  ``time() - t0`` intervals can go negative or jump). Reading ``time.time``
+  for an absolute timestamp is fine; only ``Sub`` expressions over it are
+  flagged.
+* **R3 timer-stop-before-sync** — inside one function, a
+  ``jax.block_until_ready`` call after the LAST timer-stop subtraction
+  means the timer measured JAX async-dispatch enqueue time, not device
+  time (the fused-kernel speedups this repo reports would be fiction).
+  The sync must precede the stop.
+
+Run as a module::
+
+    python -m repro.check.astlint [paths...]     # default: src/ scripts/
+
+Exit status 1 iff any finding. The rules are tuned for zero false
+positives on this repo: default-arg lambdas OUTSIDE BlockSpec calls (cost
+lambdas, tree maps) and absolute wall-clock stamps (``submit_wall_t``,
+trace export) are specifically not flagged.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import sys
+from pathlib import Path
+from typing import Iterator, List
+
+
+@dataclasses.dataclass
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _has_defaults(args: ast.arguments) -> bool:
+    return bool(args.defaults) or bool(args.kw_defaults)
+
+
+def _is_attr_call(call: ast.Call, name: str) -> bool:
+    f = call.func
+    return (isinstance(f, ast.Attribute) and f.attr == name) or \
+        (isinstance(f, ast.Name) and f.id == name)
+
+
+def _local_funcs(tree: ast.AST) -> dict:
+    """name -> arguments for every def / ``name = lambda`` in the file."""
+    out = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = (node.args, node.lineno)
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Lambda):
+            out[node.targets[0].id] = (node.value.args, node.lineno)
+    return out
+
+
+def _index_map_args(call: ast.Call) -> Iterator[ast.expr]:
+    """The candidate index-map expressions of one BlockSpec(...) call:
+    every positional arg after the block-shape tuple plus any
+    ``index_map=`` keyword."""
+    for a in call.args[1:]:
+        yield a
+    for kw in call.keywords:
+        if kw.arg == "index_map":
+            yield kw.value
+
+
+def _rule_index_map_defaults(path: str, tree: ast.AST) -> List[Finding]:
+    funcs = _local_funcs(tree)
+    out = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _is_attr_call(node, "BlockSpec")):
+            continue
+        for im in _index_map_args(node):
+            if isinstance(im, ast.Lambda) and _has_defaults(im.args):
+                out.append(Finding(
+                    path, im.lineno, "index-map-default-arg",
+                    "BlockSpec index map takes default arguments; a "
+                    "defaulted parameter absorbs a grid axis and the "
+                    "block indexing silently degenerates (PR-5 _n=n_co "
+                    "bug class)"))
+            elif isinstance(im, ast.Name) and im.id in funcs \
+                    and _has_defaults(funcs[im.id][0]):
+                out.append(Finding(
+                    path, im.lineno, "index-map-default-arg",
+                    f"BlockSpec index map {im.id!r} (defined line "
+                    f"{funcs[im.id][1]}) takes default arguments; a "
+                    "defaulted parameter absorbs a grid axis (PR-5 "
+                    "_n=n_co bug class)"))
+    return out
+
+
+def _is_time_time(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "time"
+            and isinstance(node.func.value, ast.Name)
+            and node.func.value.id == "time")
+
+
+def _is_monotonic_stamp(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in ("perf_counter", "monotonic"))
+
+
+def _rule_wall_clock_elapsed(path: str, tree: ast.AST) -> List[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub) \
+                and any(_is_time_time(n) for n in ast.walk(node)):
+            out.append(Finding(
+                path, node.lineno, "wall-clock-elapsed",
+                "elapsed time computed from time.time(); wall clock steps "
+                "under NTP adjustment — use time.perf_counter() "
+                "(monotonic) for intervals"))
+    return out
+
+
+def _rule_stop_before_sync(path: str, tree: ast.AST) -> List[Finding]:
+    out = []
+    scopes = [n for n in ast.walk(tree)
+              if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    scopes.append(tree)                     # module level counts as a scope
+    for scope in scopes:
+        # direct statements of this scope only — nested defs are their own
+        # timing scopes (benchmark closures time themselves)
+        nested = {id(n) for s in ast.walk(scope)
+                  if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))
+                  and s is not scope for n in ast.walk(s)}
+        local = [n for n in ast.walk(scope)
+                 if id(n) not in nested and n is not scope]
+        stops = [n.lineno for n in local
+                 if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Sub)
+                 and any(_is_monotonic_stamp(x) for x in ast.walk(n))]
+        if not stops:
+            continue
+        last_stop = max(stops)
+        for n in local:
+            if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute) \
+                    and n.func.attr == "block_until_ready" \
+                    and n.lineno > last_stop:
+                out.append(Finding(
+                    path, n.lineno, "timer-stop-before-sync",
+                    f"block_until_ready after the last timer stop (line "
+                    f"{last_stop}); the timer measured async-dispatch "
+                    "enqueue time, not device time — sync before stopping"))
+    return out
+
+
+RULES = (_rule_index_map_defaults, _rule_wall_clock_elapsed,
+         _rule_stop_before_sync)
+
+
+def lint_file(path) -> List[Finding]:
+    src = Path(path).read_text()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        return [Finding(str(path), e.lineno or 0, "syntax-error", str(e))]
+    out: List[Finding] = []
+    for rule in RULES:
+        out.extend(rule(str(path), tree))
+    return out
+
+
+def lint_paths(paths) -> List[Finding]:
+    files: List[Path] = []
+    for p in map(Path, paths):
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    out: List[Finding] = []
+    for f in files:
+        out.extend(lint_file(f))
+    return out
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    paths = argv or ["src", "scripts"]
+    findings = lint_paths(paths)
+    for f in findings:
+        print(f)
+    n_files = sum(1 for p in map(Path, paths)
+                  for _ in (p.rglob("*.py") if p.is_dir() else [p]))
+    print(f"astlint: {len(findings)} finding(s) over {n_files} file(s) "
+          f"[{', '.join(r.__name__.replace('_rule_', '') for r in RULES)}]")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,104 @@
+"""Serve-config static checks: enum/range validation and the KV-cache
+budget, computed before any parameter is touched.
+
+``Engine.__init__`` already hard-raises on illegal enum combos; this module
+is the same contract as a pure function returning EVERY violation at once
+(CI and ``scripts/check_plan.py`` want the full list, not the first raise),
+plus the numeric checks the constructor skips: positive batch/length/bucket
+knobs and the resident KV budget ``kv_cache_bytes`` against an optional
+device budget.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+SCHEDULERS = ("continuous", "static")
+PRECISIONS = ("float", "int8", "int8-xla", "w4a8")
+KV_CACHES = ("float", "int8")
+ATTN_IMPLS = ("full", "flash", "flash_tri")
+
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}
+
+
+def kv_cache_bytes(cfg, scfg) -> int:
+    """Resident KV budget of the ONE live slotted cache:
+    ``layers * K&V * max_batch * max_len * n_kv_heads * head_dim * width``
+    (int8 kv adds the per-(position, head) f32 scale sideband)."""
+    width = 1 if scfg.kv_cache == "int8" else \
+        _DTYPE_BYTES.get(cfg.compute_dtype, 4)
+    per_pos = cfg.n_kv_heads * cfg.head_dim * width
+    if scfg.kv_cache == "int8":
+        per_pos += cfg.n_kv_heads * 4           # f32 scale per (pos, head)
+    return cfg.n_layers * 2 * scfg.max_batch * scfg.max_len * per_pos
+
+
+def check_serve_config(scfg, cfg=None, *, hbm_budget: Optional[int] = None,
+                       strict: bool = True) -> List[str]:
+    """Every violation of a :class:`~repro.serve.engine.ServeConfig`
+    (optionally against a :class:`~repro.configs.base.ModelConfig`).
+    Empty list == the config constructs and fits.
+
+    ``strict=False`` is the constructor-grade subset ``Engine.__init__``
+    enforces; strict mode (the CLI/CI default) additionally flags configs
+    that only fail later at submit time (a prefill bucket floor no prompt
+    can fit under the per-slot KV cap)."""
+    errs: List[str] = []
+    if scfg.scheduler not in SCHEDULERS:
+        errs.append(f"unknown scheduler: {scfg.scheduler!r} "
+                    f"(choose from {SCHEDULERS})")
+    if scfg.precision not in PRECISIONS:
+        errs.append(f"unknown precision: {scfg.precision!r} "
+                    f"(choose from {PRECISIONS})")
+    if scfg.kv_cache not in KV_CACHES:
+        errs.append(f"unknown kv_cache: {scfg.kv_cache!r} "
+                    f"(choose from {KV_CACHES})")
+    if scfg.attn_impl not in ATTN_IMPLS:
+        errs.append(f"unknown attn_impl: {scfg.attn_impl!r} "
+                    f"(choose from {ATTN_IMPLS})")
+    for knob in ("max_batch", "max_len", "prefill_bucket"):
+        v = getattr(scfg, knob)
+        if not isinstance(v, int) or v < 1:
+            errs.append(f"{knob} must be a positive int, got {v!r}")
+    if scfg.temperature < 0:
+        errs.append(f"temperature must be >= 0, got {scfg.temperature!r}")
+    if scfg.kv_cache == "int8" and scfg.scheduler != "continuous":
+        errs.append("kv_cache='int8' needs scheduler='continuous' (the "
+                    "static path decodes off the float prefill cache)")
+
+    if cfg is not None:
+        if cfg.family == "encdec" and scfg.scheduler == "continuous":
+            errs.append("continuous batching needs slotted caches; encdec "
+                        "is not slotted — use scheduler='static'")
+        if scfg.precision != "float" and (
+                cfg.family in ("ssm", "hybrid", "encdec")
+                or cfg.moe is not None):
+            errs.append(f"precision={scfg.precision!r} quantizes dense FFN "
+                        "matmuls; moe/ssm/hybrid/encdec are unsupported")
+        if scfg.kv_cache == "int8" and cfg.family in ("ssm", "hybrid",
+                                                      "encdec"):
+            errs.append("kv_cache='int8' covers attention-family dense KV "
+                        "caches only (no ssm / hybrid / encdec)")
+        if strict and not cfg.sub_quadratic() and cfg.family != "encdec" \
+                and scfg.prefill_bucket > scfg.max_len:
+            errs.append(f"prefill_bucket={scfg.prefill_bucket} exceeds "
+                        f"max_len={scfg.max_len}; every bucket would "
+                        "overflow the per-slot KV capacity")
+        if hbm_budget is not None and cfg.family not in ("ssm",):
+            kv = kv_cache_bytes(cfg, scfg)
+            if kv > hbm_budget:
+                errs.append(
+                    f"resident KV cache needs {kv / 2**20:.1f} MiB "
+                    f"({cfg.n_layers} layers x 2 x {scfg.max_batch} slots "
+                    f"x {scfg.max_len} positions), over the "
+                    f"{hbm_budget / 2**20:.1f} MiB budget — shrink "
+                    "max_batch/max_len or use kv_cache='int8'")
+    return errs
+
+
+def check_cnn_serve_config(scfg) -> List[str]:
+    """Violations of a :class:`~repro.serve.cnn.CNNServeConfig`."""
+    errs: List[str] = []
+    if not isinstance(scfg.max_batch, int) or scfg.max_batch < 1:
+        errs.append(f"max_batch must be a positive int, got "
+                    f"{scfg.max_batch!r}")
+    return errs

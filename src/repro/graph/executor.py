@@ -79,14 +79,25 @@ class CompiledPlan:
     expressible, oracle fallback elsewhere). Schedules come from the
     ``repro.tune`` cache/fallback, resolved once per compile and recorded in
     ``self.node_configs``.
+
+    Every plan is statically verified at build (``repro.check``: dataflow
+    legality + int32 accumulator/requant-shift safety from the actual
+    weight codes) and every resolved schedule gets a hard VMEM feasibility
+    verdict at first trace — ``validate=False`` opts out of both (e.g. for
+    deliberately adversarial plans under test).
     """
 
-    def __init__(self, plan: Plan, *, method: str = "auto", jit: bool = True):
+    def __init__(self, plan: Plan, *, method: str = "auto", jit: bool = True,
+                 validate: bool = True):
         if method not in ("pallas", "xla", "auto"):
             raise ValueError(f"unknown method {method!r}; expected "
                              "'pallas', 'xla' or 'auto'")
+        if validate:
+            from repro.check import validate_plan
+            validate_plan(plan)
         self.plan = plan
         self.method = method
+        self.validate = validate
         self.node_configs: Dict[str, dict] = {}
         self.traces = 0                  # python-side compile counter
         self._fn = jax.jit(self._forward) if jit else self._forward
@@ -113,23 +124,38 @@ class CompiledPlan:
         dt = _node_dtype(node)
         if p in ("standard", "grouped"):
             g = spec.groups if p == "grouped" else 1
-            cfg = {"main": tune.get_config(
-                tune.sig_conv2d(n, h, w, c, spec.out_channels,
-                                spec.kernel_size, g), dt)}
+            sigs = {"main": tune.sig_conv2d(n, h, w, c, spec.out_channels,
+                                            spec.kernel_size, g)}
         elif p == "dws":
-            cfg = {"dw": tune.get_config(
-                       tune.sig_depthwise2d(n, h, w, c, spec.kernel_size),
-                       dt),
-                   "pw": tune.get_config(
-                       tune.sig_conv2d(n, h, w, c, spec.out_channels, 1, 1),
-                       dt)}
+            sigs = {"dw": tune.sig_depthwise2d(n, h, w, c, spec.kernel_size),
+                    "pw": tune.sig_conv2d(n, h, w, c, spec.out_channels,
+                                          1, 1)}
         elif p == "shift":
-            cfg = {"main": tune.get_config(
-                tune.sig_shift_conv2d(n, h, w, c, spec.out_channels), dt)}
+            sigs = {"main": tune.sig_shift_conv2d(n, h, w, c,
+                                                  spec.out_channels)}
         else:                            # add
-            cfg = {"main": tune.get_config(
-                tune.sig_add_conv2d(n, h, w, c, spec.out_channels,
-                                    spec.kernel_size), dt)}
+            sigs = {"main": tune.sig_add_conv2d(n, h, w, c,
+                                                spec.out_channels,
+                                                spec.kernel_size)}
+        cfg = {stage: tune.get_config(sig, dt) for stage, sig in sigs.items()}
+        if self.validate:
+            # hard feasibility gate on every resolved schedule: the tune
+            # layer prunes its own candidates, but a stale/hand-edited cache
+            # entry could still smuggle in an oversized block
+            from repro.check import CheckError
+            from repro.check.footprint import check_schedule
+            bad = []
+            for stage, sig in sigs.items():
+                verdict = check_schedule(sig, cfg[stage], dt)
+                if not verdict.ok:
+                    bad.extend(f"{node.name}/{stage} "
+                               f"[{sig.kernel}/{sig.key()}]: {e}"
+                               for e in verdict.errors)
+            if bad:
+                raise CheckError(
+                    f"infeasible kernel schedule for node {node.name!r} "
+                    "(repro.check.check_schedule; pass validate=False to "
+                    "bypass):", bad)
         self.node_configs[node.name] = cfg
         return cfg
 

@@ -72,6 +72,21 @@ def _tuned(sig_fn, *dims, dtype):
     return tune.get_config(sig_fn(*dims), str(dtype))
 
 
+def _check_explicit(sig_fn, *dims, config, dtype):
+    """An explicitly-passed schedule gets the same hard feasibility verdict
+    the tuner and the executor enforce (``repro.check.check_schedule``) —
+    a readable error here beats a Mosaic VMEM failure three layers down.
+    Returns the config unchanged."""
+    from repro.check import CheckError
+    from repro.check.footprint import check_schedule
+    v = check_schedule(sig_fn(*dims), config, str(dtype))
+    if not v.ok:
+        raise CheckError(
+            f"infeasible schedule for {v.kernel}/{v.sig_key} "
+            f"[{v.dtype}] {v.config}:", v.errors)
+    return config
+
+
 def _w4_dtype(x, w_shifts):
     """Tune-space dtype key: W4-packed weights get their own signature
     dtype ('w4a8') so v2-era int8 cache entries are never misapplied to the
@@ -98,11 +113,14 @@ def conv2d(x, w, bias=None, *, groups: int = 1, method: str = "pallas",
             return ref.conv2d_q8_ref(x, w, bias, groups=groups,
                                      requant_shift=requant_shift, act=act)
         return ref.conv2d_ref(x, w, bias, groups=groups, act=act)
+    from repro.tune import sig_conv2d
+    n, h, wd, cx = x.shape
     if config is None:
-        from repro.tune import sig_conv2d
-        n, h, wd, cx = x.shape
         config = _tuned(sig_conv2d, n, h, wd, cx, w.shape[-1], w.shape[0],
                         groups, dtype=_w4_dtype(x, w_shifts))
+    else:
+        _check_explicit(sig_conv2d, n, h, wd, cx, w.shape[-1], w.shape[0],
+                        groups, config=config, dtype=_w4_dtype(x, w_shifts))
     return _conv_pallas(x, w, bias, groups=groups, requant_shift=requant_shift,
                         act=act, interpret=use_interpret(), config=config,
                         w_shifts=w_shifts)
@@ -123,12 +141,15 @@ def depthwise2d(x, w_dw, *, method: str = "pallas",
             return ref.depthwise2d_q8_ref(x, w_dw, requant_shift=requant_shift,
                                           act=act)
         return ref.depthwise2d_ref(x, w_dw, act=act)
+    from repro.tune import sig_depthwise2d
+    n, h, wd, c = x.shape
+    hk = w_dw.shape[1] if w_shifts is not None else w_dw.shape[0]
     if config is None:
-        from repro.tune import sig_depthwise2d
-        n, h, wd, c = x.shape
-        hk = w_dw.shape[1] if w_shifts is not None else w_dw.shape[0]
         config = _tuned(sig_depthwise2d, n, h, wd, c, hk,
                         dtype=_w4_dtype(x, w_shifts))
+    else:
+        _check_explicit(sig_depthwise2d, n, h, wd, c, hk,
+                        config=config, dtype=_w4_dtype(x, w_shifts))
     return _dw_pallas(x, w_dw, requant_shift=requant_shift, act=act,
                       interpret=use_interpret(), config=config,
                       w_shifts=w_shifts)
@@ -160,11 +181,14 @@ def shift_conv2d(x, shifts, w_pw, bias=None, *, method: str = "pallas",
                              "only supported on the quantized path")
         return ref.shift_conv2d_ref(x, shifts, w_pw, max_shift=max_shift,
                                     act=act)
+    from repro.tune import sig_shift_conv2d
+    n, h, wd, c = x.shape
     if config is None:
-        from repro.tune import sig_shift_conv2d
-        n, h, wd, c = x.shape
         config = _tuned(sig_shift_conv2d, n, h, wd, c, w_pw.shape[-1],
                         dtype=_w4_dtype(x, w_shifts))
+    else:
+        _check_explicit(sig_shift_conv2d, n, h, wd, c, w_pw.shape[-1],
+                        config=config, dtype=_w4_dtype(x, w_shifts))
     return _shift_pallas(x, shifts, w_pw, bias, requant_shift=requant_shift,
                          act=act, interpret=use_interpret(), config=config,
                          w_shifts=w_shifts)
@@ -198,11 +222,14 @@ def add_conv2d(x, w, bias=None, *, method: str = "pallas",
                              "requant_shift are only supported on the "
                              "quantized path")
         return ref.add_conv2d_ref(x, w, act=act)
+    from repro.tune import sig_add_conv2d
+    n, h, wd, cx = x.shape
     if config is None:
-        from repro.tune import sig_add_conv2d
-        n, h, wd, cx = x.shape
         config = _tuned(sig_add_conv2d, n, h, wd, cx, w.shape[-1], w.shape[0],
                         dtype=_w4_dtype(x, w_shifts))
+    else:
+        _check_explicit(sig_add_conv2d, n, h, wd, cx, w.shape[-1], w.shape[0],
+                        config=config, dtype=_w4_dtype(x, w_shifts))
     return _add_pallas(x, w, bias, requant_shift=requant_shift,
                        x_preshift=x_preshift, w_preshift=w_preshift, act=act,
                        interpret=use_interpret(), config=config,
@@ -219,11 +246,14 @@ def maxpool2d(x, *, window: int = 2, stride: Optional[int] = None,
     if method == "xla":
         _check_no_config(method, config)
         return ref.maxpool2d_ref(x, window=window, stride=stride)
+    from repro.tune import sig_maxpool2d
+    n, h, wd, c = x.shape
     if config is None:
-        from repro.tune import sig_maxpool2d
-        n, h, wd, c = x.shape
         config = _tuned(sig_maxpool2d, n, h, wd, c, window, stride or window,
                         dtype=x.dtype)
+    else:
+        _check_explicit(sig_maxpool2d, n, h, wd, c, window, stride or window,
+                        config=config, dtype=x.dtype)
     return _pool_pallas(x, window=window, stride=stride,
                         interpret=use_interpret(), config=config)
 
@@ -279,10 +309,13 @@ def causal_conv1d(x, w, *, method: str = "auto",
     _count_dispatch("causal_conv1d", method)
     if method == "xla":
         return ref.causal_conv1d_ref(x, w)
+    from repro.tune import sig_causal_conv1d
+    b, l, d = x.shape
     if config is None:
-        from repro.tune import sig_causal_conv1d
-        b, l, d = x.shape
         config = _tuned(sig_causal_conv1d, b, l, d, w.shape[0], dtype=x.dtype)
+    else:
+        _check_explicit(sig_causal_conv1d, b, l, d, w.shape[0],
+                        config=config, dtype=x.dtype)
     from repro.tune import default_config
     base = default_config("causal_conv1d")
     return _causal_conv1d_diff(x, w,
@@ -304,14 +337,18 @@ def matmul(a, b, *, method: str = "pallas", requant_shift: Optional[int] = None,
             return ref.matmul_w4_ref(a, b, w_shifts,
                                      requant_shift=requant_shift, act=act)
         return ref.matmul_ref(a, b, requant_shift=requant_shift, act=act)
+    from repro.tune import sig_matmul
+    explicit = config is not None or any(v is not None for v in (bm, bn, bk))
     if config is None and None in (bm, bn, bk):
-        from repro.tune import sig_matmul
         config = _tuned(sig_matmul, a.shape[0], a.shape[1], b.shape[1],
                         dtype=_w4_dtype(a, w_shifts))
     config = dict(config or {})
     for name, val in (("bm", bm), ("bn", bn), ("bk", bk)):
         if val is not None:
             config[name] = val
+    if explicit:
+        _check_explicit(sig_matmul, a.shape[0], a.shape[1], b.shape[1],
+                        config=config, dtype=_w4_dtype(a, w_shifts))
     return _mm_pallas(a, b, requant_shift=requant_shift, act=act,
                       interpret=use_interpret(), config=config,
                       w_shifts=w_shifts)

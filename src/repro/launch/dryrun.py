@@ -191,15 +191,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         mesh = make_production_mesh(multi_pod=multi_pod)
         fn, args, in_sh, donate, rules, cfg2, _, out_sh = build_cell(
             arch, shape_name, mesh, rules_override)
-        t0 = time.time()
+        t0 = time.perf_counter()
         with mesh, use_rules(rules):
             jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                           donate_argnums=donate)
             lowered = jfn.lower(*args)
-            t_lower = time.time() - t0
-            t0 = time.time()
+            t_lower = time.perf_counter() - t0
+            t0 = time.perf_counter()
             compiled = lowered.compile()
-            t_compile = time.time() - t0
+            t_compile = time.perf_counter() - t0
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
         pod_size = 256 if multi_pod else 1 << 30
@@ -286,7 +286,7 @@ def main():
                         if json.load(f).get("status") in ("ok", "skipped"):
                             print(f"[skip-done] {cell}")
                             continue
-                t0 = time.time()
+                t0 = time.perf_counter()
                 rec = run_cell(arch, shape, mp, args.out, args.tag)
                 status = rec.get("status")
                 extra = ""
@@ -295,7 +295,7 @@ def main():
                              f"peak={rec['memory']['peak_bytes']/2**30:.2f}GiB/dev")
                 elif status == "error":
                     extra = " " + rec.get("error", "")[:160]
-                print(f"[{status}] {cell} ({time.time()-t0:.0f}s){extra}",
+                print(f"[{status}] {cell} ({time.perf_counter()-t0:.0f}s){extra}",
                       flush=True)
 
 

@@ -74,8 +74,11 @@ class CNNEngine:
     def __init__(self, plan: CompiledPlan,
                  scfg: Optional[CNNServeConfig] = None):
         scfg = scfg or CNNServeConfig()
-        if scfg.max_batch < 1:
-            raise ValueError(f"max_batch must be >= 1, got {scfg.max_batch}")
+        from repro.check.config import check_cnn_serve_config
+        bad = check_cnn_serve_config(scfg)
+        if bad:
+            raise ValueError("invalid CNNServeConfig:\n"
+                             + "\n".join(f"  - {m}" for m in bad))
         self.plan = plan
         self.scfg = scfg
         self.queue: "queue.Queue[ImageRequest]" = queue.Queue()

@@ -174,6 +174,15 @@ class Engine:
                 raise NotImplementedError(
                     "ServeConfig.precision='int8' quantizes dense FFN "
                     "matmuls; moe/ssm/hybrid/encdec configs are unsupported")
+        # constructor-grade static checks beyond the enum combos above:
+        # positive batch/length/bucket knobs, non-negative temperature
+        # (repro.check.config; scripts/check_plan.py runs the strict set)
+        from repro.check.config import check_serve_config
+        bad = check_serve_config(scfg, cfg, strict=False)
+        if bad:
+            raise ValueError("invalid ServeConfig:\n"
+                             + "\n".join(f"  - {m}" for m in bad))
+        if scfg.precision != "float":
             # PTQ the FFN stack once; the quantized tree rides along in
             # params["layers"] so the layer scan slices it like any weight.
             # w4a8: same tree, but nibble-packed QTensorW4 leaves

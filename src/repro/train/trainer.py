@@ -114,11 +114,11 @@ class Trainer:
         step = start_step
         while step < self.loop.total_steps:
             batch = next(loader)
-            t0 = time.time()
+            t0 = time.perf_counter()
             new_params, new_opt, metrics = self.step_fn(params, opt_state, batch)
             loss = float(metrics["loss"])
             gnorm = float(metrics["grad_norm"])
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             self.monitor.beat(dt)
             if not (jnp.isfinite(loss) and jnp.isfinite(gnorm)):
                 # bad step: drop the update, keep going (donated bufs force

@@ -29,6 +29,8 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.check.footprint import (element_bytes, kernel_footprint,
+                                   vmem_budget, weight_bytes)
 from repro.core.energy import TPUv5e
 from repro.core.primitives import ConvSpec
 from repro.kernels.common import cdiv
@@ -72,22 +74,17 @@ def _util(block: int, tile: int = LANE) -> float:
     return block / full
 
 
-def _bytes_of(dtype: str) -> int:
-    # "w4a8": the *activation* element width (int8) — the nibble-packed
-    # weight side is priced separately via _wbytes_of
-    return {"int8": 1, "uint8": 1, "w4a8": 1,
-            "bfloat16": 2, "float16": 2}.get(dtype, 4)
+# Element/weight widths live in check.footprint now (the single source of
+# truth the hard verifier shares); the old local names stay as aliases.
+_bytes_of = element_bytes
+_wbytes_of = weight_bytes
 
 
-def _wbytes_of(dtype: str) -> float:
-    """Bytes per *weight* element: 0.5 for nibble-packed W4, else the
-    element width. This is the term the W4 schedules are reranked by —
-    halved filter-block traffic shifts the traffic/compute balance point."""
-    return 0.5 if dtype == "w4a8" else float(_bytes_of(dtype))
-
-
-def _vmem_cost(footprint_bytes: float) -> float:
-    return VMEM_PENALTY if footprint_bytes > TPU.vmem_bytes else 1.0
+def _vmem_cost(fp) -> float:
+    """Soft penalty from the SAME footprint model ``check.check_schedule``
+    enforces as a hard verdict — the cost model and the verifier can never
+    disagree about what fits."""
+    return VMEM_PENALTY if fp.total_bytes > vmem_budget("tpu") else 1.0
 
 
 def _tiles(sig: ShapeSig, eff: Dict[str, int]):
@@ -106,11 +103,13 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
     images (the Fig-3 reuse quantity grows from Cx*BCO to BN*Cx*BCO MACs
     per weight byte), while spatial tiles shrink the per-step image block —
     and with it the VMEM footprint — at the cost of halo re-reads.
+
+    Per-step block byte counts come from ``check.footprint.kernel_footprint``
+    — the same model ``check_schedule`` turns into a hard verdict — so a
+    schedule the verifier rejects is exactly a schedule this model prices
+    with the ``VMEM_PENALTY`` multiplier.
     """
     k = sig.kernel
-    eb = _bytes_of(dtype)
-    wb = _wbytes_of(dtype)                           # 0.5 for W4-packed weights
-    ab = 4                                           # int32/f32 accumulator
 
     if k == "conv2d":
         n, h, w = sig.get("n"), sig.get("h"), sig.get("w")
@@ -125,13 +124,11 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
                         in_channels=ci, out_channels=co, kernel_size=hk,
                         groups=g, use_bias=False)
         flops = 2.0 * n * spec.mac_count(w)
-        img = bn * (bh + hk) * (bw + hk) * cxg * eb  # halo-padded tile block
-        wts = hk * hk * cxg * bco * wb
-        out = bn * bh * bw * bco * eb
-        traffic = steps * (img + wts + out)
-        vmem = img + wts + bn * bh * bw * bco * ab
+        fp = kernel_footprint(sig, eff, dtype)
+        t = dict(fp.terms)
+        traffic = steps * (t["img"] + t["wts"] + t["out"])
         compute = flops / (TPU.peak_bf16_flops * _util(bco) * _util(cxg))
-        return (_vmem_cost(vmem)
+        return (_vmem_cost(fp)
                 * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
 
     if k == "depthwise2d":
@@ -142,11 +139,11 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
         bn, bh, bw, sp_steps = _tiles(sig, eff)
         steps = sp_steps * (c // bc)
         flops = 2.0 * n * h * w * c * hk * hk
-        img = bn * (bh + hk) * (bw + hk) * bc * eb
-        traffic = steps * (img + hk * hk * bc * wb + bn * bh * bw * bc * eb)
-        vmem = img + bn * bh * bw * bc * ab
+        fp = kernel_footprint(sig, eff, dtype)
+        t = dict(fp.terms)
+        traffic = steps * (t["img"] + t["wts"] + t["out"])
         compute = flops / (TPU.peak_bf16_flops * VPU_DERATE * _util(bc))
-        return (_vmem_cost(vmem)
+        return (_vmem_cost(fp)
                 * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
 
     if k == "shift_conv2d":
@@ -157,11 +154,11 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
         bn, bh, bw, sp_steps = _tiles(sig, eff)
         steps = sp_steps * (co // bco)
         flops = 2.0 * n * h * w * c * co
-        img = bn * (bh + 2) * (bw + 2) * c * eb      # all channels per step
-        traffic = steps * (img + c * bco * wb + bn * bh * bw * bco * eb)
-        vmem = img + c * bco * wb + bn * bh * bw * bco * ab
+        fp = kernel_footprint(sig, eff, dtype)
+        t = dict(fp.terms)
+        traffic = steps * (t["img"] + t["wts"] + t["out"])
         compute = flops / (TPU.peak_bf16_flops * _util(bco) * _util(c))
-        return (_vmem_cost(vmem)
+        return (_vmem_cost(fp)
                 * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
 
     if k == "add_conv2d":
@@ -172,14 +169,14 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
         bn, bh, bw, sp_steps = _tiles(sig, eff)
         steps = sp_steps * (co // bco)
         # |a-b| broadcast: the (BN*BH*BW, Cx, BCO) intermediate is the VMEM
-        # hog — the spatial tile is what keeps it bounded
+        # hog — the spatial tile is what keeps it bounded (the footprint's
+        # acc term)
         flops = 3.0 * n * h * w * ci * co * hk * hk  # sub+abs+add per tap
-        img = bn * (bh + hk) * (bw + hk) * ci * eb
-        traffic = steps * (img + hk * hk * ci * bco * wb
-                           + bn * bh * bw * bco * eb)
-        vmem = img + bn * bh * bw * ci * bco * ab + bn * bh * bw * bco * ab
+        fp = kernel_footprint(sig, eff, dtype)
+        t = dict(fp.terms)
+        traffic = steps * (t["img"] + t["wts"] + t["out"])
         compute = flops / (TPU.peak_bf16_flops * VPU_DERATE * _util(bco, SUBLANE))
-        return (_vmem_cost(vmem)
+        return (_vmem_cost(fp)
                 * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
 
     if k == "maxpool2d":
@@ -190,11 +187,11 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
         bn, bh, bw, sp_steps = _tiles(sig, eff)
         steps = sp_steps * (c // bc)
         flops = 1.0 * n * hout * wout * c * win * win    # VPU compares
-        img = bn * ((bh - 1) * s + win) * ((bw - 1) * s + win) * bc * eb
-        traffic = steps * (img + bn * bh * bw * bc * eb)
-        vmem = img + bn * bh * bw * bc * eb
+        fp = kernel_footprint(sig, eff, dtype)
+        t = dict(fp.terms)
+        traffic = steps * (t["img"] + t["out"])
         compute = flops / (TPU.peak_bf16_flops * VPU_DERATE * _util(bc))
-        return (_vmem_cost(vmem)
+        return (_vmem_cost(fp)
                 * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
 
     if k == "causal_conv1d":
@@ -203,11 +200,11 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
         bl, bc = eff["block_l"], eff["block_c"]
         steps = b * (l // bl) * (d // bc)
         flops = 2.0 * b * l * d * kk
-        blk = 2 * bl * bc * eb + kk * bc * eb        # current + lookahead block
-        traffic = steps * (blk + bl * bc * eb)
-        vmem = blk + bl * bc * ab
+        fp = kernel_footprint(sig, eff, dtype)
+        t = dict(fp.terms)
+        traffic = steps * (t["img"] + t["wts"] + t["out"])
         compute = flops / (TPU.peak_bf16_flops * VPU_DERATE * _util(bc))
-        return (_vmem_cost(vmem)
+        return (_vmem_cost(fp)
                 * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
 
     if k == "matmul":
@@ -217,12 +214,14 @@ def estimate_s(sig: ShapeSig, config: Dict[str, int], dtype: str) -> float:
         gi, gj, gk = -(-m // bm), -(-n // bn), -(-kk // bk)
         steps = gi * gj * gk
         flops = 2.0 * m * n * kk
-        traffic = (steps * (bm * bk * eb + bk * bn * wb)
-                   + gi * gj * bm * bn * eb)
-        vmem = bm * bk * eb + bk * bn * wb + bm * bn * ab
+        fp = kernel_footprint(sig, eff, dtype)
+        t = dict(fp.terms)
+        # A/B blocks stream every step; the output block lands once per
+        # (i, j) after the k-axis accumulation
+        traffic = steps * (t["a"] + t["b"]) + gi * gj * t["out"]
         compute = flops / (TPU.peak_bf16_flops
                            * _util(bn) * _util(bk) * _util(bm, SUBLANE))
-        return (_vmem_cost(vmem)
+        return (_vmem_cost(fp)
                 * (compute + traffic / TPU.hbm_bw + steps * GRID_STEP_OVERHEAD_S))
 
     raise ValueError(f"unknown kernel {k!r}")

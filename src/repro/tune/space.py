@@ -217,19 +217,28 @@ def candidates(sig: ShapeSig, dtype: str = "float32") -> Iterator[Dict[str, int]
     tiled-grid kernels additionally sweep (block_n, block_h, block_w)
     variants on top of their default channel blocking.
     """
+    from repro.check.footprint import check_schedule
+
     k = sig.kernel
     seen = set()
     out: List[Dict[str, int]] = []
     pow2 = _POW2_BLOCKS_INT8 if _int8(dtype) else _POW2_BLOCKS
     mm = _MM_BLOCKS_INT8 if _int8(dtype) else _MM_BLOCKS
 
-    def emit(cfg: Dict[str, int]):
+    def emit(cfg: Dict[str, int], prune: bool = True):
         key = tuple(sorted(effective_config(sig, cfg).items()))
-        if key not in seen:
-            seen.add(key)
-            out.append(cfg)
+        if key in seen:
+            return
+        # static feasibility gate: a schedule the hard verifier rejects is
+        # never measured (the soft VMEM_PENALTY only ranked it last before)
+        if prune and not check_schedule(sig, cfg, dtype).ok:
+            return
+        seen.add(key)
+        out.append(cfg)
 
-    emit(default_config(k))
+    # the default seed schedule is always a member — it is the fallback the
+    # kernels ran before the tuner existed, so the space is never empty
+    emit(default_config(k), prune=False)
 
     if k == "conv2d":
         for bco in pow2:
