@@ -1,19 +1,33 @@
-"""§Serving benchmark: static-drain vs continuous slot scheduling.
+"""§Serving benchmark: static-drain vs continuous slot scheduling, plus
+paged-vs-contiguous KV backing on a shared-prefix workload.
 
-Workload: fixed-length prompts with SKEWED ``max_new_tokens`` (one long
-request per ``max_batch`` group, interleaved) — the regime where a static
-batch drains at the pace of its slowest member while continuous batching
-keeps retiring short sequences and refilling their slots. Prompt lengths
-are fixed so both schedulers compile the same prefill shape and the
-comparison isolates scheduling, not jit caching.
+Workload 1 (scheduling): fixed-length prompts with SKEWED
+``max_new_tokens`` (one long request per ``max_batch`` group, interleaved)
+— the regime where a static batch drains at the pace of its slowest member
+while continuous batching keeps retiring short sequences and refilling
+their slots. Prompt lengths are fixed so both schedulers compile the same
+prefill shape and the comparison isolates scheduling, not jit caching.
 
-Emits (EXPERIMENTS.md §Serving):
+Workload 2 (paged KV, EXPERIMENTS.md §Paged-KV): every prompt shares one
+long prefix (a system prompt) followed by a short unique suffix. The two
+engines get the SAME KV byte budget — contiguous spends it on max_batch
+fixed (max_len,) slots; paged spends it on a page pool, which (a) fits
+~2x the concurrent requests because resident bytes track actual lengths,
+and (b) serves prefix hits by prefilling only the suffix. The paired run
+asserts bit-identical greedy streams (exact=1 in the gain row — the
+perf gate's exactness guard), mean-concurrency ratio >= 1.5x, and lower
+mean TTFT for paged.
+
+Emits:
   serve/static,<us/token>,tok_s=...;occupancy=...;ttft_ms=...;rounds=...
   serve/continuous,<us/token>,...
   serve/speedup,0.0,continuous_over_static=<x>
+  serve/prefix/contiguous,<us/token>,tok_s=...;conc=...;ttft_ms=...
+  serve/prefix/paged,<us/token>,tok_s=...;conc=...;ttft_ms=...;hit_rate=...
+  serve/prefix/gain,0.0,concurrent_ratio=...;ttft_speedup=...;exact=1
 
-Both engines are compile-warmed on a small drain and their stats reset
-before the timed run. REPRO_BENCH_FAST=1 shrinks the workload for CI.
+Engines are compile-warmed on a small drain and their stats reset before
+the timed run. REPRO_BENCH_FAST=1 shrinks the workloads for CI.
 """
 from __future__ import annotations
 
@@ -30,6 +44,11 @@ from repro.serve import Engine, Request, ServeConfig
 from .common import FAST, emit
 
 MAX_BATCH, MAX_LEN, PLEN = 4, 64, 8
+# §Paged-KV workload: 32-token shared system prefix + 8-token unique
+# suffix, 8 greedy tokens each; 8-position pages so the prefix spans 4
+# hashable full blocks ((plen-1)//bs caps at 4 — the last prompt token is
+# always recomputed for first-position logits)
+SYS_LEN, SFX_LEN, PFX_NEW, PFX_BS = 32, 8, 8, 8
 
 
 def tiny_cfg():
@@ -69,6 +88,59 @@ def run_sched(scheduler: str, cfg, params, n, long_new, short_new):
     return toks / dt, toks, dt, eng.stats
 
 
+def prefix_workload(n: int, seed: int, max_new: int):
+    """n requests sharing one SYS_LEN-token prefix, unique SFX_LEN suffixes."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, 256, (SYS_LEN,)).astype(np.int32)
+    return [Request(
+        uid=i,
+        prompt=np.concatenate(
+            [sys_prompt, rng.integers(0, 256, (SFX_LEN,)).astype(np.int32)]),
+        max_new_tokens=max_new) for i in range(n)]
+
+
+def run_prefix(kv_layout: str, cfg, params, n: int):
+    """Drain the shared-prefix workload under one KV layout.
+
+    Both layouts get the same KV byte budget: contiguous holds MAX_BATCH
+    slots of MAX_LEN positions; paged holds the equivalent pool
+    (MAX_BATCH * MAX_LEN // PFX_BS usable pages + the garbage page) but
+    offers 2x the slots — paged requests only pin pages for positions they
+    actually occupy, so more of them fit in the same bytes.
+    """
+    if kv_layout == "paged":
+        scfg = ServeConfig(
+            max_batch=2 * MAX_BATCH, max_len=MAX_LEN, scheduler="continuous",
+            prefill_bucket=PLEN, kv_layout="paged", kv_block_size=PFX_BS,
+            kv_num_blocks=MAX_BATCH * MAX_LEN // PFX_BS + 1)
+    else:
+        scfg = ServeConfig(max_batch=MAX_BATCH, max_len=MAX_LEN,
+                           scheduler="continuous", prefill_bucket=PLEN)
+    eng = Engine(cfg, params, scfg)
+    # warmup compiles every shape the timed run hits: full-prompt prefill
+    # (the miss), suffix-only prefill + page gather (the hits), paged
+    # decode, and the page-boundary growth at position SYS_LEN + SFX_LEN
+    for r in prefix_workload(MAX_BATCH, seed=99, max_new=2):
+        eng.submit(r)
+    eng.run_until_drained()
+    eng.reset_stats()
+    reqs = prefix_workload(n, seed=0, max_new=PFX_NEW)
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    assert len(done) == n and toks == n * PFX_NEW
+    st = eng.stats
+    # mean resident requests per decode round — the concurrency the budget
+    # actually bought (occupancy is normalised by each engine's own slots)
+    conc = st["occupancy"] * scfg.max_batch
+    streams = {r.uid: tuple(r.out_tokens) for r in done}
+    return dict(tok_s=toks / dt, toks=toks, dt=dt, st=st, conc=conc,
+                streams=streams)
+
+
 def main():
     cfg = tiny_cfg()
     params = api.init_params(cfg, jax.random.PRNGKey(0))
@@ -83,6 +155,33 @@ def main():
              f"ttft_ms={st['ttft_avg_s'] * 1e3:.1f};rounds={st['decode_steps']}")
     emit("serve/speedup", 0.0,
          f"continuous_over_static={tok_s['continuous'] / tok_s['static']:.2f}x")
+
+    # §Paged-KV: budget-matched shared-prefix comparison. The gain row's
+    # exact=1 is the perf gate's exactness guard — it only survives if the
+    # paged greedy streams stay bit-identical to contiguous.
+    n_pfx = 8 if FAST else 16
+    res = {lay: run_prefix(lay, cfg, params, n_pfx)
+           for lay in ("contiguous", "paged")}
+    assert res["paged"]["streams"] == res["contiguous"]["streams"], \
+        "paged greedy streams diverged from contiguous"
+    conc_ratio = res["paged"]["conc"] / res["contiguous"]["conc"]
+    ttft_speedup = (res["contiguous"]["st"]["ttft_avg_s"]
+                    / max(res["paged"]["st"]["ttft_avg_s"], 1e-9))
+    assert conc_ratio >= 1.5, \
+        f"paged concurrency {conc_ratio:.2f}x under the 1.5x budget claim"
+    assert ttft_speedup > 1.0, \
+        f"prefix hits did not lower mean TTFT ({ttft_speedup:.2f}x)"
+    for lay in ("contiguous", "paged"):
+        r = res[lay]
+        extra = (f"tok_s={r['tok_s']:.1f};conc={r['conc']:.2f};"
+                 f"ttft_ms={r['st']['ttft_avg_s'] * 1e3:.1f}")
+        if lay == "paged":
+            extra += f";hit_rate={r['st']['prefix_hit_rate']:.2f}"
+        emit(f"serve/prefix/{lay}", r["dt"] * 1e6 / max(r["toks"], 1), extra)
+    emit("serve/prefix/gain", 0.0,
+         f"paged_prefix_toks={res['paged']['tok_s']:.1f};"
+         f"concurrent_ratio={conc_ratio:.2f};ttft_speedup={ttft_speedup:.2f};"
+         f"exact=1")
 
 
 if __name__ == "__main__":

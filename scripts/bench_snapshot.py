@@ -53,7 +53,8 @@ SECTIONS = ("kernels", "quant", "layers", "throughput", "serving")
 # derived keys where bigger is better; everything else numeric (and the us
 # column) is treated as lower-better latency when compared
 HIGHER_BETTER = ("tok_s", "images_per_s", "loop_images_per_s", "speedup",
-                 "continuous_over_static", "reuse_gain")
+                 "continuous_over_static", "reuse_gain", "concurrent_ratio",
+                 "ttft_speedup", "hit_rate", "paged_prefix_toks")
 
 
 # --------------------------------------------------------------------------
@@ -140,6 +141,13 @@ def collect_headline(sections: Dict[str, dict]) -> Dict[str, float]:
     sp = srows.get("serve/speedup")
     if sp and "continuous_over_static" in sp["derived"]:
         h["serve_speedup"] = sp["derived"]["continuous_over_static"]
+    # §Paged-KV: paged tok/s on the shared-prefix workload plus the two
+    # budget-matched ratio claims (exact flag rides in via collect_exact)
+    gain = srows.get("serve/prefix/gain")
+    if gain:
+        for key in ("paged_prefix_toks", "concurrent_ratio", "ttft_speedup"):
+            if key in gain["derived"]:
+                h[key] = gain["derived"][key]
     for rname, row in sections.get("throughput", {}).get("rows", {}).items():
         if rname.endswith("/e2e") and "speedup" in row["derived"]:
             prim = rname.split("/")[1]

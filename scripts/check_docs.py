@@ -83,9 +83,9 @@ def check_markdown_links() -> list:
 # Anchors the harness/doc contract depends on even when no source line
 # happens to cite them at check time (e.g. §Per-layer backs
 # benchmarks/layer_bench.py's section of the benchmark book).
-REQUIRED_SECTIONS = ("Roofline", "Perf", "Dry-run", "Serving", "Quantized",
-                     "Sub-byte", "Per-layer", "Throughput", "Observability",
-                     "Static-checks")
+REQUIRED_SECTIONS = ("Roofline", "Perf", "Dry-run", "Serving", "Paged-KV",
+                     "Quantized", "Sub-byte", "Per-layer", "Throughput",
+                     "Observability", "Static-checks")
 
 
 def check_section_citations() -> list:

@@ -132,6 +132,8 @@ def run_serve(args, errors: List[str], warnings: List[str]) -> None:
         ("lm/int8-kv", check_serve_config(
             ServeConfig(precision="int8", kv_cache="int8"), cfg,
             strict=args.strict)),
+        ("lm/paged", check_serve_config(
+            ServeConfig(kv_layout="paged"), cfg, strict=args.strict)),
         ("cnn/default", check_cnn_serve_config(CNNServeConfig())),
     ]
     for name, errs in checks:

@@ -15,20 +15,39 @@ from typing import List, Optional
 SCHEDULERS = ("continuous", "static")
 PRECISIONS = ("float", "int8", "int8-xla", "w4a8")
 KV_CACHES = ("float", "int8")
+KV_LAYOUTS = ("contiguous", "paged")
 ATTN_IMPLS = ("full", "flash", "flash_tri")
 
 _DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}
 
 
+def paged_num_blocks(scfg) -> int:
+    """Resolved pool size: ``kv_num_blocks`` when set, else the contiguous
+    capacity equivalent — ``max_batch * (max_len // block_size)`` usable
+    pages plus the reserved garbage page 0."""
+    if getattr(scfg, "kv_num_blocks", None):
+        return scfg.kv_num_blocks
+    return scfg.max_batch * (scfg.max_len // scfg.kv_block_size) + 1
+
+
 def kv_cache_bytes(cfg, scfg) -> int:
-    """Resident KV budget of the ONE live slotted cache:
-    ``layers * K&V * max_batch * max_len * n_kv_heads * head_dim * width``
-    (int8 kv adds the per-(position, head) f32 scale sideband)."""
+    """Resident KV budget of the ONE live decode cache.
+
+    Contiguous layout: ``layers * K&V * max_batch * max_len * n_kv_heads *
+    head_dim * width`` (int8 kv adds the per-(position, head) f32 scale
+    sideband). Paged layout: ``layers * K&V * num_blocks * block_size``
+    positions instead — memory scales with the pool, not ``max_batch *
+    max_len`` — plus the (max_batch, max_len / block_size) int32 block
+    table."""
     width = 1 if scfg.kv_cache == "int8" else \
         _DTYPE_BYTES.get(cfg.compute_dtype, 4)
     per_pos = cfg.n_kv_heads * cfg.head_dim * width
     if scfg.kv_cache == "int8":
         per_pos += cfg.n_kv_heads * 4           # f32 scale per (pos, head)
+    if getattr(scfg, "kv_layout", "contiguous") == "paged":
+        positions = paged_num_blocks(scfg) * scfg.kv_block_size
+        table = 4 * scfg.max_batch * (scfg.max_len // scfg.kv_block_size)
+        return cfg.n_layers * 2 * positions * per_pos + table
     return cfg.n_layers * 2 * scfg.max_batch * scfg.max_len * per_pos
 
 
@@ -65,7 +84,46 @@ def check_serve_config(scfg, cfg=None, *, hbm_budget: Optional[int] = None,
         errs.append("kv_cache='int8' needs scheduler='continuous' (the "
                     "static path decodes off the float prefill cache)")
 
+    layout = getattr(scfg, "kv_layout", "contiguous")
+    if layout not in KV_LAYOUTS:
+        errs.append(f"unknown kv_layout: {layout!r} "
+                    f"(choose from {KV_LAYOUTS})")
+    elif layout == "paged":
+        if scfg.scheduler != "continuous":
+            errs.append("kv_layout='paged' needs scheduler='continuous' "
+                        "(the static path decodes off the prefill cache)")
+        bs = scfg.kv_block_size
+        if not isinstance(bs, int) or bs < 1:
+            errs.append(f"kv_block_size must be a positive int, got {bs!r}")
+        elif isinstance(scfg.max_len, int) and scfg.max_len % bs:
+            errs.append(f"kv_block_size={bs} must divide max_len="
+                        f"{scfg.max_len}: the gathered block-table view "
+                        "must span exactly max_len positions for paged "
+                        "decode to be bit-identical to contiguous")
+        nb = scfg.kv_num_blocks
+        if nb is not None and (not isinstance(nb, int) or nb < 2):
+            errs.append(f"kv_num_blocks must be an int >= 2 (page 0 is the "
+                        f"reserved garbage page), got {nb!r}")
+        elif isinstance(bs, int) and bs >= 1 \
+                and isinstance(scfg.max_len, int) \
+                and not scfg.max_len % bs:
+            usable = paged_num_blocks(scfg) - 1
+            if usable < scfg.max_len // bs:
+                errs.append(
+                    f"kv_num_blocks={nb} leaves {usable} usable pages, "
+                    f"fewer than the {scfg.max_len // bs} one request at "
+                    f"max_len={scfg.max_len} needs — the engine could "
+                    "deadlock growing a lone sequence")
+            elif strict and usable < scfg.max_batch:
+                errs.append(
+                    f"kv_num_blocks={nb} leaves {usable} usable pages, "
+                    f"fewer than max_batch={scfg.max_batch} minimum-length "
+                    "requests (one page each) — slots can never all fill")
+
     if cfg is not None:
+        if layout == "paged" and cfg.family in ("ssm", "hybrid", "encdec"):
+            errs.append("kv_layout='paged' covers attention-family dense "
+                        "KV caches only (no ssm / hybrid / encdec)")
         if cfg.family == "encdec" and scfg.scheduler == "continuous":
             errs.append("continuous batching needs slotted caches; encdec "
                         "is not slotted — use scheduler='static'")

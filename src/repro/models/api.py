@@ -41,7 +41,7 @@ def loss_fn(cfg: ModelConfig, *, attn_impl="full", remat="full"):
 
 
 def prefill_fn(cfg: ModelConfig, max_len: int, *, attn_impl="flash",
-               precision: str = "float"):
+               precision: str = "float", attn_block_k: int = 256):
     if cfg.family == "encdec":
         if precision != "float":
             raise NotImplementedError("integer-FFN serve: encdec unsupported")
@@ -53,7 +53,28 @@ def prefill_fn(cfg: ModelConfig, max_len: int, *, attn_impl="flash",
             return T.prefill(params, batch["tokens"], cfg, max_len,
                              embeds=batch.get("embeds"), attn_impl=attn_impl,
                              prompt_lens=batch.get("prompt_lens"),
-                             precision=precision)
+                             precision=precision, attn_block_k=attn_block_k)
+    return fn
+
+
+def prefill_suffix_fn(cfg: ModelConfig, *, attn_impl="flash",
+                      attn_block_k: int = 256, precision: str = "float"):
+    """Prefix-cache hit path: run only the suffix of a prompt against
+    gathered prefix K/V (see transformer.prefill_suffix). The prefix length
+    is taken from ``batch["prefix_k"].shape[2]`` — jit once per
+    (prefix_len, suffix_bucket) pair."""
+    if cfg.family in ("ssm", "hybrid", "encdec"):
+        raise NotImplementedError(
+            "prefill_suffix covers attention-family dense layer stacks only")
+
+    def fn(params, batch):
+        pk = batch["prefix_k"]
+        return T.prefill_suffix(params, batch["tokens"], pk,
+                                batch["prefix_v"], pk.shape[2], cfg,
+                                suffix_lens=batch["suffix_lens"],
+                                attn_impl=attn_impl,
+                                attn_block_k=attn_block_k,
+                                precision=precision)
     return fn
 
 
@@ -170,6 +191,147 @@ def cache_free_slot(live: dict, slot) -> dict:
     """Retire a slot by zeroing its length — the per-slot attention mask
     makes the stale K/V unreachable, so no data movement is needed."""
     return dict(live, len=live["len"].at[slot].set(0))
+
+
+# ----------------------------------------------------------- paged KV pool --
+#
+# The paged layout replaces per-slot (max_len,) KV rows with a shared pool
+# of fixed-size pages: pools (L, num_blocks, block_size, Hkv, Dh) per K and
+# V, plus one (B, max_len // block_size) int32 block table shared by every
+# layer. Page 0 is RESERVED as the garbage page: it is never allocated, so
+# a retired slot's zeroed table row scatters its (masked, never-read)
+# decode writes there without touching any live page. The engine owns
+# allocation host-side (serve.BlockPool) and re-uploads the table between
+# decode rounds, exactly like the host-side ``len`` vector.
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                     block_size: int, max_len: int, dtype=jnp.bfloat16,
+                     kv: str = "float"):
+    """A paged decode cache: K/V pools + per-slot block tables + lengths.
+
+    ``kv="int8"`` stores pool pages as int8 codes plus per-(position, head)
+    f32 scale pools (``k_scale``/``v_scale``, (L, NB, bs, Hkv)) — the same
+    per-token quantization as the contiguous int8 slot cache, so gathered
+    pages dequantize bit-identically. Attention-family dense caches only;
+    ``block_size`` must divide ``max_len`` (the gathered view then has
+    length exactly ``max_len``, which is what makes paged decode attention
+    bit-identical to the contiguous path — see attention.gather_kv_blocks).
+    """
+    if kv not in ("float", "int8"):
+        raise ValueError(f"init_paged_cache: kv must be 'float' or 'int8', "
+                         f"got {kv!r}")
+    if cfg.family in ("ssm", "hybrid", "encdec"):
+        raise NotImplementedError(
+            "paged KV cache only covers attention-family dense caches")
+    if max_len % block_size:
+        raise ValueError(f"init_paged_cache: block_size={block_size} must "
+                         f"divide max_len={max_len}")
+    if num_blocks < 2:
+        raise ValueError("init_paged_cache: need >= 2 blocks (page 0 is the "
+                         "reserved garbage page)")
+    L, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    shape = (L, num_blocks, block_size, hkv, dh)
+    if kv == "int8":
+        cache = {"k": jnp.zeros(shape, jnp.int8),
+                 "v": jnp.zeros(shape, jnp.int8),
+                 "k_scale": jnp.ones(shape[:-1], jnp.float32),
+                 "v_scale": jnp.ones(shape[:-1], jnp.float32)}
+    else:
+        cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    cache["block_table"] = jnp.zeros((batch, max_len // block_size),
+                                     jnp.int32)
+    cache["len"] = jnp.zeros((batch,), jnp.int32)
+    return cache
+
+
+def _scatter_pages(live: dict, key: str, seg, ids):
+    """Write a (L, n*bs, ...) contiguous segment into pages ``ids`` of pool
+    leaf ``key`` (quantizing on the way in when the pool is int8)."""
+    out = {}
+    n, bs = len(ids), live["k"].shape[2]
+    if "k_scale" in live and key in ("k", "v"):
+        qseg, sseg = A.quantize_kv(seg)           # (L,n*bs,Hkv,D)->(L,n*bs,Hkv)
+        L = qseg.shape[0]
+        out[key] = live[key].at[:, ids].set(
+            qseg.reshape((L, n, bs) + qseg.shape[2:]))
+        out[key + "_scale"] = live[key + "_scale"].at[:, ids].set(
+            sseg.reshape((L, n, bs) + sseg.shape[2:]))
+    else:
+        seg = seg.astype(live[key].dtype)
+        L = seg.shape[0]
+        out[key] = live[key].at[:, ids].set(
+            seg.reshape((L, n, bs) + seg.shape[2:]))
+    return out
+
+
+def paged_write_prompt(cfg: ModelConfig, live: dict, new: dict, block_ids,
+                       *, src: int = 0, skip_blocks: int = 0) -> dict:
+    """Scatter row ``src`` of a freshly prefilled contiguous cache into pool
+    pages ``block_ids`` of a paged cache.
+
+    ``block_ids`` are the pages for prompt blocks ``skip_blocks ..
+    skip_blocks + len(block_ids) - 1`` — a prefix-cache hit passes
+    ``skip_blocks > 0`` to leave the shared (already-populated) leading
+    pages untouched. Per-position quantization (int8 pools) makes the
+    written codes/scales bit-identical to what ``cache_write_slot`` would
+    have produced for the same positions, so paged and contiguous decode
+    read the very same numbers. The caller updates the block table and
+    ``len`` host-side (serve.BlockPool owns both).
+    """
+    if not len(block_ids):
+        return dict(live)
+    bs = live["k"].shape[2]
+    ids = jnp.asarray(block_ids, jnp.int32)
+    lo = skip_blocks * bs
+    out = dict(live)
+    for key in ("k", "v"):
+        row = jnp.take(new[key], src, axis=1)               # (L, S, Hkv, D)
+        seg = jax.lax.slice_in_dim(row, lo, lo + len(block_ids) * bs, axis=1)
+        out.update(_scatter_pages(live, key, seg, ids))
+    return out
+
+
+def paged_write_kv(live: dict, k_new, v_new, block_ids, *,
+                   src: int = 0) -> dict:
+    """Scatter freshly computed K/V rows (L, B, S, Hkv, D — e.g. the suffix
+    K/V out of ``prefill_suffix_fn``) into pool pages ``block_ids``,
+    padding/truncating the sequence to the page span. Positions past the
+    real length carry pad K/V exactly as the contiguous cache does —
+    masked, never read."""
+    if not len(block_ids):
+        return dict(live)
+    bs = live["k"].shape[2]
+    ids = jnp.asarray(block_ids, jnp.int32)
+    span = len(block_ids) * bs
+    out = dict(live)
+    for key, new in (("k", k_new), ("v", v_new)):
+        row = jnp.take(new, src, axis=1)                    # (L, S, Hkv, D)
+        s = row.shape[1]
+        if s < span:
+            row = jnp.pad(row, ((0, 0), (0, span - s), (0, 0), (0, 0)))
+        elif s > span:
+            row = jax.lax.slice_in_dim(row, 0, span, axis=1)
+        out.update(_scatter_pages(live, key, row, ids))
+    return out
+
+
+def paged_gather_prefix(live: dict, block_ids):
+    """Gather pages ``block_ids`` into contiguous (L, 1, n*bs, Hkv, D)
+    prefix K/V for ``prefill_suffix_fn``. Float pools only: a dequantized
+    int8 prefix is not the float prefix the donor computed, so int8 prefix
+    hits recompute (storage-only sharing) instead of chaining."""
+    if "k_scale" in live:
+        raise NotImplementedError(
+            "paged_gather_prefix: int8 pools share storage only — recompute "
+            "the prompt and skip the shared-page writes")
+    ids = jnp.asarray(block_ids, jnp.int32)
+    outs = []
+    for key in ("k", "v"):
+        g = live[key][:, ids]                           # (L, n, bs, Hkv, D)
+        L = g.shape[0]
+        outs.append(g.reshape((L, 1, g.shape[1] * g.shape[2]) + g.shape[3:]))
+    return tuple(outs)
 
 
 # ------------------------------------------------------------ input specs --

@@ -224,6 +224,49 @@ def decode_attention_q8(q, k_cache, v_cache, k_scale, v_scale, cache_len):
     return decode_attention(q, k, v, cache_len)
 
 
+# ----------------------------------------------------- paged KV cache -----
+#
+# Block-pool layout (repro.serve kv_layout="paged"): K/V live in a pool of
+# fixed-size pages, (num_blocks, block_size, Hkv, D) per layer, and each
+# decode slot owns an ordered block table (max_len // block_size int32 ids)
+# instead of a contiguous (S, Hkv, D) row. Gathering the pool rows by table
+# reconstructs EXACTLY the contiguous cache a slot would have owned (same
+# values at the same positions; table entries past the allocated span point
+# at the reserved garbage block 0, whose positions are >= cache_len and
+# therefore masked to an exact-zero softmax weight) — so the paged decode
+# variants below are bit-identical to their contiguous counterparts by
+# construction, provided block_size divides max_len.
+
+def gather_kv_blocks(pool, block_table):
+    """pool: (NB, bs, ...); block_table: (B, nb) int32 -> (B, nb*bs, ...).
+
+    Row i of the result is slot i's logical cache: block_table[i, j] names
+    the pool page holding positions [j*bs, (j+1)*bs)."""
+    g = pool[block_table]                          # (B, nb, bs, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def decode_attention_paged(q, k_pool, v_pool, block_table, cache_len):
+    """:func:`decode_attention` over a paged pool: per-layer pools are
+    (NB, bs, Hkv, D); the gather-by-block-table view is bit-identical to the
+    contiguous cache, so so is the attention output."""
+    k = gather_kv_blocks(k_pool, block_table)
+    v = gather_kv_blocks(v_pool, block_table)
+    return decode_attention(q, k, v, cache_len)
+
+
+def decode_attention_paged_q8(q, k_pool, v_pool, k_scale_pool, v_scale_pool,
+                              block_table, cache_len):
+    """:func:`decode_attention_q8` over an int8 paged pool: code pools are
+    int8 (NB, bs, Hkv, D) with per-(position, head) f32 scale pools
+    (NB, bs, Hkv); dequantize-on-read after the block-table gather."""
+    k = gather_kv_blocks(k_pool, block_table)
+    v = gather_kv_blocks(v_pool, block_table)
+    ks = gather_kv_blocks(k_scale_pool, block_table)
+    vs = gather_kv_blocks(v_scale_pool, block_table)
+    return decode_attention_q8(q, k, v, ks, vs, cache_len)
+
+
 # ------------------------------------------------------------- decoding ---
 
 def decode_attention(q, k_cache, v_cache, cache_len):

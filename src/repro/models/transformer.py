@@ -177,11 +177,12 @@ def _qkv(lp, x, cfg: ModelConfig, cdt, positions):
     return q, k, v
 
 
-def attn_forward(lp, x, cfg: ModelConfig, cdt, *, impl: str, q_offset=0):
+def attn_forward(lp, x, cfg: ModelConfig, cdt, *, impl: str, q_offset=0,
+                 block_k: int = 256):
     b, s, _ = x.shape
     positions = q_offset + jnp.arange(s)[None, :]
     q, k, v = _qkv(lp, x, cfg, cdt, positions)
-    o = A.attention(q, k, v, causal=True, impl=impl)
+    o = A.attention(q, k, v, causal=True, impl=impl, block_k=block_k)
     o = constrain(o.reshape(b, s, cfg.n_heads * cfg.head_dim),
                   "batch", "seq", "heads")
     out = o @ lp["wo"].astype(cdt)
@@ -251,6 +252,51 @@ def attn_decode(lp, x, cfg: ModelConfig, cdt, k_cache, v_cache, cache_len,
     if kv8:
         return out, k_cache, v_cache, k_scale, v_scale
     return out, k_cache, v_cache
+
+
+def attn_decode_paged(lp, x, cfg: ModelConfig, cdt, k_pool, v_pool,
+                      block_table, cache_len, *, scale_pools=None):
+    """One decode step against a paged KV pool (one layer's pools:
+    (NB, bs, Hkv, D); ``block_table`` (B, nb) int32; ``cache_len`` (B,)).
+
+    Row i writes its new K/V into the pool page holding its own position —
+    page ``block_table[i, cache_len[i] // bs]``, offset ``cache_len[i] %
+    bs`` — then attends the gather-by-block-table view, which is
+    bit-identical to the contiguous cache (attention.gather_kv_blocks).
+    Retired rows (length 0, zeroed table row) write into the reserved
+    garbage page 0, which no live table references.
+
+    ``scale_pools=(k_scale_pool, v_scale_pool)`` marks an int8 pool (codes
+    in ``k_pool``/``v_pool``, per-(position, head) f32 scale pools
+    (NB, bs, Hkv)): the new K/V is quantized on write at its own page slot
+    and the pool is dequantized on read. Returns ``(out, k_pool, v_pool
+    [, k_scale_pool, v_scale_pool])``.
+    """
+    b = x.shape[0]
+    bs = k_pool.shape[1]
+    cl = jnp.asarray(cache_len)
+    positions = cl[:, None].astype(jnp.int32)
+    q, k, v = _qkv(lp, x, cfg, cdt, positions)
+    bi = jnp.take_along_axis(block_table, (cl // bs)[:, None], axis=1)[:, 0]
+    off = cl % bs
+    kv8 = scale_pools is not None
+    if kv8:
+        k_scale_pool, v_scale_pool = scale_pools
+        k, ks_new = A.quantize_kv(k)          # (B,1,Hkv,D) int8, (B,1,Hkv) f32
+        v, vs_new = A.quantize_kv(v)
+        k_scale_pool = k_scale_pool.at[bi, off].set(ks_new[:, 0])
+        v_scale_pool = v_scale_pool.at[bi, off].set(vs_new[:, 0])
+    k_pool = k_pool.at[bi, off].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[bi, off].set(v[:, 0].astype(v_pool.dtype))
+    if kv8:
+        o = A.decode_attention_paged_q8(q, k_pool, v_pool, k_scale_pool,
+                                        v_scale_pool, block_table, cl + 1)
+    else:
+        o = A.decode_attention_paged(q, k_pool, v_pool, block_table, cl + 1)
+    out = o.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ lp["wo"].astype(cdt)
+    if kv8:
+        return out, k_pool, v_pool, k_scale_pool, v_scale_pool
+    return out, k_pool, v_pool
 
 
 def _sp_decode(q, k_cache, v_cache, n_valid, axis: str):
@@ -509,6 +555,42 @@ def decode_step(params, token, cache, cfg: ModelConfig, *,
             body, h, (params["blocks"], cache["k"], cache["v"],
                       cache["conv"], cache["ssm"]))
         new_cache.update(k=k_new, v=v_new, conv=conv_new, ssm=ssm_new)
+    elif "block_table" in cache:
+        # paged pools: (L, NB, bs, Hkv, D) [+ (L, NB, bs, Hkv) scales];
+        # the (B, nb) block table is shared by every layer (same logical
+        # layout, per-layer pools indexed by the same page ids)
+        bt = cache["block_table"]
+        if sp_axis is not None:
+            raise NotImplementedError("paged KV decode: sequence-parallel "
+                                      "path is contiguous-only")
+        if kv8:
+            def body(hh, xs):
+                lp, kp, vp, ksp, vsp = xs
+                x = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+                a, kp, vp, ksp, vsp = attn_decode_paged(
+                    lp["attn"], x, cfg, cdt, kp, vp, bt, clen,
+                    scale_pools=(ksp, vsp))
+                hh = hh + a
+                f = ffn_forward(lp, rmsnorm(hh, lp["ln2"], cfg.norm_eps),
+                                cfg, cdt, precision=precision)
+                return hh + f, (kp, vp, ksp, vsp)
+            h, (k_new, v_new, ks_new, vs_new) = lax.scan(
+                body, h, (params["layers"], cache["k"], cache["v"],
+                          cache["k_scale"], cache["v_scale"]))
+            new_cache.update(k=k_new, v=v_new, k_scale=ks_new, v_scale=vs_new)
+        else:
+            def body(hh, xs):
+                lp, kp, vp = xs
+                x = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+                a, kp, vp = attn_decode_paged(lp["attn"], x, cfg, cdt,
+                                              kp, vp, bt, clen)
+                hh = hh + a
+                f = ffn_forward(lp, rmsnorm(hh, lp["ln2"], cfg.norm_eps),
+                                cfg, cdt, precision=precision)
+                return hh + f, (kp, vp)
+            h, (k_new, v_new) = lax.scan(
+                body, h, (params["layers"], cache["k"], cache["v"]))
+            new_cache.update(k=k_new, v=v_new)
     elif kv8:
         def body(hh, xs):
             lp, kc, vc, ks, vs = xs
@@ -545,7 +627,7 @@ def decode_step(params, token, cache, cfg: ModelConfig, *,
 
 def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
             attn_impl: str = "flash", prompt_lens=None,
-            precision: str = "float"):
+            precision: str = "float", attn_block_k: int = 256):
     """Run the prompt, build the cache, return (last_logits, cache).
 
     For attention families the per-layer K/V come out of the layer scan; for
@@ -563,6 +645,13 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
     is only exact for attention families; ssm/hybrid recurrences fold every
     position into their state, so callers must pass exact lengths
     (prompt_lens[i] == S) for those families.
+
+    ``attn_block_k`` pins the flash-attention KV-block size. Serving passes
+    a FIXED value across every prefill bucket: with a constant block size a
+    prefix row's K/V are bitwise independent of how far the bucket extends
+    past it (trailing fully-masked KV blocks are exact no-ops in the online
+    softmax), which is what makes hash-based prefix reuse exact — see
+    :func:`prefill_suffix`.
     """
     if precision != "float" and cfg.family in ("ssm", "hybrid"):
         raise NotImplementedError(
@@ -596,7 +685,8 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
     else:
         def body(hh, lp):
             x = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
-            a, (k, v) = attn_forward(lp["attn"], x, cfg, cdt, impl=attn_impl)
+            a, (k, v) = attn_forward(lp["attn"], x, cfg, cdt, impl=attn_impl,
+                                     block_k=attn_block_k)
             hh = hh + a
             f = ffn_forward(lp, rmsnorm(hh, lp["ln2"], cfg.norm_eps), cfg, cdt,
                             precision=precision)
@@ -673,3 +763,61 @@ def _hybrid_block_with_state(h, bp, cfg, cdt, attn_impl, max_len):
             mlp_idx += 1
     return h, {"k": kv[0], "v": kv[1],
                "conv": jnp.stack(convs), "ssm": jnp.stack(ssms)}
+
+
+def prefill_suffix(params, tokens, prefix_k, prefix_v, prefix_len: int,
+                   cfg: ModelConfig, *, suffix_lens, attn_impl: str = "flash",
+                   attn_block_k: int = 256, precision: str = "float"):
+    """Chunked prefill against a cached prefix: compute only the suffix.
+
+    The prefix-cache hit path of paged serving — the leading ``prefix_len``
+    positions' K/V already live in the block pool (computed once by the
+    donor request), so only ``tokens`` (the right-padded suffix, occupying
+    global positions ``prefix_len .. prefix_len + S_sfx - 1``) runs through
+    the layers. Per layer, the suffix queries attend the concatenation of
+    the gathered prefix K/V and the fresh suffix K/V with
+    ``q_offset=prefix_len``.
+
+    Bit-exactness contract: causality makes a prefix position's hidden
+    state independent of the suffix, and a FIXED ``attn_block_k`` (dividing
+    both ``prefix_len`` and the suffix bucket) makes the flash KV-block
+    schedule of every suffix row identical to the full-prompt prefill's —
+    so the returned logits and suffix K/V are bitwise what a full prefill
+    of the whole prompt would have produced (tested in test_paged.py).
+
+    tokens: (B, S_sfx) int32; prefix_k/v: (L, B, prefix_len, Hkv, D) in the
+    compute dtype; suffix_lens: (B,) int32 real suffix lengths. Returns
+    ``(last_logits, k_sfx, v_sfx)`` with k/v_sfx (L, B, S_sfx, Hkv, D) —
+    the caller scatters them into pool pages. Attention families with
+    dense-layer stacks only (the paged engine's admission gate).
+    """
+    if cfg.family in ("ssm", "hybrid", "encdec"):
+        raise NotImplementedError(
+            "prefill_suffix covers attention-family dense layer stacks only")
+    cdt = _cdt(cfg)
+    s = tokens.shape[1]
+    h = embed_tokens(params, tokens, cfg, cdt)
+
+    def body(hh, xs):
+        lp, pk, pv = xs
+        x = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+        positions = prefix_len + jnp.arange(s)[None, :]
+        q, k, v = _qkv(lp["attn"], x, cfg, cdt, positions)
+        k_cat = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        v_cat = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+        o = A.attention(q, k_cat, v_cat, causal=True, impl=attn_impl,
+                        q_offset=prefix_len, block_k=attn_block_k)
+        b = x.shape[0]
+        o = constrain(o.reshape(b, s, cfg.n_heads * cfg.head_dim),
+                      "batch", "seq", "heads")
+        a = constrain(o @ lp["attn"]["wo"].astype(cdt), "batch", "seq", None)
+        hh = hh + a
+        f = ffn_forward(lp, rmsnorm(hh, lp["ln2"], cfg.norm_eps), cfg, cdt,
+                        precision=precision)
+        return hh + f, (k, v)
+
+    h, (ks, vs) = lax.scan(body, h, (params["layers"], prefix_k, prefix_v))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    sl = jnp.asarray(suffix_lens, jnp.int32)
+    h_last = jnp.take_along_axis(h, (sl - 1)[:, None, None], axis=1)
+    return unembed(params, h_last, cfg), ks, vs

@@ -1,10 +1,12 @@
 """Serving: continuous-batching LM engine over a fixed (max_batch, max_len)
 KV budget (legacy static drain scheduler as baseline; engine.Engine /
-EXPERIMENTS.md §Serving), plus the CNN microbatching engine that admits
-queued image requests into batched CompiledPlan rounds (cnn.CNNEngine /
-EXPERIMENTS.md §Throughput)."""
+EXPERIMENTS.md §Serving) with contiguous or paged KV backing — the paged
+layout pools fixed-size pages with hash-based prefix reuse
+(engine.BlockPool / EXPERIMENTS.md §Paged-KV) — plus the CNN microbatching
+engine that admits queued image requests into batched CompiledPlan rounds
+(cnn.CNNEngine / EXPERIMENTS.md §Throughput)."""
 from .cnn import CNNEngine, CNNServeConfig, ImageRequest
-from .engine import Engine, Request, ServeConfig
+from .engine import BlockPool, Engine, Request, ServeConfig
 
-__all__ = ["Engine", "Request", "ServeConfig",
+__all__ = ["BlockPool", "Engine", "Request", "ServeConfig",
            "CNNEngine", "CNNServeConfig", "ImageRequest"]

@@ -23,14 +23,44 @@ Sampling is greedy argmax by default; a positive temperature (per
 ``ServeConfig`` with ``greedy=False``, or per-``Request`` override) switches
 that request to softmax sampling with the engine's seeded host rng.
 
+KV backing is picked by ``ServeConfig.kv_layout``:
+
+* ``"contiguous"`` (default) — every slot owns a (max_len,) KV row of the
+  one live batched cache; memory is ``max_batch x max_len`` regardless of
+  the actual sequence lengths.
+* ``"paged"`` — K/V live in a shared :class:`BlockPool` of fixed-size
+  pages (``kv_block_size`` positions each); each slot holds a block table
+  that grows one page at a time as the sequence crosses a page boundary,
+  so resident KV scales with *actual* tokens. Prompt pages are
+  content-addressed (chained sha1 over full prompt blocks): requests that
+  share a prompt prefix map their leading table entries to the same
+  refcounted pages, paying the prefix's prefill FLOPs and KV bytes once —
+  on a float-KV hit only the suffix runs through the model
+  (``models/api.prefill_suffix_fn``); int8-KV hits share storage only
+  (dequantized codes are not the float prefix, so the prompt is recomputed
+  and the shared-page writes skipped). Pages of retired requests linger in
+  an LRU "evictable" set until memory pressure reclaims them, so serial
+  repeats of a prefix still hit. When the pool runs dry the engine parks
+  new admissions in a FIFO holdback (backpressure) and, for mid-decode
+  growth, preempts the youngest slot (greedy decode makes the replayed
+  stream identical). Greedy token streams are BIT-IDENTICAL to the
+  contiguous layout for float and int8 KV alike: pages gather back into
+  exactly the contiguous cache view (``kv_block_size`` divides
+  ``max_len``), masked tail positions carry exact-zero attention weight,
+  and a prefix page's K/V are bitwise independent of the bucket the donor
+  prefilled under (tests/test_paged.py locks both properties).
+
 ``Engine.stats`` surfaces scheduler metrics: prefill/decode-round/token
 counters, slot occupancy (occupied slot-rounds over offered slot-rounds),
-TTFT/TPOT/queue-wait latency quantiles, and decode throughput. The stats
-are backed by a private ``repro.obs.metrics.Registry`` per engine (same
-keys as the pre-registry dict, plus the histogram quantiles), and with
-``REPRO_TRACE=1`` the engine emits per-request lifecycle spans
-(queue_wait -> prefill -> generate, each request on its own trace lane)
-plus per-round decode spans to the process tracer — export with
+TTFT/TPOT/queue-wait latency quantiles, decode throughput, and block-pool
+gauges (``blocks_in_use`` / ``blocks_free`` / ``prefix_hit_rate``; zero
+under the contiguous layout). The stats are backed by a private
+``repro.obs.metrics.Registry`` per engine (same keys as the pre-registry
+dict, plus the histogram quantiles), and with ``REPRO_TRACE=1`` the
+engine emits per-request lifecycle spans (queue_wait -> prefill ->
+generate, each request on its own trace lane) plus per-round decode spans
+and paged-pool events (``engine.block_alloc`` / ``engine.block_free`` /
+``engine.prefix_lookup``) to the process tracer — export with
 ``repro.obs.trace.export(path)`` and open in Perfetto.
 
 Timing discipline: decode-round timers ``jax.block_until_ready`` the round
@@ -42,11 +72,13 @@ export.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import hashlib
 import queue
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +119,144 @@ class Request:
     @property
     def queue_wait_s(self) -> float:
         return max(self.admit_t - self.submit_t, 0.0)
+
+
+class BlockPool:
+    """Host-side page allocator + hash-based prefix cache for the paged KV
+    layout (``ServeConfig.kv_layout="paged"``).
+
+    Page 0 is RESERVED as the garbage page: never allocated, so a retired
+    slot's zeroed block-table row scatters its masked (never-read) decode
+    writes there without touching a live page.
+
+    Prompt pages are content-addressed: ``prefix_keys`` chains a sha1 over
+    each FULL prompt block (every digest covers all tokens up to and
+    including its block, so equal digest == equal token prefix), and
+    ``publish`` registers digest -> page after the page's K/V are written.
+    A page whose live refcount drops to zero is NOT freed — it parks in an
+    LRU *evictable* set with its digest mapping intact, so a later request
+    with the same prefix still hits (serial-traffic TTFT wins); ``alloc``
+    reclaims evictable pages oldest-first only once the free list runs
+    dry. Retention is safe because published pages are never written again
+    (decode writes land strictly past the last full prompt block) and
+    content-addressing guarantees a hit returns K/V computed from exactly
+    the hitting request's token prefix.
+
+    Single-threaded by design — the engine drives it between device calls.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int,
+                 prefix_cache: bool = True):
+        if num_blocks < 2:
+            raise ValueError("BlockPool needs >= 2 pages (page 0 is the "
+                             "reserved garbage page)")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.prefix_cache = prefix_cache
+        # pop() -> lowest id first; freed pages return LIFO (deterministic)
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._ref: Dict[int, int] = {}        # page id -> live refcount
+        self._digest: Dict[str, int] = {}     # digest -> page id
+        self._page_digest: Dict[int, str] = {}
+        self._evictable: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()         # refcount-0 hashed pages, LRU
+        self.lookups = 0                      # block-granular hit telemetry
+        self.hits = 0
+
+    # ------------------------------------------------------------ capacity --
+
+    @property
+    def usable(self) -> int:
+        return self.num_blocks - 1
+
+    @property
+    def free_pages(self) -> int:
+        """Allocatable pages: truly free plus evictable-on-demand."""
+        return len(self._free) + len(self._evictable)
+
+    @property
+    def in_use(self) -> int:
+        return self.usable - self.free_pages
+
+    # -------------------------------------------------------- prefix cache --
+
+    def prefix_keys(self, prompt: np.ndarray) -> List[str]:
+        """Chained sha1 digest per full prompt block, excluding the block
+        holding the last prompt token — at least one position is always
+        recomputed so admission has last-token logits to sample from."""
+        if not self.prefix_cache:
+            return []
+        bs = self.block_size
+        toks = np.ascontiguousarray(np.asarray(prompt, np.int32))
+        h = hashlib.sha1()
+        keys = []
+        for j in range((len(toks) - 1) // bs):
+            h.update(toks[j * bs:(j + 1) * bs].tobytes())
+            keys.append(h.hexdigest())
+        return keys
+
+    def lookup(self, keys: List[str]) -> List[int]:
+        """Page ids for the longest registered leading run of ``keys``.
+        Read-only: ``acquire`` the result before any ``alloc`` so eviction
+        cannot reclaim a page the caller is about to reference."""
+        ids = []
+        for k in keys:
+            bid = self._digest.get(k)
+            if bid is None:
+                break
+            ids.append(bid)
+        self.lookups += len(keys)
+        self.hits += len(ids)
+        return ids
+
+    def acquire(self, ids: List[int]) -> None:
+        """Take a live reference on hashed pages (un-parks evictable ones)."""
+        for bid in ids:
+            self._ref[bid] = self._ref.get(bid, 0) + 1
+            self._evictable.pop(bid, None)
+
+    def release(self, ids: List[int]) -> None:
+        """Drop a live reference; pages reaching zero park as evictable."""
+        for bid in ids:
+            self._ref[bid] -= 1
+            if self._ref[bid] == 0:
+                del self._ref[bid]
+                self._evictable[bid] = None
+
+    def publish(self, keys: List[str], ids: List[int]) -> None:
+        """Register freshly written full prompt blocks (digest -> page) and
+        take the writing request's live reference. The engine is
+        single-threaded, so a digest that missed at lookup is still absent
+        here — no collision handling needed."""
+        for k, bid in zip(keys, ids):
+            self._digest[k] = bid
+            self._page_digest[bid] = k
+            self._ref[bid] = self._ref.get(bid, 0) + 1
+
+    # --------------------------------------------------------- allocation --
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` pages, or None when the pool cannot supply them (the
+        engine then applies admission backpressure / preemption). Evicts
+        LRU refcount-0 hashed pages only when the free list runs dry."""
+        if n > self.free_pages:
+            return None
+        out = []
+        for _ in range(n):
+            if self._free:
+                out.append(self._free.pop())
+            else:
+                bid, _ = self._evictable.popitem(last=False)
+                del self._digest[self._page_digest.pop(bid)]
+                out.append(bid)
+        return out
+
+    def free(self, ids: List[int], hashed: int = 0) -> None:
+        """Return a retired request's pages: the leading ``hashed`` ids
+        (published/hit prompt pages) drop a reference and park when it
+        reaches zero; the rest go straight back to the free list."""
+        self.release(ids[:hashed])
+        self._free.extend(ids[hashed:])
 
 
 @dataclasses.dataclass
@@ -133,6 +303,28 @@ class ServeConfig:
                 slot refill/retire never re-scales a neighbour. Continuous
                 scheduler + attention-family dense caches only (the static
                 path decodes straight off the float prefill cache).
+    kv_layout:  "contiguous" (default) gives every slot a (max_len,) KV
+                row. "paged" backs K/V with a BlockPool of kv_num_blocks
+                fixed-size pages instead — block tables grow on demand, a
+                shared prompt prefix is stored (and, for float KV,
+                prefilled) once, and greedy streams stay bit-identical to
+                the contiguous layout. Continuous scheduler +
+                attention-family dense caches only; composes with
+                kv_cache="int8" (int8 pool pages + scale pages).
+    kv_block_size: positions per page under kv_layout="paged". Must divide
+                max_len (the gathered block-table view then spans exactly
+                max_len positions — the bit-exactness precondition).
+                Smaller pages waste less tail memory but hash/grow more
+                often; prefix sharing is full-page-granular.
+    kv_num_blocks: pool size under kv_layout="paged", including the
+                reserved garbage page 0. None (default) sizes the pool to
+                the contiguous capacity equivalent, max_batch *
+                (max_len / kv_block_size) + 1 — same KV budget, so paged
+                admission/growth can never be the bottleneck. Must leave
+                at least max_len / kv_block_size usable pages (one request
+                growing to max_len must always be able to finish).
+    prefix_cache: hash full prompt pages for reuse (paged layout only).
+                True by default; disable to measure pure paging.
     """
     max_batch: int = 4
     max_len: int = 256
@@ -145,6 +337,10 @@ class ServeConfig:
     seed: int = 0
     precision: str = "float"
     kv_cache: str = "float"
+    kv_layout: str = "contiguous"
+    kv_block_size: int = 16
+    kv_num_blocks: Optional[int] = None
+    prefix_cache: bool = True
 
 
 class Engine:
@@ -169,6 +365,18 @@ class Engine:
                 raise NotImplementedError(
                     "kv_cache='int8' covers attention-family dense KV caches "
                     "only (no ssm / hybrid / encdec)")
+        if scfg.kv_layout not in ("contiguous", "paged"):
+            raise ValueError(f"unknown kv_layout: {scfg.kv_layout!r}")
+        if scfg.kv_layout == "paged":
+            if scfg.scheduler != "continuous":
+                raise NotImplementedError(
+                    "kv_layout='paged' pages the live slotted decode cache; "
+                    "the static scheduler decodes off the prefill cache — "
+                    "use scheduler='continuous'")
+            if cfg.family in ("ssm", "hybrid", "encdec"):
+                raise NotImplementedError(
+                    "kv_layout='paged' covers attention-family dense KV "
+                    "caches only (no ssm / hybrid / encdec)")
         if scfg.precision != "float":
             if cfg.family in ("ssm", "hybrid", "encdec") or cfg.moe is not None:
                 raise NotImplementedError(
@@ -207,6 +415,21 @@ class Engine:
             self._write_slot = jax.jit(
                 functools.partial(api.cache_write_slot, cfg),
                 donate_argnums=() if cpu else (0,))
+        if scfg.kv_layout == "paged":
+            # page-granular cache surgery: scatter prefilled K/V into pool
+            # pages, gather shared prefix pages back out, and the
+            # suffix-only prefill that makes float-KV prefix hits cheap
+            self._write_pages = jax.jit(
+                functools.partial(api.paged_write_prompt, cfg),
+                static_argnames=("src", "skip_blocks"),
+                donate_argnums=() if cpu else (0,))
+            self._write_kv = jax.jit(api.paged_write_kv,
+                                     donate_argnums=() if cpu else (0,))
+            self._gather_prefix = jax.jit(api.paged_gather_prefix)
+            if scfg.prefix_cache and scfg.kv_cache == "float":
+                self.prefill_suffix = jax.jit(api.prefill_suffix_fn(
+                    cfg, attn_impl=scfg.attn_impl,
+                    precision=scfg.precision))
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self._rng = np.random.default_rng(scfg.seed)
         # private registry: per-engine stats isolation; handles stay valid
@@ -222,6 +445,11 @@ class Engine:
             "ttft": self.metrics.histogram("serve.ttft_s"),
             "tpot": self.metrics.histogram("serve.tpot_s"),
             "queue_wait": self.metrics.histogram("serve.queue_wait_s"),
+            # block-pool gauges: live under kv_layout="paged", zero under
+            # contiguous (registered unconditionally for stats key parity)
+            "blocks_in_use": self.metrics.gauge("serve.blocks_in_use"),
+            "blocks_free": self.metrics.gauge("serve.blocks_free"),
+            "prefix_hit_rate": self.metrics.gauge("serve.prefix_hit_rate"),
         }
         self.reset_stats()
 
@@ -256,7 +484,16 @@ class Engine:
         c["tpot_avg_s"] = m["tpot"].mean
         c["queue_wait_avg_s"] = m["queue_wait"].mean
         c["queue_wait_p99_s"] = m["queue_wait"].percentile(99)
+        c["blocks_in_use"] = int(m["blocks_in_use"].value)
+        c["blocks_free"] = int(m["blocks_free"].value)
+        c["prefix_hit_rate"] = float(m["prefix_hit_rate"].value)
         return c
+
+    def _update_pool_gauges(self, pool: BlockPool):
+        self._m["blocks_in_use"].set(pool.in_use)
+        self._m["blocks_free"].set(pool.free_pages)
+        self._m["prefix_hit_rate"].set(
+            pool.hits / pool.lookups if pool.lookups else 0.0)
 
     def _observe_retired(self, req: Request):
         """Latency histograms + the request's trace-lane replay (the spans
@@ -281,14 +518,19 @@ class Engine:
 
     # ----------------------------------------------------------- frontend --
 
-    def submit(self, req: Request):
-        # reject oversized prompts here, not mid-drain: raising during
-        # run_until_drained would discard finished requests and strand the
-        # rest of the queue
+    def _validate_prompt_len(self, req: Request):
+        """THE prompt-length check — submit and admit share it, so both
+        reject with one message (they used to diverge)."""
         if len(req.prompt) > self.scfg.max_len:
             raise ValueError(
                 f"request {req.uid}: prompt length {len(req.prompt)} exceeds "
                 f"max_len={self.scfg.max_len}")
+
+    def submit(self, req: Request):
+        # reject oversized prompts here, not mid-drain: raising during
+        # run_until_drained would discard finished requests and strand the
+        # rest of the queue
+        self._validate_prompt_len(req)
         req.submit_t = time.perf_counter()
         req.submit_wall_t = time.time()
         self.queue.put(req)
@@ -335,9 +577,8 @@ class Engine:
     # --------------------------------------------------------- continuous --
 
     def _bucket_len(self, plen: int) -> int:
-        if plen > self.scfg.max_len:
-            raise ValueError(
-                f"prompt length {plen} exceeds max_len={self.scfg.max_len}")
+        # oversized prompts were already rejected by _validate_prompt_len
+        # (at submit, and again at admit for directly enqueued requests)
         if self.cfg.family in ("ssm", "hybrid"):
             return plen                 # recurrent state is position-exact
         b = max(self.scfg.prefill_bucket, 1)
@@ -347,28 +588,131 @@ class Engine:
 
     def _run_continuous(self) -> List[Request]:
         B = self.scfg.max_batch
-        cache = api.init_slot_cache(self.cfg, B, self.scfg.max_len,
-                                    kv=self.scfg.kv_cache)
+        paged = self.scfg.kv_layout == "paged"
+        bs = self.scfg.kv_block_size
+        if paged:
+            from repro.check.config import paged_num_blocks
+            nblocks = paged_num_blocks(self.scfg)
+            cache = api.init_paged_cache(self.cfg, B, nblocks, bs,
+                                         self.scfg.max_len,
+                                         kv=self.scfg.kv_cache)
+            pool = BlockPool(nblocks, bs,
+                             prefix_cache=self.scfg.prefix_cache)
+            table = np.zeros((B, self.scfg.max_len // bs), np.int32)
+            slot_ids: List[List[int]] = [[] for _ in range(B)]
+            slot_hashed = [0] * B       # leading refcounted pages per slot
+            holdback: "collections.deque[Request]" = collections.deque()
+            self._update_pool_gauges(pool)
+        else:
+            cache = api.init_slot_cache(self.cfg, B, self.scfg.max_len,
+                                        kv=self.scfg.kv_cache)
         slots: List[Optional[Request]] = [None] * B
+        admit_seq = [0] * B             # admission order, for victim choice
+        seq = 0
         lens = [0] * B                  # host mirror of cache["len"]
         cur = np.zeros((B, 1), np.int32)
         finished: List[Request] = []
 
-        def admit(i: int, req: Request):
+        def next_request() -> Optional[Request]:
+            # holdback (pool-backpressured / preempted) drains before the
+            # queue so paged admission stays FIFO
+            if paged and holdback:
+                return holdback.popleft()
+            return self._next_request()
+
+        def admit_paged(i: int, req: Request, plen: int):
+            """Returns last-position logits, or None when the pool cannot
+            supply the prompt's pages (admission backpressure)."""
             nonlocal cache
-            plen = len(req.prompt)
-            bucket = self._bucket_len(plen)
+            nb = -(-plen // bs)         # pages covering positions [0, plen)
+            keys = pool.prefix_keys(req.prompt)
+            with obs_trace.span("engine.prefix_lookup", uid=req.uid,
+                                blocks=len(keys)):
+                hit_ids = pool.lookup(keys)
+            n_hit = len(hit_ids)
+            # reference the hit pages BEFORE alloc so its eviction scan
+            # cannot reclaim them out from under this admission
+            pool.acquire(hit_ids)
+            with obs_trace.span("engine.block_alloc", uid=req.uid,
+                                n=nb - n_hit):
+                fresh = pool.alloc(nb - n_hit)
+            if fresh is None:
+                pool.release(hit_ids)
+                return None
             req.admit_t = time.perf_counter()
-            toks = np.zeros((bucket,), np.int32)
-            toks[:plen] = req.prompt    # right-pad: positions stay 0..plen-1
-            with obs_trace.span("engine.prefill", uid=req.uid, slot=i,
-                                plen=plen, bucket=bucket):
-                logits, fresh = self.prefill(self.params, {
-                    "tokens": jnp.asarray(toks[None, :]),
-                    "prompt_lens": jnp.asarray([plen], jnp.int32)})
-                self._m["prefills"].inc()
-                cache = self._write_slot(cache, fresh, jnp.int32(i))
-                t = self._pick(np.asarray(logits)[0, -1], req)
+            ids = hit_ids + fresh
+            fids = np.asarray(fresh, np.int32)
+            if n_hit and "k_scale" not in cache:
+                # float-KV prefix hit: the shared pages already hold the
+                # prefix K/V — gather them and run ONLY the suffix (the
+                # near-zero-TTFT path)
+                pfx = n_hit * bs
+                s_sfx = plen - pfx
+                sbucket = self._bucket_len(s_sfx)
+                toks = np.zeros((sbucket,), np.int32)
+                toks[:s_sfx] = req.prompt[pfx:]
+                with obs_trace.span("engine.prefill", uid=req.uid, slot=i,
+                                    plen=plen, bucket=sbucket,
+                                    prefix_hit=pfx):
+                    pk, pv = self._gather_prefix(
+                        cache, np.asarray(hit_ids, np.int32))
+                    logits, ks, vs = self.prefill_suffix(self.params, {
+                        "tokens": jnp.asarray(toks[None, :]),
+                        "prefix_k": pk, "prefix_v": pv,
+                        "suffix_lens": jnp.asarray([s_sfx], jnp.int32)})
+                    self._m["prefills"].inc()
+                    cache = self._write_kv(cache, ks, vs, fids)
+                    logits = np.asarray(logits)
+            else:
+                # prefix miss — or an int8-KV hit, which shares STORAGE
+                # only: dequantized codes are not the float prefix the
+                # suffix math needs, so recompute the whole prompt and
+                # just skip writing the shared pages
+                bucket = self._bucket_len(plen)
+                toks = np.zeros((bucket,), np.int32)
+                toks[:plen] = req.prompt
+                with obs_trace.span("engine.prefill", uid=req.uid, slot=i,
+                                    plen=plen, bucket=bucket,
+                                    prefix_hit=n_hit * bs):
+                    logits, fresh_cache = self.prefill(self.params, {
+                        "tokens": jnp.asarray(toks[None, :]),
+                        "prompt_lens": jnp.asarray([plen], jnp.int32)})
+                    self._m["prefills"].inc()
+                    cache = self._write_pages(cache, fresh_cache, fids,
+                                              skip_blocks=n_hit)
+                    logits = np.asarray(logits)
+            # publish-at-admission: the fresh full prompt pages now hold
+            # their final K/V (decode writes land strictly past them)
+            pool.publish(keys[n_hit:], ids[n_hit:len(keys)])
+            slot_ids[i] = ids
+            slot_hashed[i] = len(keys)
+            table[i, :nb] = ids
+            table[i, nb:] = 0
+            self._update_pool_gauges(pool)
+            return logits
+
+        def admit(i: int, req: Request) -> bool:
+            nonlocal cache, seq
+            self._validate_prompt_len(req)   # directly enqueued requests
+            plen = len(req.prompt)
+            if paged:
+                logits = admit_paged(i, req, plen)
+                if logits is None:
+                    return False
+            else:
+                bucket = self._bucket_len(plen)
+                req.admit_t = time.perf_counter()
+                toks = np.zeros((bucket,), np.int32)
+                toks[:plen] = req.prompt  # right-pad: positions 0..plen-1
+                with obs_trace.span("engine.prefill", uid=req.uid, slot=i,
+                                    plen=plen, bucket=bucket):
+                    logits, fresh = self.prefill(self.params, {
+                        "tokens": jnp.asarray(toks[None, :]),
+                        "prompt_lens": jnp.asarray([plen], jnp.int32)})
+                    self._m["prefills"].inc()
+                    cache = self._write_slot(cache, fresh, jnp.int32(i))
+                    logits = np.asarray(logits)
+            t = self._pick(logits[0, -1], req)
             req.first_token_t = time.perf_counter()
             req.admit_round = self._round
             req.out_tokens.append(t)
@@ -377,6 +721,9 @@ class Engine:
             cur[i, 0] = t
             slots[i] = req
             lens[i] = plen
+            admit_seq[i] = seq
+            seq += 1
+            return True
 
         def maybe_retire(i: int):
             nonlocal cache
@@ -392,22 +739,104 @@ class Engine:
                 self._observe_retired(req)
                 slots[i] = None
                 lens[i] = 0
+                if paged:
+                    with obs_trace.span("engine.block_free", uid=req.uid,
+                                        n=len(slot_ids[i])):
+                        pool.free(slot_ids[i], hashed=slot_hashed[i])
+                    slot_ids[i] = []
+                    slot_hashed[i] = 0
+                    table[i, :] = 0
+                    self._update_pool_gauges(pool)
                 cache = api.cache_free_slot(cache, i)
+
+        def preempt(victim: int):
+            """Evict the youngest slot mid-decode to free its pages. Its
+            request restarts from the prompt via the holdback — greedy
+            decode replays the identical stream (and its published prompt
+            pages usually survive as evictable, so the re-prefill hits)."""
+            nonlocal cache
+            req = slots[victim]
+            with obs_trace.span("engine.block_free", uid=req.uid,
+                                n=len(slot_ids[victim]), preempt=True):
+                pool.free(slot_ids[victim], hashed=slot_hashed[victim])
+            # the discarded tokens stay in tokens_out (they were real decode
+            # work); the replay after re-admission counts its own
+            req.out_tokens = []
+            req.done = False
+            holdback.appendleft(req)
+            slots[victim] = None
+            lens[victim] = 0
+            slot_ids[victim] = []
+            slot_hashed[victim] = 0
+            table[victim, :] = 0
+            cache = api.cache_free_slot(cache, victim)
+            self._update_pool_gauges(pool)
+
+        def grow_tables():
+            """Allocate the next page for every slot whose write position
+            reached a page boundary; under pool pressure preempt youngest-
+            admitted slots (oldest-first processing guarantees progress —
+            a lone grower can always reclaim evictable pages)."""
+            order = sorted((i for i in range(B) if slots[i] is not None),
+                           key=lambda i: admit_seq[i])
+            for i in order:
+                if slots[i] is None:        # preempted by an older grower
+                    continue
+                pos = lens[i]
+                if pos >= self.scfg.max_len or pos % bs \
+                        or pos // bs < len(slot_ids[i]):
+                    continue
+                with obs_trace.span("engine.block_alloc",
+                                    uid=slots[i].uid, n=1):
+                    got = pool.alloc(1)
+                while got is None:
+                    victim = max((v for v in range(B)
+                                  if slots[v] is not None),
+                                 key=lambda v: admit_seq[v])
+                    preempt(victim)
+                    if victim == i:
+                        break
+                    got = pool.alloc(1)
+                if slots[i] is None or got is None:
+                    continue
+                slot_ids[i].append(got[0])
+                table[i, pos // bs] = got[0]
+            self._update_pool_gauges(pool)
 
         while True:
             # refill free slots from the queue between decode rounds; the
             # inner while re-admits into a slot whose request retired at
-            # admission (max_new_tokens=1 / instant EOS)
+            # admission (max_new_tokens=1 / instant EOS). A paged admission
+            # the pool cannot back parks its request in the FIFO holdback
+            # and stops refilling until retirements release pages.
+            blocked = False
             for i in range(B):
                 while slots[i] is None:
-                    req = self._next_request()
+                    req = next_request()
                     if req is None:
                         break
-                    admit(i, req)
+                    if not admit(i, req):
+                        holdback.appendleft(req)
+                        blocked = True
+                        break
                     maybe_retire(i)
+                if blocked:
+                    break
             active = [i for i in range(B) if slots[i] is not None]
             if not active:
+                if paged and holdback:
+                    raise RuntimeError(
+                        "paged KV pool cannot admit the next request even "
+                        "with every page reclaimable — kv_num_blocks is "
+                        "below a single prompt's worst-case page need")
                 break                   # the admit loop drained the queue
+            if paged:
+                grow_tables()
+                active = [i for i in range(B) if slots[i] is not None]
+                if not active:
+                    continue            # preemption emptied the batch
+                cache["len"] = jnp.asarray(np.asarray(lens, np.int32))
+                cache["block_table"] = jnp.asarray(table)
             t0 = time.perf_counter()
             with obs_trace.span("engine.decode_round", round=self._round,
                                 active=len(active)):

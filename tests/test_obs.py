@@ -275,6 +275,8 @@ def _drain(cfg, params, n_req=3, **scfg_kw):
 ENGINE_LEGACY_KEYS = {"prefills", "decode_steps", "tokens_out",
                       "requests_done", "occupancy", "ttft_avg_s",
                       "decode_tok_s"}
+# block-pool gauges ride along for every layout (zero under contiguous)
+ENGINE_POOL_KEYS = {"blocks_in_use", "blocks_free", "prefix_hit_rate"}
 CNN_LEGACY_KEYS = {"batch_rounds", "images_done", "occupancy",
                    "latency_avg_s", "images_per_s"}
 
@@ -284,6 +286,9 @@ def test_engine_stats_parity_and_quantiles(engine_setup):
     eng, done = _drain(cfg, params, n_req=3, max_batch=2, max_len=32)
     st = eng.stats
     assert ENGINE_LEGACY_KEYS <= set(st)
+    assert ENGINE_POOL_KEYS <= set(st)
+    # contiguous layout: pool gauges exist but stay zero
+    assert st["blocks_in_use"] == 0 and st["prefix_hit_rate"] == 0.0
     assert st["requests_done"] == 3 and st["prefills"] == 3
     assert st["tokens_out"] == sum(len(r.out_tokens) for r in done) == 9
     assert 0.0 < st["occupancy"] <= 1.0
