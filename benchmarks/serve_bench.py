@@ -18,6 +18,15 @@ asserts bit-identical greedy streams (exact=1 in the gain row — the
 perf gate's exactness guard), mean-concurrency ratio >= 1.5x, and lower
 mean TTFT for paged.
 
+Workload 3 (resilience, EXPERIMENTS.md §Resilience): the scheduling
+workload drained twice on identically configured engines — once clean,
+once under a fixed deterministic FaultPlan (injected decode/prefill
+raises absorbed by bounded retries) with a capped queue shedding the
+overflow (``shed_policy="drop"``). The row's ``exact=1`` only survives
+if every non-shed request retires ``status="ok"`` with a token stream
+bit-identical to the clean drain; ``degraded_ratio`` is the throughput
+the faulted engine retained (faulted tok/s over clean tok/s).
+
 Emits:
   serve/static,<us/token>,tok_s=...;occupancy=...;ttft_ms=...;rounds=...
   serve/continuous,<us/token>,...
@@ -25,6 +34,8 @@ Emits:
   serve/prefix/contiguous,<us/token>,tok_s=...;conc=...;ttft_ms=...
   serve/prefix/paged,<us/token>,tok_s=...;conc=...;ttft_ms=...;hit_rate=...
   serve/prefix/gain,0.0,concurrent_ratio=...;ttft_speedup=...;exact=1
+  serve/resilience,<us/token>,tok_s=...;degraded_ratio=...;shed_rate=...;
+      retries=...;errors=...;exact=1
 
 Engines are compile-warmed on a small drain and their stats reset before
 the timed run. REPRO_BENCH_FAST=1 shrinks the workloads for CI.
@@ -141,6 +152,65 @@ def run_prefix(kv_layout: str, cfg, params, n: int):
                 streams=streams)
 
 
+def run_resilience(cfg, params, n: int):
+    """§Resilience: clean vs faulted drain of the same capped-queue
+    workload. Returns the emit payload fields; asserts the degradation
+    contract (all non-shed ok, survivor streams bit-identical)."""
+    from repro.faults import FaultPlan, FaultSpec, inject
+
+    mq = max(MAX_BATCH, n - max(n // 4, 1))     # shed the overflow tail
+    scfg = ServeConfig(max_batch=MAX_BATCH, max_len=MAX_LEN,
+                       prefill_bucket=PLEN, max_queue=mq,
+                       shed_policy="drop")
+
+    def drain(fault_plan):
+        eng = Engine(cfg, params, scfg)
+        for r in workload(MAX_BATCH, seed=99, long_new=2, short_new=2):
+            eng.submit(r)               # compile warmup
+        eng.run_until_drained()
+        eng.reset_stats()
+        reqs = workload(n, seed=0, long_new=8, short_new=4)
+        t0 = time.perf_counter()
+        if fault_plan is None:
+            for r in reqs:
+                eng.submit(r)
+            done = eng.run_until_drained()
+        else:
+            fault_plan.reset()
+            with fault_plan:
+                for r in reqs:
+                    eng.submit(r)
+                done = eng.run_until_drained()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        return reqs, done, toks, dt, eng
+
+    assert inject.active_plan() is None, \
+        "serve_bench owns its fault schedule; unset REPRO_FAULTS"
+    clean_reqs, _, clean_toks, clean_dt, _ = drain(None)
+    # deterministic schedule: one decode round and one prefill attempt
+    # fail transiently — both inside the bounded-retry budget
+    plan = FaultPlan([
+        FaultSpec(site="engine.decode_round", kind="raise", nth=2, times=2),
+        FaultSpec(site="engine.prefill", kind="raise", nth=3, times=1),
+    ], seed=0)
+    reqs, done, toks, dt, eng = drain(plan)
+
+    base = {r.uid: list(r.out_tokens) for r in clean_reqs
+            if r.status == "ok"}
+    shed = [r for r in reqs if r.status == "shed"]
+    ok = [r for r in reqs if r.status == "ok"]
+    exact = (len(ok) + len(shed) == n and len(shed) == n - mq
+             and all(list(r.out_tokens) == base.get(r.uid) for r in ok)
+             and len(plan.log) == 3)
+    st = eng.stats
+    return dict(
+        tok_s=toks / dt, toks=toks, dt=dt,
+        degraded_ratio=(toks / dt) / (clean_toks / clean_dt),
+        shed_rate=len(shed) / n, retries=st["retries"],
+        errors=st["errors"], exact=int(exact))
+
+
 def main():
     cfg = tiny_cfg()
     params = api.init_params(cfg, jax.random.PRNGKey(0))
@@ -182,6 +252,15 @@ def main():
          f"paged_prefix_toks={res['paged']['tok_s']:.1f};"
          f"concurrent_ratio={conc_ratio:.2f};ttft_speedup={ttft_speedup:.2f};"
          f"exact=1")
+
+    # §Resilience: the degradation contract under a deterministic fault
+    # schedule — exact=1 is mandatory (the perf gate rejects its absence)
+    r = run_resilience(cfg, params, n)
+    assert r["exact"] == 1, "faulted drain broke the degradation contract"
+    emit("serve/resilience", r["dt"] * 1e6 / max(r["toks"], 1),
+         f"tok_s={r['tok_s']:.1f};degraded_ratio={r['degraded_ratio']:.2f};"
+         f"shed_rate={r['shed_rate']:.2f};retries={r['retries']};"
+         f"errors={r['errors']};exact={r['exact']}")
 
 
 if __name__ == "__main__":

@@ -54,7 +54,8 @@ SECTIONS = ("kernels", "quant", "layers", "throughput", "serving")
 # column) is treated as lower-better latency when compared
 HIGHER_BETTER = ("tok_s", "images_per_s", "loop_images_per_s", "speedup",
                  "continuous_over_static", "reuse_gain", "concurrent_ratio",
-                 "ttft_speedup", "hit_rate", "paged_prefix_toks")
+                 "ttft_speedup", "hit_rate", "paged_prefix_toks",
+                 "serve_degraded_ratio", "degraded_ratio")
 
 
 # --------------------------------------------------------------------------
@@ -148,6 +149,15 @@ def collect_headline(sections: Dict[str, dict]) -> Dict[str, float]:
         for key in ("paged_prefix_toks", "concurrent_ratio", "ttft_speedup"):
             if key in gain["derived"]:
                 h[key] = gain["derived"][key]
+    # §Resilience: throughput retained under the injected-fault drain and
+    # the deterministic shed fraction (its exact flag rides in via
+    # collect_exact and is mandatory — see check below)
+    res = srows.get("serve/resilience")
+    if res:
+        if "degraded_ratio" in res["derived"]:
+            h["serve_degraded_ratio"] = res["derived"]["degraded_ratio"]
+        if "shed_rate" in res["derived"]:
+            h["serve_shed_rate"] = res["derived"]["shed_rate"]
     for rname, row in sections.get("throughput", {}).get("rows", {}).items():
         if rname.endswith("/e2e") and "speedup" in row["derived"]:
             prim = rname.split("/")[1]

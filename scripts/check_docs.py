@@ -85,7 +85,7 @@ def check_markdown_links() -> list:
 # benchmarks/layer_bench.py's section of the benchmark book).
 REQUIRED_SECTIONS = ("Roofline", "Perf", "Dry-run", "Serving", "Paged-KV",
                      "Quantized", "Sub-byte", "Per-layer", "Throughput",
-                     "Observability", "Static-checks")
+                     "Observability", "Static-checks", "Resilience")
 
 
 def check_section_citations() -> list:

@@ -135,6 +135,16 @@ def run_serve(args, errors: List[str], warnings: List[str]) -> None:
         ("lm/paged", check_serve_config(
             ServeConfig(kv_layout="paged"), cfg, strict=args.strict)),
         ("cnn/default", check_cnn_serve_config(CNNServeConfig())),
+        # §Resilience knobs: a fault-hardened config (deadline + capped
+        # queue + drop shedding) must validate clean on both engines
+        ("lm/faulted", check_serve_config(
+            ServeConfig(deadline_s=5.0, max_queue=16, shed_policy="drop",
+                        max_retries=3, retry_backoff_s=0.01), cfg,
+            strict=args.strict)),
+        ("cnn/faulted", check_cnn_serve_config(
+            CNNServeConfig(deadline_s=5.0, max_queue=16,
+                           shed_policy="drop", max_retries=3,
+                           retry_backoff_s=0.01))),
     ]
     for name, errs in checks:
         print(f"{name}: {'FAIL' if errs else 'ok'}")

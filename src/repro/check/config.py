@@ -13,6 +13,7 @@ from __future__ import annotations
 from typing import List, Optional
 
 SCHEDULERS = ("continuous", "static")
+SHED_POLICIES = ("reject", "drop")
 PRECISIONS = ("float", "int8", "int8-xla", "w4a8")
 KV_CACHES = ("float", "int8")
 KV_LAYOUTS = ("contiguous", "paged")
@@ -51,6 +52,36 @@ def kv_cache_bytes(cfg, scfg) -> int:
     return cfg.n_layers * 2 * scfg.max_batch * scfg.max_len * per_pos
 
 
+def _check_resilience(scfg, errs: List[str]):
+    """Failure-model knobs shared by ServeConfig and CNNServeConfig:
+    deadline_s / max_queue / shed_policy / max_retries / retry_backoff_s
+    (EXPERIMENTS.md §Resilience)."""
+    d = getattr(scfg, "deadline_s", None)
+    if d is not None and (not isinstance(d, (int, float)) or d <= 0):
+        errs.append(f"deadline_s must be > 0 (or None to disable), "
+                    f"got {d!r}")
+    mq = getattr(scfg, "max_queue", None)
+    if mq is not None:
+        if not isinstance(mq, int) or mq < 1:
+            errs.append(f"max_queue must be a positive int (or None to "
+                        f"disable shedding), got {mq!r}")
+        elif isinstance(scfg.max_batch, int) and mq < scfg.max_batch:
+            errs.append(
+                f"max_queue={mq} is below max_batch={scfg.max_batch}: the "
+                "scheduler could never fill a round before shedding — "
+                "raise max_queue to at least max_batch")
+    sp = getattr(scfg, "shed_policy", "reject")
+    if sp not in SHED_POLICIES:
+        errs.append(f"unknown shed_policy: {sp!r} "
+                    f"(choose from {SHED_POLICIES})")
+    mr = getattr(scfg, "max_retries", 0)
+    if not isinstance(mr, int) or mr < 0:
+        errs.append(f"max_retries must be an int >= 0, got {mr!r}")
+    rb = getattr(scfg, "retry_backoff_s", 0.0)
+    if not isinstance(rb, (int, float)) or rb < 0:
+        errs.append(f"retry_backoff_s must be >= 0, got {rb!r}")
+
+
 def check_serve_config(scfg, cfg=None, *, hbm_budget: Optional[int] = None,
                        strict: bool = True) -> List[str]:
     """Every violation of a :class:`~repro.serve.engine.ServeConfig`
@@ -80,6 +111,7 @@ def check_serve_config(scfg, cfg=None, *, hbm_budget: Optional[int] = None,
             errs.append(f"{knob} must be a positive int, got {v!r}")
     if scfg.temperature < 0:
         errs.append(f"temperature must be >= 0, got {scfg.temperature!r}")
+    _check_resilience(scfg, errs)
     if scfg.kv_cache == "int8" and scfg.scheduler != "continuous":
         errs.append("kv_cache='int8' needs scheduler='continuous' (the "
                     "static path decodes off the float prefill cache)")
@@ -159,4 +191,5 @@ def check_cnn_serve_config(scfg) -> List[str]:
     if not isinstance(scfg.max_batch, int) or scfg.max_batch < 1:
         errs.append(f"max_batch must be a positive int, got "
                     f"{scfg.max_batch!r}")
+    _check_resilience(scfg, errs)
     return errs

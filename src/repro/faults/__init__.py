@@ -1,0 +1,21 @@
+"""repro.faults — deterministic, seeded fault injection plus the chaos
+harness that drives the serve engines through seeded fault schedules.
+
+``inject`` is the zero-dependency core (stdlib only, importable from the
+kernel dispatch layer without cycles): named fault *sites* at the hot
+seams, a seeded :class:`FaultPlan` of ``{site, kind, nth/probability}``
+entries activated via context manager or the ``REPRO_FAULTS`` env var,
+and a :func:`check` entry point that is a single global read when no plan
+is active. ``chaos`` (imported lazily — it pulls in the serve stack)
+runs paired fault-free/faulted workloads and checks the invariants that
+define correctness under failure (EXPERIMENTS.md §Resilience).
+"""
+from .inject import (CORRUPT_SITES, KINDS, SITES, FaultPlan, FaultSpec,
+                     Fired, InjectedFault, active_plan, check, deactivate,
+                     install, install_from_env, parse_env)
+
+__all__ = [
+    "CORRUPT_SITES", "KINDS", "SITES", "FaultPlan", "FaultSpec", "Fired",
+    "InjectedFault", "active_plan", "check", "deactivate", "install",
+    "install_from_env", "parse_env",
+]

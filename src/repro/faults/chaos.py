@@ -1,0 +1,270 @@
+"""Chaos harness: paired fault-free / faulted runs + invariant checks.
+
+The fault-injection counterpart of the bench suite's exactness flags: a
+fault schedule is only useful if the *hardened* engine provably keeps its
+promises under it. This module runs the same workload twice on fresh
+engines — once clean, once under a :class:`~repro.faults.inject.FaultPlan`
+— and checks the degradation contract (EXPERIMENTS.md §Resilience):
+
+1. **Terminal statuses** — every submitted request ends ``done`` with a
+   terminal ``status`` in {ok, timeout, error, shed}; nothing hangs and no
+   injected fault escapes ``run_until_drained`` as an exception.
+2. **Survivor bit-identity** — requests the faulted run completed with
+   ``status="ok"`` whose uid is NOT in ``engine.poisoned_uids`` must carry
+   byte-for-byte the stream the clean run produced (greedy decode is
+   batch-composition-independent, so retiring a poisoned neighbour must
+   not perturb survivors).
+3. **Pool conservation** — after a paged drain, ``BlockPool.audit``
+   (free + allocated == usable, non-negative refcounts, no leaked pages)
+   returns no violations.
+4. **Balanced spans** — every ``obs.trace`` B event emitted during the
+   faulted run has its E: the error paths unwind through the same span
+   context managers as the happy path.
+
+Import discipline: ``repro.faults.__init__`` must NOT import this module
+(it pulls in the serving stack, which itself imports ``faults.inject`` at
+its seams). Use it as ``from repro.faults import chaos``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+
+from repro.faults import inject
+from repro.obs import trace as obs_trace
+
+TERMINAL = ("ok", "timeout", "error", "shed")
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    """Outcome of one paired run. ``violations`` empty == every invariant
+    held; each entry is one human-readable broken invariant (full-list
+    style, same as ``repro.check``)."""
+    violations: List[str]
+    statuses: Dict[int, str]            # uid -> terminal status (faulted)
+    survivors: List[int]                # uids compared bit-identically
+    poisoned: set                       # uids a corrupt fault touched
+    fired: int                          # faults the plan actually fired
+    pool_violations: List[str]          # BlockPool.audit output (LM paged)
+    stats: dict                         # faulted engine's stats snapshot
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def summary(self) -> str:
+        by = collections.Counter(self.statuses.values())
+        head = (f"fired={self.fired} statuses="
+                + ",".join(f"{k}:{v}" for k, v in sorted(by.items()))
+                + f" survivors={len(self.survivors)}"
+                  f" poisoned={len(self.poisoned)}")
+        if self.ok:
+            return head + " [all invariants held]"
+        return head + "\n" + "\n".join(f"  - {v}" for v in self.violations)
+
+
+def _submit_all(engine, reqs) -> List:
+    """Submit tolerating shed rejections; returns every request (shed-
+    rejected ones carry no terminal status — they never entered)."""
+    from repro.serve.engine import QueueFullError
+    entered = []
+    for r in reqs:
+        try:
+            engine.submit(r)
+        except QueueFullError:
+            r.status = "shed"
+            r.done = True
+            continue
+        entered.append(r)
+    return entered
+
+
+def _check_terminal(reqs, violations: List[str]):
+    for r in reqs:
+        if not r.done:
+            violations.append(f"request {r.uid} not done after drain")
+        if r.status not in TERMINAL:
+            violations.append(f"request {r.uid} has non-terminal "
+                              f"status {r.status!r}")
+
+
+def _check_spans(events: Sequence[dict], violations: List[str]):
+    open_spans = collections.Counter()
+    for ev in events:
+        if ev["ph"] == "B":
+            open_spans[ev["name"]] += 1
+        elif ev["ph"] == "E":
+            open_spans[ev["name"]] -= 1
+    for name, n in sorted(open_spans.items()):
+        if n:
+            violations.append(
+                f"unbalanced span {name!r}: {n:+d} (an error path returned "
+                "without unwinding its trace context manager)")
+
+
+def _capture_spans(fn):
+    """Run ``fn()`` with the process tracer force-enabled; returns
+    (fn result, the events emitted during the call)."""
+    tr = obs_trace.TRACER
+    was = tr.enabled
+    before = len(tr.events())
+    tr.enable()
+    try:
+        out = fn()
+    finally:
+        if not was:
+            tr.disable()
+    return out, tr.events()[before:]
+
+
+def _drain_faulted(engine, reqs, fault_plan: inject.FaultPlan):
+    fault_plan.reset()
+    with fault_plan:
+        entered = _submit_all(engine, reqs)
+        done = engine.run_until_drained()
+    return entered, done
+
+
+# ---------------------------------------------------------------------- LM
+
+
+def run_lm_chaos(make_engine: Callable[[], object],
+                 make_requests: Callable[[], List[object]],
+                 fault_plan: inject.FaultPlan,
+                 *, check_spans: bool = True,
+                 expect_fired: bool = True) -> ChaosReport:
+    """Paired LM run: ``make_engine``/``make_requests`` must build a fresh
+    engine / identical request list per call (requests are consumed).
+    The workload should be greedy — survivor bit-identity leans on greedy
+    streams being independent of batch composition."""
+    # clean reference: same engine config, no plan active
+    base_eng = make_engine()
+    base_reqs = make_requests()
+    prev = inject.active_plan()
+    inject.deactivate()
+    try:
+        _submit_all(base_eng, base_reqs)
+        base_eng.run_until_drained()
+    finally:
+        inject.install(prev)
+    baseline = {r.uid: list(r.out_tokens) for r in base_reqs
+                if r.status == "ok"}
+
+    eng = make_engine()
+    reqs = make_requests()
+    if check_spans:
+        _, events = _capture_spans(
+            lambda: _drain_faulted(eng, reqs, fault_plan))
+    else:
+        _drain_faulted(eng, reqs, fault_plan)
+        events = []
+
+    violations: List[str] = []
+    _check_terminal(reqs, violations)
+    if expect_fired and not fault_plan.log:
+        violations.append("fault plan never fired — the schedule does not "
+                          "intersect this workload's site hits")
+    survivors = [r.uid for r in reqs
+                 if r.status == "ok" and r.uid not in eng.poisoned_uids]
+    for r in reqs:
+        if r.uid not in survivors:
+            continue
+        if r.uid not in baseline:
+            violations.append(f"survivor {r.uid} has no clean-run "
+                              "reference (baseline did not finish it ok)")
+        elif list(r.out_tokens) != baseline[r.uid]:
+            violations.append(
+                f"survivor {r.uid} diverged from the fault-free stream: "
+                f"{baseline[r.uid]} -> {list(r.out_tokens)}")
+    pool_violations: List[str] = []
+    if getattr(eng, "pool", None) is not None:
+        pool_violations = eng.pool.audit(expect_drained=True)
+        violations += [f"pool: {v}" for v in pool_violations]
+    if check_spans:
+        _check_spans(events, violations)
+    return ChaosReport(
+        violations=violations,
+        statuses={r.uid: r.status for r in reqs},
+        survivors=survivors,
+        poisoned=set(eng.poisoned_uids),
+        fired=len(fault_plan.log),
+        pool_violations=pool_violations,
+        stats=eng.stats,
+    )
+
+
+# --------------------------------------------------------------------- CNN
+
+
+def run_cnn_chaos(make_engine: Callable[[], object],
+                  make_requests: Callable[[], List[object]],
+                  fault_plan: inject.FaultPlan,
+                  *, check_spans: bool = True,
+                  expect_fired: bool = True,
+                  logits_exact: bool = True) -> ChaosReport:
+    """Paired CNN run. Survivor identity compares logits bitwise by
+    default. ``logits_exact=False`` relaxes to tight allclose + identical
+    argmax for workloads where plan degradation switches the numeric path
+    mid-run (the integer trunk is bit-exact across pallas/xla but the
+    float gap->dense head is tolerance-exact; see tests/test_batched.py).
+    A plan built with ``method="xla"`` degrades onto the same path and
+    stays bitwise."""
+    base_eng = make_engine()
+    base_reqs = make_requests()
+    prev = inject.active_plan()
+    inject.deactivate()
+    try:
+        _submit_all(base_eng, base_reqs)
+        base_eng.run_until_drained()
+    finally:
+        inject.install(prev)
+    baseline = {r.uid: np.asarray(r.logits) for r in base_reqs
+                if r.status == "ok"}
+
+    eng = make_engine()
+    reqs = make_requests()
+    if check_spans:
+        _, events = _capture_spans(
+            lambda: _drain_faulted(eng, reqs, fault_plan))
+    else:
+        _drain_faulted(eng, reqs, fault_plan)
+        events = []
+
+    violations: List[str] = []
+    _check_terminal(reqs, violations)
+    if expect_fired and not fault_plan.log:
+        violations.append("fault plan never fired — the schedule does not "
+                          "intersect this workload's site hits")
+    survivors = [r.uid for r in reqs
+                 if r.status == "ok" and r.uid not in eng.poisoned_uids]
+    for r in reqs:
+        if r.uid not in survivors:
+            continue
+        if r.uid not in baseline:
+            violations.append(f"survivor {r.uid} has no clean-run "
+                              "reference (baseline did not finish it ok)")
+            continue
+        got, want = np.asarray(r.logits), baseline[r.uid]
+        if logits_exact:
+            same = np.array_equal(got, want)
+        else:
+            same = (np.allclose(got, want, rtol=1e-5, atol=1e-6)
+                    and np.argmax(got) == np.argmax(want))
+        if not same:
+            violations.append(f"survivor {r.uid} logits diverged from the "
+                              "fault-free run")
+    if check_spans:
+        _check_spans(events, violations)
+    return ChaosReport(
+        violations=violations,
+        statuses={r.uid: r.status for r in reqs},
+        survivors=survivors,
+        poisoned=set(eng.poisoned_uids),
+        fired=len(fault_plan.log),
+        pool_violations=[],
+        stats=eng.stats,
+    )

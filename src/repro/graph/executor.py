@@ -100,7 +100,30 @@ class CompiledPlan:
         self.validate = validate
         self.node_configs: Dict[str, dict] = {}
         self.traces = 0                  # python-side compile counter
+        self.degraded = False            # degrade_to_xla happened (one-shot)
+        self._jit = jit
         self._fn = jax.jit(self._forward) if jit else self._forward
+
+    def degrade_to_xla(self):
+        """ONE-SHOT graceful degradation: re-point every node at the jnp
+        integer oracle (``method="xla"``) and re-jit the forward, dropping
+        the compiled pallas artifact. The xla oracles are bit-exact with
+        the pallas kernels (tests/test_kernels.py), so already-served
+        results stay comparable — only throughput degrades. Called by the
+        serving layer after repeated round failures; idempotent, logged
+        once, counted as ``graph.degraded`` in the process metrics."""
+        if self.degraded:
+            return
+        self.degraded = True
+        self.method = "xla"
+        self.node_configs = {}           # pallas schedules no longer apply
+        self._fn = jax.jit(self._forward) if self._jit else self._forward
+        obs_metrics.counter("graph.degraded").inc()
+        import warnings
+        warnings.warn(
+            "CompiledPlan degraded to the xla reference path after repeated "
+            "kernel failure — serving continues bit-exact but slower",
+            RuntimeWarning, stacklevel=2)
 
     # ------------------------------------------------------------- dispatch
 

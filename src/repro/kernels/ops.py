@@ -23,15 +23,29 @@ per primitive — the engine-coverage picture ``scripts/bench_snapshot.py``
 snapshots), and ``causal_conv1d``'s auto->xla mesh fallback is counted
 separately as ``kernels.fallback.causal_conv1d.mesh``. Calls from inside a
 jit count once per trace, eager calls once per call.
+
+Failure model (EXPERIMENTS.md §Resilience): the ``kernels.dispatch`` fault
+seam (``repro.faults``) fires once per pallas dispatch (per trace from
+inside a jit). An injected raise is retried a bounded number of times;
+repeated failure degrades THAT kernel to its jnp oracle for the rest of
+the process — sticky, one warning, counted as
+``kernels.degraded.<kernel>`` — which is semantics-preserving because the
+oracles are bit-exact with the pallas kernels (tests/test_kernels.py).
+``reset_degraded()`` clears the sticky state (tests); the dispatch
+counters keep recording the *requested* method, so degraded traffic is
+the gap between ``kernels.dispatch.<k>.pallas`` and
+``kernels.degraded.<k>``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+import warnings
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.faults import inject as _faults
 from repro.obs import metrics as _obs_metrics
 
 from . import ref
@@ -52,6 +66,58 @@ def _check_method(method: str, allowed=("pallas", "xla")):
 
 def _count_dispatch(kernel: str, method: str):
     _obs_metrics.counter(f"kernels.dispatch.{kernel}.{method}").inc()
+
+
+# --------------------------------------------------- degradation (resilience)
+
+#: kernels stuck on their xla oracle after repeated pallas failure:
+#: kernel name -> repr of the exception that exhausted the retries
+_DEGRADED: Dict[str, str] = {}
+
+#: retries per dispatch before a kernel degrades. Kernel dispatch happens
+#: at trace time, so there is no backoff sleep — a deterministic failure
+#: fails identically on every attempt and degrades immediately after.
+_MAX_DISPATCH_RETRIES = 2
+
+
+def degraded() -> Dict[str, str]:
+    """Kernels currently degraded to their oracle (name -> cause)."""
+    return dict(_DEGRADED)
+
+
+def reset_degraded() -> None:
+    """Clear the sticky pallas->xla degradations (test isolation)."""
+    _DEGRADED.clear()
+
+
+def _is_degraded(kernel: str) -> bool:
+    return kernel in _DEGRADED
+
+
+def _pallas_guard(kernel: str, pallas_fn, xla_fn):
+    """Run ``pallas_fn`` behind the ``kernels.dispatch`` fault seam with
+    bounded retries; repeated failure (injected or real) degrades
+    ``kernel`` to ``xla_fn`` — once, stickily, with one warning. The
+    schedule lookup / explicit-config feasibility check stay OUTSIDE this
+    guard: a CheckError is a caller bug, not a transient kernel fault."""
+    last: Optional[BaseException] = None
+    for _ in range(_MAX_DISPATCH_RETRIES + 1):
+        try:
+            _faults.check("kernels.dispatch")
+            return pallas_fn()
+        except _faults.InjectedFault as e:
+            last = e                    # transient by construction: retry
+        except Exception as e:
+            last = e                    # deterministic failure: degrading
+            break                       # now beats re-failing twice more
+    _DEGRADED[kernel] = repr(last)
+    _obs_metrics.counter(f"kernels.degraded.{kernel}").inc()
+    warnings.warn(
+        f"kernel {kernel}: pallas dispatch failed repeatedly ({last!r}); "
+        f"degraded to the xla oracle for the rest of the process "
+        f"(bit-exact, slower — reset_degraded() to retry pallas)",
+        RuntimeWarning, stacklevel=3)
+    return xla_fn()
 
 
 def _check_no_config(method: str, config, *extra_knobs):
@@ -104,8 +170,8 @@ def conv2d(x, w, bias=None, *, groups: int = 1, method: str = "pallas",
            w_shifts: Optional[jax.Array] = None):
     _check_method(method)
     _count_dispatch("conv2d", method)
-    if method == "xla":
-        _check_no_config(method, config)
+
+    def _xla():
         if w_shifts is not None:
             return ref.conv2d_w4_ref(x, w, w_shifts, bias, groups=groups,
                                      requant_shift=requant_shift, act=act)
@@ -113,6 +179,12 @@ def conv2d(x, w, bias=None, *, groups: int = 1, method: str = "pallas",
             return ref.conv2d_q8_ref(x, w, bias, groups=groups,
                                      requant_shift=requant_shift, act=act)
         return ref.conv2d_ref(x, w, bias, groups=groups, act=act)
+
+    if method == "xla":
+        _check_no_config(method, config)
+        return _xla()
+    if _is_degraded("conv2d"):
+        return _xla()
     from repro.tune import sig_conv2d
     n, h, wd, cx = x.shape
     if config is None:
@@ -121,9 +193,10 @@ def conv2d(x, w, bias=None, *, groups: int = 1, method: str = "pallas",
     else:
         _check_explicit(sig_conv2d, n, h, wd, cx, w.shape[-1], w.shape[0],
                         groups, config=config, dtype=_w4_dtype(x, w_shifts))
-    return _conv_pallas(x, w, bias, groups=groups, requant_shift=requant_shift,
-                        act=act, interpret=use_interpret(), config=config,
-                        w_shifts=w_shifts)
+    return _pallas_guard("conv2d", lambda: _conv_pallas(
+        x, w, bias, groups=groups, requant_shift=requant_shift,
+        act=act, interpret=use_interpret(), config=config,
+        w_shifts=w_shifts), _xla)
 
 
 def depthwise2d(x, w_dw, *, method: str = "pallas",
@@ -132,8 +205,8 @@ def depthwise2d(x, w_dw, *, method: str = "pallas",
                 w_shifts: Optional[jax.Array] = None):
     _check_method(method)
     _count_dispatch("depthwise2d", method)
-    if method == "xla":
-        _check_no_config(method, config)
+
+    def _xla():
         if w_shifts is not None:
             return ref.depthwise2d_w4_ref(x, w_dw, w_shifts,
                                           requant_shift=requant_shift, act=act)
@@ -141,6 +214,12 @@ def depthwise2d(x, w_dw, *, method: str = "pallas",
             return ref.depthwise2d_q8_ref(x, w_dw, requant_shift=requant_shift,
                                           act=act)
         return ref.depthwise2d_ref(x, w_dw, act=act)
+
+    if method == "xla":
+        _check_no_config(method, config)
+        return _xla()
+    if _is_degraded("depthwise2d"):
+        return _xla()
     from repro.tune import sig_depthwise2d
     n, h, wd, c = x.shape
     hk = w_dw.shape[1] if w_shifts is not None else w_dw.shape[0]
@@ -150,9 +229,9 @@ def depthwise2d(x, w_dw, *, method: str = "pallas",
     else:
         _check_explicit(sig_depthwise2d, n, h, wd, c, hk,
                         config=config, dtype=_w4_dtype(x, w_shifts))
-    return _dw_pallas(x, w_dw, requant_shift=requant_shift, act=act,
-                      interpret=use_interpret(), config=config,
-                      w_shifts=w_shifts)
+    return _pallas_guard("depthwise2d", lambda: _dw_pallas(
+        x, w_dw, requant_shift=requant_shift, act=act,
+        interpret=use_interpret(), config=config, w_shifts=w_shifts), _xla)
 
 
 def shift_conv2d(x, shifts, w_pw, bias=None, *, method: str = "pallas",
@@ -166,8 +245,8 @@ def shift_conv2d(x, shifts, w_pw, bias=None, *, method: str = "pallas",
     added at accumulator scale (quantized path only)."""
     _check_method(method)
     _count_dispatch("shift_conv2d", method)
-    if method == "xla":
-        _check_no_config(method, config)
+
+    def _xla():
         if w_shifts is not None:
             return ref.shift_conv2d_w4_ref(x, shifts, w_pw, w_shifts, bias,
                                            requant_shift=requant_shift,
@@ -181,6 +260,12 @@ def shift_conv2d(x, shifts, w_pw, bias=None, *, method: str = "pallas",
                              "only supported on the quantized path")
         return ref.shift_conv2d_ref(x, shifts, w_pw, max_shift=max_shift,
                                     act=act)
+
+    if method == "xla":
+        _check_no_config(method, config)
+        return _xla()
+    if _is_degraded("shift_conv2d"):
+        return _xla()
     from repro.tune import sig_shift_conv2d
     n, h, wd, c = x.shape
     if config is None:
@@ -189,9 +274,10 @@ def shift_conv2d(x, shifts, w_pw, bias=None, *, method: str = "pallas",
     else:
         _check_explicit(sig_shift_conv2d, n, h, wd, c, w_pw.shape[-1],
                         config=config, dtype=_w4_dtype(x, w_shifts))
-    return _shift_pallas(x, shifts, w_pw, bias, requant_shift=requant_shift,
-                         act=act, interpret=use_interpret(), config=config,
-                         w_shifts=w_shifts)
+    return _pallas_guard("shift_conv2d", lambda: _shift_pallas(
+        x, shifts, w_pw, bias, requant_shift=requant_shift,
+        act=act, interpret=use_interpret(), config=config,
+        w_shifts=w_shifts), _xla)
 
 
 def add_conv2d(x, w, bias=None, *, method: str = "pallas",
@@ -205,8 +291,8 @@ def add_conv2d(x, w, bias=None, *, method: str = "pallas",
     left shifts applied to the operands before |x - w|."""
     _check_method(method)
     _count_dispatch("add_conv2d", method)
-    if method == "xla":
-        _check_no_config(method, config)
+
+    def _xla():
         if w_shifts is not None:
             return ref.add_conv2d_w4_ref(x, w, w_shifts, bias,
                                          requant_shift=requant_shift,
@@ -222,6 +308,12 @@ def add_conv2d(x, w, bias=None, *, method: str = "pallas",
                              "requant_shift are only supported on the "
                              "quantized path")
         return ref.add_conv2d_ref(x, w, act=act)
+
+    if method == "xla":
+        _check_no_config(method, config)
+        return _xla()
+    if _is_degraded("add_conv2d"):
+        return _xla()
     from repro.tune import sig_add_conv2d
     n, h, wd, cx = x.shape
     if config is None:
@@ -230,10 +322,10 @@ def add_conv2d(x, w, bias=None, *, method: str = "pallas",
     else:
         _check_explicit(sig_add_conv2d, n, h, wd, cx, w.shape[-1], w.shape[0],
                         config=config, dtype=_w4_dtype(x, w_shifts))
-    return _add_pallas(x, w, bias, requant_shift=requant_shift,
-                       x_preshift=x_preshift, w_preshift=w_preshift, act=act,
-                       interpret=use_interpret(), config=config,
-                       w_shifts=w_shifts)
+    return _pallas_guard("add_conv2d", lambda: _add_pallas(
+        x, w, bias, requant_shift=requant_shift,
+        x_preshift=x_preshift, w_preshift=w_preshift, act=act,
+        interpret=use_interpret(), config=config, w_shifts=w_shifts), _xla)
 
 
 def maxpool2d(x, *, window: int = 2, stride: Optional[int] = None,
@@ -243,9 +335,15 @@ def maxpool2d(x, *, window: int = 2, stride: Optional[int] = None,
     scale) — the graph executor's integer-only pool boundary."""
     _check_method(method)
     _count_dispatch("maxpool2d", method)
+
+    def _xla():
+        return ref.maxpool2d_ref(x, window=window, stride=stride)
+
     if method == "xla":
         _check_no_config(method, config)
-        return ref.maxpool2d_ref(x, window=window, stride=stride)
+        return _xla()
+    if _is_degraded("maxpool2d"):
+        return _xla()
     from repro.tune import sig_maxpool2d
     n, h, wd, c = x.shape
     if config is None:
@@ -254,8 +352,9 @@ def maxpool2d(x, *, window: int = 2, stride: Optional[int] = None,
     else:
         _check_explicit(sig_maxpool2d, n, h, wd, c, window, stride or window,
                         config=config, dtype=x.dtype)
-    return _pool_pallas(x, window=window, stride=stride,
-                        interpret=use_interpret(), config=config)
+    return _pallas_guard("maxpool2d", lambda: _pool_pallas(
+        x, window=window, stride=stride,
+        interpret=use_interpret(), config=config), _xla)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
@@ -309,6 +408,8 @@ def causal_conv1d(x, w, *, method: str = "auto",
     _count_dispatch("causal_conv1d", method)
     if method == "xla":
         return ref.causal_conv1d_ref(x, w)
+    if _is_degraded("causal_conv1d"):
+        return ref.causal_conv1d_ref(x, w)
     from repro.tune import sig_causal_conv1d
     b, l, d = x.shape
     if config is None:
@@ -318,9 +419,10 @@ def causal_conv1d(x, w, *, method: str = "auto",
                         config=config, dtype=x.dtype)
     from repro.tune import default_config
     base = default_config("causal_conv1d")
-    return _causal_conv1d_diff(x, w,
-                               int(config.get("block_l", base["block_l"])),
-                               int(config.get("block_c", base["block_c"])))
+    return _pallas_guard("causal_conv1d", lambda: _causal_conv1d_diff(
+        x, w, int(config.get("block_l", base["block_l"])),
+        int(config.get("block_c", base["block_c"]))),
+        lambda: ref.causal_conv1d_ref(x, w))
 
 
 def matmul(a, b, *, method: str = "pallas", requant_shift: Optional[int] = None,
@@ -331,12 +433,18 @@ def matmul(a, b, *, method: str = "pallas", requant_shift: Optional[int] = None,
     """Explicit bm/bn/bk win over ``config``, which wins over the tuner."""
     _check_method(method)
     _count_dispatch("matmul", method)
-    if method == "xla":
-        _check_no_config(method, config, bm, bn, bk)
+
+    def _xla():
         if w_shifts is not None:
             return ref.matmul_w4_ref(a, b, w_shifts,
                                      requant_shift=requant_shift, act=act)
         return ref.matmul_ref(a, b, requant_shift=requant_shift, act=act)
+
+    if method == "xla":
+        _check_no_config(method, config, bm, bn, bk)
+        return _xla()
+    if _is_degraded("matmul"):
+        return _xla()
     from repro.tune import sig_matmul
     explicit = config is not None or any(v is not None for v in (bm, bn, bk))
     if config is None and None in (bm, bn, bk):
@@ -349,6 +457,6 @@ def matmul(a, b, *, method: str = "pallas", requant_shift: Optional[int] = None,
     if explicit:
         _check_explicit(sig_matmul, a.shape[0], a.shape[1], b.shape[1],
                         config=config, dtype=_w4_dtype(a, w_shifts))
-    return _mm_pallas(a, b, requant_shift=requant_shift, act=act,
-                      interpret=use_interpret(), config=config,
-                      w_shifts=w_shifts)
+    return _pallas_guard("matmul", lambda: _mm_pallas(
+        a, b, requant_shift=requant_shift, act=act,
+        interpret=use_interpret(), config=config, w_shifts=w_shifts), _xla)

@@ -4,9 +4,13 @@ EXPERIMENTS.md §Serving) with contiguous or paged KV backing — the paged
 layout pools fixed-size pages with hash-based prefix reuse
 (engine.BlockPool / EXPERIMENTS.md §Paged-KV) — plus the CNN microbatching
 engine that admits queued image requests into batched CompiledPlan rounds
-(cnn.CNNEngine / EXPERIMENTS.md §Throughput)."""
+(cnn.CNNEngine / EXPERIMENTS.md §Throughput). Both engines degrade
+instead of dying under faults — every request ends in a terminal status
+(ok | timeout | error | shed), with load shedding raising QueueFullError
+under shed_policy="reject" (repro.faults / EXPERIMENTS.md §Resilience)."""
 from .cnn import CNNEngine, CNNServeConfig, ImageRequest
-from .engine import BlockPool, Engine, Request, ServeConfig
+from .engine import (BlockPool, Engine, QueueFullError, Request,
+                     ServeConfig)
 
-__all__ = ["BlockPool", "Engine", "Request", "ServeConfig",
-           "CNNEngine", "CNNServeConfig", "ImageRequest"]
+__all__ = ["BlockPool", "Engine", "QueueFullError", "Request",
+           "ServeConfig", "CNNEngine", "CNNServeConfig", "ImageRequest"]

@@ -21,6 +21,18 @@ forward before stopping so ``images_per_s`` measures device time, request
 timestamps are monotonic ``perf_counter`` values with one wall-clock field
 for trace export, and with ``REPRO_TRACE=1`` each round and each request
 lifecycle (queue_wait -> execute) lands on the process tracer.
+
+Failure model (EXPERIMENTS.md §Resilience): mirrors the LM engine — every
+request ends in a terminal ``status`` (ok | timeout | error | shed). The
+``cnn.batch_round`` fault seam fires once per round attempt; an injected
+raise is absorbed by ``max_retries`` bounded retries, then by a ONE-SHOT
+whole-plan degradation to the xla reference path
+(:meth:`CompiledPlan.degrade_to_xla` — logged once, counted in obs
+metrics) before the round's batch retires with ``status="error"``. A
+``corrupt`` fault poisons the round's host logits; the affected uids are
+recorded in ``CNNEngine.poisoned_uids`` (contained, not detected).
+Deadlines cancel at round admission; a full queue sheds at ``submit``
+(``CNNServeConfig(max_queue=, shed_policy=)``).
 """
 from __future__ import annotations
 
@@ -32,9 +44,11 @@ from typing import List, Optional
 import jax
 import numpy as np
 
+from repro.faults import inject as faults
 from repro.graph.executor import CompiledPlan
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from repro.serve.engine import QueueFullError
 
 
 @dataclasses.dataclass
@@ -44,6 +58,9 @@ class ImageRequest:
     image: np.ndarray               # (H, W, C) float
     logits: Optional[np.ndarray] = None
     done: bool = False
+    status: str = "pending"         # terminal: ok | timeout | error | shed
+    error: Optional[str] = None     # the absorbed exception, status="error"
+    deadline_s: Optional[float] = None  # overrides CNNServeConfig.deadline_s
     # engine-filled metrics — monotonic perf_counter stamps (negative-proof
     # intervals); submit_wall_t is the wall-clock field for trace export
     submit_t: float = 0.0
@@ -64,8 +81,17 @@ class ImageRequest:
 @dataclasses.dataclass
 class CNNServeConfig:
     """max_batch: batch slots per round (forward_batch pads a ragged final
-    round to its pow2 bucket, so partial rounds reuse a compiled shape)."""
+    round to its pow2 bucket, so partial rounds reuse a compiled shape).
+    deadline_s / max_queue / shed_policy / max_retries / retry_backoff_s
+    carry the same failure-model semantics as :class:`ServeConfig`
+    (deadlines checked at round admission; "reject" raises
+    :class:`QueueFullError`, "drop" marks ``status="shed"``)."""
     max_batch: int = 8
+    deadline_s: Optional[float] = None
+    max_queue: Optional[int] = None
+    shed_policy: str = "reject"
+    max_retries: int = 2
+    retry_backoff_s: float = 0.0
 
 
 class CNNEngine:
@@ -90,6 +116,12 @@ class CNNEngine:
             "batch_time": self.metrics.counter("serve.cnn.batch_time_s"),
             "latency": self.metrics.histogram("serve.cnn.latency_s"),
             "queue_wait": self.metrics.histogram("serve.cnn.queue_wait_s"),
+            # resilience counters (EXPERIMENTS.md §Resilience)
+            "timeouts": self.metrics.counter("serve.cnn.timeouts"),
+            "errors": self.metrics.counter("serve.cnn.errors"),
+            "shed": self.metrics.counter("serve.cnn.shed"),
+            "retries": self.metrics.counter("serve.cnn.retries"),
+            "degraded": self.metrics.counter("serve.cnn.degraded"),
         }
         self.reset_stats()
 
@@ -97,6 +129,9 @@ class CNNEngine:
 
     def reset_stats(self):
         self.metrics.reset()
+        # uids whose logits an injected "corrupt" fault poisoned (contained,
+        # not detected — the chaos harness excludes them from bit-identity)
+        self.poisoned_uids: set = set()
 
     @property
     def stats(self) -> dict:
@@ -117,6 +152,11 @@ class CNNEngine:
         c["latency_p99_s"] = m["latency"].percentile(99)
         c["queue_wait_avg_s"] = m["queue_wait"].mean
         c["queue_wait_p99_s"] = m["queue_wait"].percentile(99)
+        c["timeouts"] = int(m["timeouts"].value)
+        c["errors"] = int(m["errors"].value)
+        c["shed"] = int(m["shed"].value)
+        c["retries"] = int(m["retries"].value)
+        c["degraded"] = int(m["degraded"].value)
         return c
 
     def _observe_served(self, req: ImageRequest):
@@ -136,7 +176,24 @@ class CNNEngine:
     def submit(self, req: ImageRequest):
         req.submit_t = time.perf_counter()
         req.submit_wall_t = time.time()
+        # load shedding at the door (single-threaded, so qsize is exact)
+        mq = self.scfg.max_queue
+        if mq is not None and self.queue.qsize() >= mq:
+            self._m["shed"].inc()
+            if self.scfg.shed_policy == "reject":
+                raise QueueFullError(
+                    f"image request {req.uid}: queue holds max_queue={mq} "
+                    f"requests (shed_policy='reject')")
+            req.done = True             # "drop": terminal without enqueue
+            req.status = "shed"
+            req.finish_t = time.perf_counter()
+            return
         self.queue.put(req)
+
+    def _expired(self, req: ImageRequest, now: float) -> bool:
+        d = (req.deadline_s if req.deadline_s is not None
+             else self.scfg.deadline_s)
+        return d is not None and (now - req.submit_t) > d
 
     def _take_round(self) -> List[ImageRequest]:
         # get_nowait, not .empty(): .empty() is only a racy hint once a
@@ -151,29 +208,93 @@ class CNNEngine:
 
     def run_until_drained(self) -> List[ImageRequest]:
         """Admit queued requests into batch rounds until the queue is empty;
-        returns the finished requests in completion order."""
+        returns the finished requests in completion order (every one with a
+        terminal status — a failed round retires its batch, it never kills
+        the drain)."""
         finished: List[ImageRequest] = []
         while True:
             batch = self._take_round()
             if not batch:
                 break
+            # deadline check at round admission: an expired request never
+            # gets a forward spent on it
+            now = time.perf_counter()
+            live: List[ImageRequest] = []
+            for r in batch:
+                if self._expired(r, now):
+                    r.done = True
+                    r.status = "timeout"
+                    if r.admit_t == 0.0:
+                        r.admit_t = now
+                    r.finish_t = now
+                    self._m["timeouts"].inc()
+                    finished.append(r)
+                else:
+                    live.append(r)
+            if not live:
+                continue
+            batch = live
             x = np.stack([r.image for r in batch])
             rnd = int(self._m["batch_rounds"].value)
             t0 = time.perf_counter()
             for r in batch:
                 r.admit_t = t0
-            with obs_trace.span("cnn.batch_round", round=rnd,
-                                batch=len(batch)):
-                logits = self.plan.forward_batch(x)
-                # sync before stopping the timer: images_per_s must measure
-                # device time, not JAX async-dispatch enqueue time
-                jax.block_until_ready(logits)
+
+            def attempt_round():
+                fired = faults.check("cnn.batch_round")
+                with obs_trace.span("cnn.batch_round", round=rnd,
+                                    batch=len(batch)):
+                    logits = self.plan.forward_batch(x)
+                    # sync before stopping the timer: images_per_s must
+                    # measure device time, not async-dispatch enqueue time
+                    jax.block_until_ready(logits)
+                return np.asarray(logits), fired
+
+            got = None
+            last_err: Optional[BaseException] = None
+            for att in range(self.scfg.max_retries + 1):
+                if att:
+                    self._m["retries"].inc()
+                    if self.scfg.retry_backoff_s > 0:
+                        time.sleep(self.scfg.retry_backoff_s
+                                   * (2 ** (att - 1)))
+                try:
+                    got = attempt_round()
+                    break
+                except faults.InjectedFault as e:
+                    last_err = e        # fired pre-dispatch: retry is safe
+                except Exception as e:
+                    last_err = e        # real plan failure: stop retrying,
+                    break               # fall through to degradation
+            if got is None and not self.plan.degraded:
+                # one-shot graceful degradation: recompile the whole plan
+                # on the xla reference path (logged + counted inside
+                # degrade_to_xla) and give the round one more attempt
+                self.plan.degrade_to_xla()
+                self._m["degraded"].inc()
+                try:
+                    got = attempt_round()
+                except Exception as e:
+                    last_err = e
+            if got is None:
+                for r in batch:         # one shared forward — the whole
+                    r.done = True       # round retires together
+                    r.status = "error"
+                    r.error = repr(last_err)
+                    r.finish_t = time.perf_counter()
+                    self._m["errors"].inc()
+                finished.extend(batch)
+                continue
             self._m["batch_time"].inc(time.perf_counter() - t0)
-            logits = np.asarray(logits)
+            logits, fired = got
+            if fired is not None:       # corrupt directive: poison the
+                logits = fired.apply(logits)   # round's host logits
+                self.poisoned_uids.update(r.uid for r in batch)
             now = time.perf_counter()
             for i, r in enumerate(batch):
                 r.logits = logits[i]
                 r.done = True
+                r.status = "ok"
                 r.finish_t = now
                 r.batch_round = rnd
                 self._observe_served(r)

@@ -69,6 +69,31 @@ not JAX async-dispatch enqueue time; request timestamps are monotonic
 ``time.perf_counter()`` values (intervals can't go negative under clock
 adjustment) with one wall-clock field (``submit_wall_t``) kept for trace
 export.
+
+Failure model (EXPERIMENTS.md §Resilience): the engine degrades instead of
+dying. Every request reaches exactly one terminal ``status``:
+
+* ``ok``      — retired normally (EOS / max_new_tokens / KV cap).
+* ``timeout`` — its ``deadline_s`` (per-request, falling back to
+  ``ServeConfig.deadline_s``) elapsed; cancelled at a round boundary with
+  partial ``out_tokens``, KV slot and pool pages reclaimed.
+* ``error``   — a prefill or decode failure survived
+  ``ServeConfig.max_retries`` bounded retries (exponential
+  ``retry_backoff_s``); only the poisoned request(s) retire, survivors
+  keep decoding bit-identically (batch composition never changes a
+  greedy stream). An unrecoverable *decode-round* failure retires the
+  whole active set and rebuilds the KV arena (donated buffers may be
+  dead), then drains the queue against the fresh arena.
+* ``shed``    — rejected at ``submit`` because the queue held
+  ``max_queue`` requests (``shed_policy="reject"`` raises
+  :class:`QueueFullError` instead of marking).
+
+Fault seams (``repro.faults``): ``engine.prefill`` fires per admission
+attempt, ``engine.decode_round`` per round attempt, ``blockpool.alloc``
+inside :meth:`BlockPool.alloc`. A ``corrupt`` fault poisons that round's
+host logits; the affected uids are recorded in ``Engine.poisoned_uids``
+(silent corruption is contained, not detected). With no plan active every
+seam is a single global read.
 """
 from __future__ import annotations
 
@@ -85,9 +110,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.faults import inject as faults
 from repro.models import api
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+
+
+class QueueFullError(RuntimeError):
+    """Raised by :meth:`Engine.submit` under ``shed_policy="reject"`` when
+    the queue already holds ``max_queue`` requests."""
 
 
 @dataclasses.dataclass
@@ -98,8 +129,11 @@ class Request:
     max_new_tokens: int = 16
     eos_id: Optional[int] = None    # overrides ServeConfig.eos_id when set
     temperature: Optional[float] = None  # overrides the engine default
+    deadline_s: Optional[float] = None   # overrides ServeConfig.deadline_s
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    status: str = "pending"         # terminal: ok | timeout | error | shed
+    error: Optional[str] = None     # the absorbed exception, status="error"
     # engine-filled metrics — monotonic time.perf_counter() stamps, so the
     # derived intervals (ttft, queue wait, tpot) can never go negative under
     # wall-clock adjustment; submit_wall_t is the one wall-clock field kept
@@ -143,6 +177,16 @@ class BlockPool:
     the hitting request's token prefix.
 
     Single-threaded by design — the engine drives it between device calls.
+
+    Integrity: the pool validates its own transitions instead of silently
+    corrupting the free list — ``free`` / ``release`` raise ``ValueError``
+    on a double-free, an unknown page id, a page with live references, or
+    a parked (evictable) page; ``acquire`` revalidates that a refcount-0
+    page it is un-parking was not evicted in the meantime. :meth:`audit`
+    returns every violated structural invariant (conservation
+    ``free + live-in-use + parked == usable``, positive refcounts,
+    digest bijection) as a list — the chaos harness and the property
+    sweep in ``tests/test_faults.py`` call it after every op/drain.
     """
 
     def __init__(self, num_blocks: int, block_size: int,
@@ -155,6 +199,7 @@ class BlockPool:
         self.prefix_cache = prefix_cache
         # pop() -> lowest id first; freed pages return LIFO (deterministic)
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._allocated: set = set()          # handed out, not yet freed
         self._ref: Dict[int, int] = {}        # page id -> live refcount
         self._digest: Dict[str, int] = {}     # digest -> page id
         self._page_digest: Dict[int, str] = {}
@@ -210,14 +255,33 @@ class BlockPool:
         return ids
 
     def acquire(self, ids: List[int]) -> None:
-        """Take a live reference on hashed pages (un-parks evictable ones)."""
+        """Take a live reference on hashed pages (un-parks evictable ones).
+
+        A refcount-0 page being un-parked is revalidated: it must still be
+        parked with its digest mapping intact — if ``alloc``'s eviction scan
+        reclaimed it since the lookup, referencing it would alias a page
+        now owned by another request, so that is a ``ValueError``."""
         for bid in ids:
-            self._ref[bid] = self._ref.get(bid, 0) + 1
-            self._evictable.pop(bid, None)
+            if bid in self._ref:
+                self._ref[bid] += 1
+                continue
+            if bid not in self._evictable or bid not in self._page_digest:
+                raise ValueError(
+                    f"acquire: page {bid} has no live references and is not "
+                    f"parked evictable — it was evicted (or never published); "
+                    f"re-run lookup before acquiring")
+            self._evictable.pop(bid)
+            self._ref[bid] = 1
 
     def release(self, ids: List[int]) -> None:
-        """Drop a live reference; pages reaching zero park as evictable."""
+        """Drop a live reference; pages reaching zero park as evictable.
+        Releasing a page with no live reference (double-release, or an id
+        that was never acquired/published) is a ``ValueError``."""
         for bid in ids:
+            if self._ref.get(bid, 0) < 1:
+                raise ValueError(
+                    f"release: page {bid} has no live reference "
+                    f"(double-release or unknown page id)")
             self._ref[bid] -= 1
             if self._ref[bid] == 0:
                 del self._ref[bid]
@@ -238,7 +302,10 @@ class BlockPool:
     def alloc(self, n: int) -> Optional[List[int]]:
         """``n`` pages, or None when the pool cannot supply them (the
         engine then applies admission backpressure / preemption). Evicts
-        LRU refcount-0 hashed pages only when the free list runs dry."""
+        LRU refcount-0 hashed pages only when the free list runs dry.
+        Fault seam ``blockpool.alloc`` fires before any state changes, so
+        an injected raise never half-allocates."""
+        faults.check("blockpool.alloc")
         if n > self.free_pages:
             return None
         out = []
@@ -249,14 +316,86 @@ class BlockPool:
                 bid, _ = self._evictable.popitem(last=False)
                 del self._digest[self._page_digest.pop(bid)]
                 out.append(bid)
+        self._allocated.update(out)
         return out
 
     def free(self, ids: List[int], hashed: int = 0) -> None:
         """Return a retired request's pages: the leading ``hashed`` ids
         (published/hit prompt pages) drop a reference and park when it
-        reaches zero; the rest go straight back to the free list."""
+        reaches zero; the rest go straight back to the free list.
+
+        The unhashed tail is validated before any state changes: every id
+        must be a currently allocated page with no live references, not
+        parked evictable, and not published — a double-free or unknown id
+        raises ``ValueError`` instead of silently corrupting the free
+        list (the old behavior, which later handed one page to two
+        requests)."""
+        tail = ids[hashed:]
+        for bid in tail:
+            if bid not in self._allocated:
+                raise ValueError(
+                    f"free: page {bid} is not allocated "
+                    f"(double-free or unknown page id)")
+            if self._ref.get(bid, 0) > 0:
+                raise ValueError(
+                    f"free: page {bid} has {self._ref[bid]} live "
+                    f"reference(s) — release them (hashed=) instead")
+            if bid in self._evictable or bid in self._page_digest:
+                raise ValueError(
+                    f"free: page {bid} is published/parked — published "
+                    f"prompt pages retire via the hashed= prefix")
         self.release(ids[:hashed])
-        self._free.extend(ids[hashed:])
+        self._allocated.difference_update(tail)
+        self._free.extend(tail)
+
+    # ------------------------------------------------------------ auditing --
+
+    def audit(self, expect_drained: bool = False) -> List[str]:
+        """Every violated structural invariant, as human-readable strings
+        (empty == healthy). With ``expect_drained=True`` additionally
+        requires quiescence: no live references and no allocated page
+        outside the evictable set (i.e. nothing leaked after a drain)."""
+        bad: List[str] = []
+        free_set = set(self._free)
+        if len(free_set) != len(self._free):
+            bad.append("duplicate ids on the free list")
+        if 0 in free_set or 0 in self._allocated:
+            bad.append("reserved garbage page 0 entered circulation")
+        both = free_set & self._allocated
+        if both:
+            bad.append(f"pages simultaneously free and allocated: "
+                       f"{sorted(both)}")
+        if len(self._free) + len(self._allocated) != self.usable:
+            bad.append(
+                f"conservation broken: free({len(self._free)}) + "
+                f"allocated({len(self._allocated)}) != usable({self.usable})")
+        for bid, r in self._ref.items():
+            if r < 1:
+                bad.append(f"page {bid} has non-positive refcount {r}")
+            if bid not in self._allocated:
+                bad.append(f"referenced page {bid} is not allocated")
+            if bid in self._evictable:
+                bad.append(f"page {bid} parked evictable with live refs")
+        for bid in self._evictable:
+            if bid not in self._allocated:
+                bad.append(f"evictable page {bid} is not allocated")
+            if bid not in self._page_digest:
+                bad.append(f"evictable page {bid} has no digest mapping")
+        for d, bid in self._digest.items():
+            if self._page_digest.get(bid) != d:
+                bad.append(f"digest bijection broken at digest {d[:12]}…")
+        for bid, d in self._page_digest.items():
+            if self._digest.get(d) != bid:
+                bad.append(f"digest bijection broken at page {bid}")
+        if expect_drained:
+            if self._ref:
+                bad.append(f"live references after drain: "
+                           f"{dict(sorted(self._ref.items()))}")
+            leaked = self._allocated - set(self._evictable) - set(self._ref)
+            if leaked:
+                bad.append(f"leaked pages (allocated, unreferenced, not "
+                           f"parked): {sorted(leaked)}")
+        return bad
 
 
 @dataclasses.dataclass
@@ -325,6 +464,26 @@ class ServeConfig:
                 growing to max_len must always be able to finish).
     prefix_cache: hash full prompt pages for reuse (paged layout only).
                 True by default; disable to measure pure paging.
+    deadline_s: per-request wall budget, measured from ``submit``. None
+                (default) disables. Checked at round boundaries and before
+                admission — an expired request retires with
+                ``status="timeout"`` (partial ``out_tokens`` kept, KV slot
+                and pool pages reclaimed). ``Request.deadline_s`` overrides
+                per request.
+    max_queue:  queue-depth cap enforced at :meth:`Engine.submit`. None
+                (default) is unbounded; when set it must be
+                ``>= max_batch`` (repro.check.config) so one full batch can
+                always queue.
+    shed_policy: what a full queue does to the incoming request:
+                "reject" (default) raises :class:`QueueFullError`;
+                "drop" marks it terminal ``status="shed"`` without
+                enqueueing (the caller still holds the object).
+    max_retries: bounded retries for an injected/transient prefill or
+                decode failure before the poisoned request(s) retire with
+                ``status="error"``. 0 disables retrying.
+    retry_backoff_s: base of the exponential retry backoff sleep
+                (``base * 2**(attempt-1)``). 0 (default) retries
+                immediately — the right setting for deterministic tests.
     """
     max_batch: int = 4
     max_len: int = 256
@@ -341,6 +500,11 @@ class ServeConfig:
     kv_block_size: int = 16
     kv_num_blocks: Optional[int] = None
     prefix_cache: bool = True
+    deadline_s: Optional[float] = None
+    max_queue: Optional[int] = None
+    shed_policy: str = "reject"
+    max_retries: int = 2
+    retry_backoff_s: float = 0.0
 
 
 class Engine:
@@ -450,6 +614,13 @@ class Engine:
             "blocks_in_use": self.metrics.gauge("serve.blocks_in_use"),
             "blocks_free": self.metrics.gauge("serve.blocks_free"),
             "prefix_hit_rate": self.metrics.gauge("serve.prefix_hit_rate"),
+            # resilience counters (EXPERIMENTS.md §Resilience): terminal
+            # statuses other than "ok", retry attempts, arena rebuilds
+            "timeouts": self.metrics.counter("serve.timeouts"),
+            "errors": self.metrics.counter("serve.errors"),
+            "shed": self.metrics.counter("serve.shed"),
+            "retries": self.metrics.counter("serve.retries"),
+            "arena_rebuilds": self.metrics.counter("serve.arena_rebuilds"),
         }
         self.reset_stats()
 
@@ -459,6 +630,13 @@ class Engine:
         """Zero the counters (e.g. after a compile-warmup drain)."""
         self.metrics.reset()
         self._round = 0
+        # uids whose logits an injected "corrupt" fault poisoned — silent
+        # corruption is contained (recorded), not detected; the chaos
+        # harness excludes these from the bit-identity comparison
+        self.poisoned_uids: set = set()
+        # the live BlockPool (paged runs only) — exposed so the chaos
+        # harness can audit conservation after a drain
+        self.pool: Optional[BlockPool] = None
 
     @property
     def stats(self) -> dict:
@@ -487,6 +665,11 @@ class Engine:
         c["blocks_in_use"] = int(m["blocks_in_use"].value)
         c["blocks_free"] = int(m["blocks_free"].value)
         c["prefix_hit_rate"] = float(m["prefix_hit_rate"].value)
+        c["timeouts"] = int(m["timeouts"].value)
+        c["errors"] = int(m["errors"].value)
+        c["shed"] = int(m["shed"].value)
+        c["retries"] = int(m["retries"].value)
+        c["arena_rebuilds"] = int(m["arena_rebuilds"].value)
         return c
 
     def _update_pool_gauges(self, pool: BlockPool):
@@ -533,7 +716,34 @@ class Engine:
         self._validate_prompt_len(req)
         req.submit_t = time.perf_counter()
         req.submit_wall_t = time.time()
+        # load shedding: overload rejects at the door instead of growing the
+        # queue unboundedly (the engine is single-threaded, so qsize is exact)
+        mq = self.scfg.max_queue
+        if mq is not None and self.queue.qsize() >= mq:
+            self._m["shed"].inc()
+            if self.scfg.shed_policy == "reject":
+                raise QueueFullError(
+                    f"request {req.uid}: queue holds max_queue={mq} "
+                    f"requests (shed_policy='reject')")
+            req.done = True             # "drop": terminal without enqueue
+            req.status = "shed"
+            req.finish_t = time.perf_counter()
+            return
         self.queue.put(req)
+
+    # ----------------------------------------------------------- deadlines --
+
+    def _deadline_of(self, req: Request) -> Optional[float]:
+        return (req.deadline_s if req.deadline_s is not None
+                else self.scfg.deadline_s)
+
+    def _expired(self, req: Request, now: Optional[float] = None) -> bool:
+        d = self._deadline_of(req)
+        if d is None:
+            return False
+        if now is None:
+            now = time.perf_counter()
+        return (now - req.submit_t) > d
 
     def _next_request(self) -> Optional[Request]:
         try:
@@ -598,6 +808,7 @@ class Engine:
                                          kv=self.scfg.kv_cache)
             pool = BlockPool(nblocks, bs,
                              prefix_cache=self.scfg.prefix_cache)
+            self.pool = pool            # audited by repro.faults.chaos
             table = np.zeros((B, self.scfg.max_len // bs), np.int32)
             slot_ids: List[List[int]] = [[] for _ in range(B)]
             slot_hashed = [0] * B       # leading refcounted pages per slot
@@ -622,7 +833,10 @@ class Engine:
 
         def admit_paged(i: int, req: Request, plen: int):
             """Returns last-position logits, or None when the pool cannot
-            supply the prompt's pages (admission backpressure)."""
+            supply the prompt's pages (admission backpressure). Exception-
+            safe: any failure after pages were referenced/allocated rolls
+            the pool back before re-raising, so a retried (or retired)
+            admission never leaks pages."""
             nonlocal cache
             nb = -(-plen // bs)         # pages covering positions [0, plen)
             keys = pool.prefix_keys(req.prompt)
@@ -633,14 +847,31 @@ class Engine:
             # reference the hit pages BEFORE alloc so its eviction scan
             # cannot reclaim them out from under this admission
             pool.acquire(hit_ids)
-            with obs_trace.span("engine.block_alloc", uid=req.uid,
-                                n=nb - n_hit):
-                fresh = pool.alloc(nb - n_hit)
+            try:
+                with obs_trace.span("engine.block_alloc", uid=req.uid,
+                                    n=nb - n_hit):
+                    fresh = pool.alloc(nb - n_hit)
+            except Exception:
+                pool.release(hit_ids)   # injected blockpool.alloc fault
+                raise
             if fresh is None:
                 pool.release(hit_ids)
                 return None
             req.admit_t = time.perf_counter()
             ids = hit_ids + fresh
+            try:
+                return _admit_paged_prefill(i, req, plen, keys, hit_ids,
+                                            fresh, ids, nb)
+            except Exception:
+                pool.release(hit_ids)
+                pool.free(fresh)        # unpublished: straight back
+                self._update_pool_gauges(pool)
+                raise
+
+        def _admit_paged_prefill(i, req, plen, keys, hit_ids, fresh, ids,
+                                 nb):
+            nonlocal cache
+            n_hit = len(hit_ids)
             fids = np.asarray(fresh, np.int32)
             if n_hit and "k_scale" not in cache:
                 # float-KV prefix hit: the shared pages already hold the
@@ -691,63 +922,126 @@ class Engine:
             self._update_pool_gauges(pool)
             return logits
 
-        def admit(i: int, req: Request) -> bool:
+        def try_admit(i: int, req: Request) -> str:
+            """Admit ``req`` into free slot ``i``. Returns "ok", "full"
+            (paged pool backpressure — park in the holdback), or "failed"
+            (the admission survived max_retries and the request was
+            retired with status="error"). The ``engine.prefill`` fault
+            seam fires once per attempt, BEFORE any device call or pool
+            mutation, so an injected raise is always retry-safe."""
             nonlocal cache, seq
             self._validate_prompt_len(req)   # directly enqueued requests
             plen = len(req.prompt)
+            last_err: Optional[BaseException] = None
+            for attempt in range(self.scfg.max_retries + 1):
+                if attempt:
+                    self._m["retries"].inc()
+                    if self.scfg.retry_backoff_s > 0:
+                        time.sleep(self.scfg.retry_backoff_s
+                                   * (2 ** (attempt - 1)))
+                try:
+                    fired = faults.check("engine.prefill")
+                    if paged:
+                        logits = admit_paged(i, req, plen)
+                        if logits is None:
+                            return "full"
+                    else:
+                        bucket = self._bucket_len(plen)
+                        req.admit_t = time.perf_counter()
+                        toks = np.zeros((bucket,), np.int32)
+                        toks[:plen] = req.prompt  # right-pad: 0..plen-1
+                        with obs_trace.span("engine.prefill", uid=req.uid,
+                                            slot=i, plen=plen,
+                                            bucket=bucket):
+                            logits, fresh = self.prefill(self.params, {
+                                "tokens": jnp.asarray(toks[None, :]),
+                                "prompt_lens": jnp.asarray([plen],
+                                                           jnp.int32)})
+                            self._m["prefills"].inc()
+                            cache = self._write_slot(cache, fresh,
+                                                     jnp.int32(i))
+                            logits = np.asarray(logits)
+                except faults.InjectedFault as e:
+                    last_err = e        # fired pre-dispatch: retry is safe
+                    continue
+                except Exception as e:
+                    last_err = e        # real failure: state may be gone
+                    break               # (donated buffers) — do not retry
+                if fired is not None:   # corrupt directive: poison the
+                    logits = fired.apply(logits)   # sampled logits only
+                    self.poisoned_uids.add(req.uid)
+                t = self._pick(logits[0, -1], req)
+                req.first_token_t = time.perf_counter()
+                req.admit_round = self._round
+                req.out_tokens.append(t)
+                self._m["tokens_out"].inc()
+                self._m["ttft"].observe(req.ttft_s)
+                cur[i, 0] = t
+                slots[i] = req
+                lens[i] = plen
+                admit_seq[i] = seq
+                seq += 1
+                return "ok"
+            retire_unadmitted(req, "error", repr(last_err))
+            return "failed"
+
+        def retire_unadmitted(req: Request, status: str,
+                              err: Optional[str] = None):
+            """Terminal bookkeeping for a request that never held a slot
+            (queue/holdback deadline expiry, failed admission)."""
+            now = time.perf_counter()
+            req.done = True
+            req.status = status
+            req.error = err
+            if req.admit_t == 0.0:
+                req.admit_t = now
+            if req.first_token_t == 0.0:
+                req.first_token_t = now
+            req.finish_t = now
+            req.finish_round = self._round
+            finished.append(req)
+            self._m["requests_done"].inc()
+            self._m["timeouts" if status == "timeout" else "errors"].inc()
+            self._observe_retired(req)
+
+        def retire_slot(i: int, status: str = "ok",
+                        err: Optional[str] = None):
+            """Retire slot ``i``'s request with terminal ``status`` and
+            reclaim its KV slot + pool pages — THE slot-release path, so
+            ok/timeout/error retirement can never diverge on cleanup."""
+            nonlocal cache
+            req = slots[i]
+            req.done = True
+            req.status = status
+            if err is not None:
+                req.error = err
+            req.finish_t = time.perf_counter()
+            req.finish_round = self._round
+            finished.append(req)
+            self._m["requests_done"].inc()
+            if status == "timeout":
+                self._m["timeouts"].inc()
+            elif status == "error":
+                self._m["errors"].inc()
+            self._observe_retired(req)
+            slots[i] = None
+            lens[i] = 0
             if paged:
-                logits = admit_paged(i, req, plen)
-                if logits is None:
-                    return False
-            else:
-                bucket = self._bucket_len(plen)
-                req.admit_t = time.perf_counter()
-                toks = np.zeros((bucket,), np.int32)
-                toks[:plen] = req.prompt  # right-pad: positions 0..plen-1
-                with obs_trace.span("engine.prefill", uid=req.uid, slot=i,
-                                    plen=plen, bucket=bucket):
-                    logits, fresh = self.prefill(self.params, {
-                        "tokens": jnp.asarray(toks[None, :]),
-                        "prompt_lens": jnp.asarray([plen], jnp.int32)})
-                    self._m["prefills"].inc()
-                    cache = self._write_slot(cache, fresh, jnp.int32(i))
-                    logits = np.asarray(logits)
-            t = self._pick(logits[0, -1], req)
-            req.first_token_t = time.perf_counter()
-            req.admit_round = self._round
-            req.out_tokens.append(t)
-            self._m["tokens_out"].inc()
-            self._m["ttft"].observe(req.ttft_s)
-            cur[i, 0] = t
-            slots[i] = req
-            lens[i] = plen
-            admit_seq[i] = seq
-            seq += 1
-            return True
+                with obs_trace.span("engine.block_free", uid=req.uid,
+                                    n=len(slot_ids[i])):
+                    pool.free(slot_ids[i], hashed=slot_hashed[i])
+                slot_ids[i] = []
+                slot_hashed[i] = 0
+                table[i, :] = 0
+                self._update_pool_gauges(pool)
+            cache = api.cache_free_slot(cache, i)
 
         def maybe_retire(i: int):
-            nonlocal cache
             req = slots[i]
             full = lens[i] >= self.scfg.max_len
             if (req.out_tokens[-1] == self._effective_eos(req)
                     or len(req.out_tokens) >= req.max_new_tokens or full):
-                req.done = True
-                req.finish_t = time.perf_counter()
-                req.finish_round = self._round
-                finished.append(req)
-                self._m["requests_done"].inc()
-                self._observe_retired(req)
-                slots[i] = None
-                lens[i] = 0
-                if paged:
-                    with obs_trace.span("engine.block_free", uid=req.uid,
-                                        n=len(slot_ids[i])):
-                        pool.free(slot_ids[i], hashed=slot_hashed[i])
-                    slot_ids[i] = []
-                    slot_hashed[i] = 0
-                    table[i, :] = 0
-                    self._update_pool_gauges(pool)
-                cache = api.cache_free_slot(cache, i)
+                retire_slot(i, "ok")
 
         def preempt(victim: int):
             """Evict the youngest slot mid-decode to free its pages. Its
@@ -772,6 +1066,17 @@ class Engine:
             cache = api.cache_free_slot(cache, victim)
             self._update_pool_gauges(pool)
 
+        def pool_alloc(n: int) -> Optional[List[int]]:
+            """``pool.alloc`` with the injected-fault seam absorbed: an
+            InjectedFault degrades to a transient shortage (None), which
+            the callers already handle via backpressure/preemption — so a
+            blockpool.alloc fault can never escape mid-decode."""
+            try:
+                return pool.alloc(n)
+            except faults.InjectedFault:
+                self._m["retries"].inc()
+                return None
+
         def grow_tables():
             """Allocate the next page for every slot whose write position
             reached a page boundary; under pool pressure preempt youngest-
@@ -788,7 +1093,7 @@ class Engine:
                     continue
                 with obs_trace.span("engine.block_alloc",
                                     uid=slots[i].uid, n=1):
-                    got = pool.alloc(1)
+                    got = pool_alloc(1)
                 while got is None:
                     victim = max((v for v in range(B)
                                   if slots[v] is not None),
@@ -796,40 +1101,86 @@ class Engine:
                     preempt(victim)
                     if victim == i:
                         break
-                    got = pool.alloc(1)
+                    got = pool_alloc(1)
                 if slots[i] is None or got is None:
                     continue
                 slot_ids[i].append(got[0])
                 table[i, pos // bs] = got[0]
             self._update_pool_gauges(pool)
 
+        def rebuild_arena():
+            """Fresh KV arena after an unrecoverable decode failure: the
+            decode jit donates the cache on accelerator backends, so the
+            old buffers must be assumed dead. The paged pool restarts
+            empty too — its prefix digests would otherwise resolve to
+            pages of the reset arena."""
+            nonlocal cache, pool
+            self._m["arena_rebuilds"].inc()
+            if paged:
+                cache = api.init_paged_cache(self.cfg, B, nblocks, bs,
+                                             self.scfg.max_len,
+                                             kv=self.scfg.kv_cache)
+                pool = BlockPool(nblocks, bs,
+                                 prefix_cache=self.scfg.prefix_cache)
+                self.pool = pool
+                table[:] = 0
+                for i in range(B):
+                    slot_ids[i] = []
+                    slot_hashed[i] = 0
+                self._update_pool_gauges(pool)
+            else:
+                cache = api.init_slot_cache(self.cfg, B, self.scfg.max_len,
+                                            kv=self.scfg.kv_cache)
+
+        stalls = 0                      # consecutive can't-admit iterations
+        decode_failures = 0             # consecutive failed round attempts
         while True:
             # refill free slots from the queue between decode rounds; the
             # inner while re-admits into a slot whose request retired at
-            # admission (max_new_tokens=1 / instant EOS). A paged admission
-            # the pool cannot back parks its request in the FIFO holdback
-            # and stops refilling until retirements release pages.
+            # admission (max_new_tokens=1 / instant EOS / failed / already
+            # past deadline). A paged admission the pool cannot back parks
+            # its request in the FIFO holdback and stops refilling until
+            # retirements release pages.
             blocked = False
             for i in range(B):
-                while slots[i] is None:
+                while slots[i] is None and not blocked:
                     req = next_request()
                     if req is None:
                         break
-                    if not admit(i, req):
+                    if self._expired(req):
+                        # expired while queued/parked: never admit — the
+                        # prefill would be wasted work past the budget
+                        retire_unadmitted(req, "timeout")
+                        continue
+                    res = try_admit(i, req)
+                    if res == "full":
                         holdback.appendleft(req)
                         blocked = True
-                        break
-                    maybe_retire(i)
+                    elif res == "ok":
+                        maybe_retire(i)
+                    # "failed": retired inside try_admit — keep refilling
                 if blocked:
                     break
             active = [i for i in range(B) if slots[i] is not None]
             if not active:
                 if paged and holdback:
-                    raise RuntimeError(
-                        "paged KV pool cannot admit the next request even "
-                        "with every page reclaimable — kv_num_blocks is "
-                        "below a single prompt's worst-case page need")
+                    # can't-admit stall: nothing active to retire and the
+                    # holdback head still does not fit. Give retirements
+                    # max_retries+1 iterations to change the picture, then
+                    # retire the head as "error" instead of deadlocking or
+                    # killing the engine (the old RuntimeError) — the
+                    # message keeps the kv_num_blocks diagnosis.
+                    stalls += 1
+                    if stalls > self.scfg.max_retries:
+                        retire_unadmitted(
+                            holdback.popleft(), "error",
+                            "paged KV pool cannot admit this request even "
+                            "with every page reclaimable — kv_num_blocks "
+                            "is below its worst-case page need")
+                        stalls = 0
+                    continue
                 break                   # the admit loop drained the queue
+            stalls = 0
             if paged:
                 grow_tables()
                 active = [i for i in range(B) if slots[i] is not None]
@@ -837,20 +1188,52 @@ class Engine:
                     continue            # preemption emptied the batch
                 cache["len"] = jnp.asarray(np.asarray(lens, np.int32))
                 cache["block_table"] = jnp.asarray(table)
-            t0 = time.perf_counter()
-            with obs_trace.span("engine.decode_round", round=self._round,
-                                active=len(active)):
-                logits, cache = self.decode(self.params, jnp.asarray(cur),
-                                            cache)
-                # block on BOTH outputs before stopping the timer: asarray
-                # alone would sync the logits but leave the cache update in
-                # flight, skewing decode_tok_s by JAX async dispatch
-                jax.block_until_ready((logits, cache))
-            self._m["decode_time"].inc(time.perf_counter() - t0)
+            try:
+                # the seam fires BEFORE the device call (retrying an
+                # injected fault is safe: the donated cache is untouched)
+                round_fired = faults.check("engine.decode_round")
+                t0 = time.perf_counter()
+                with obs_trace.span("engine.decode_round",
+                                    round=self._round,
+                                    active=len(active)):
+                    logits, cache = self.decode(self.params,
+                                                jnp.asarray(cur), cache)
+                    # block on BOTH outputs before stopping the timer:
+                    # asarray alone would sync the logits but leave the
+                    # cache update in flight, skewing decode_tok_s by JAX
+                    # async dispatch
+                    jax.block_until_ready((logits, cache))
+                self._m["decode_time"].inc(time.perf_counter() - t0)
+            except Exception as e:
+                retriable = isinstance(e, faults.InjectedFault)
+                decode_failures += 1
+                if retriable and decode_failures <= self.scfg.max_retries:
+                    self._m["retries"].inc()
+                    if self.scfg.retry_backoff_s > 0:
+                        time.sleep(self.scfg.retry_backoff_s
+                                   * (2 ** (decode_failures - 1)))
+                    continue
+                # unrecoverable round: the batch shares one donated cache,
+                # so per-request attribution is impossible — retire the
+                # whole active set as "error" and rebuild the arena, then
+                # keep draining the queue against the fresh one
+                for i in active:
+                    retire_slot(i, "error", repr(e))
+                rebuild_arena()
+                decode_failures = 0
+                continue
+            decode_failures = 0
             logits = np.asarray(logits)
+            if round_fired is not None:
+                # corrupt directive: poison this round's host logits; every
+                # active request sampled from them is contained, not fixed
+                logits = round_fired.apply(logits)
+                for i in active:
+                    self.poisoned_uids.add(slots[i].uid)
             self._round += 1
             self._m["decode_steps"].inc()
             self._m["occupied"].inc(len(active))
+            now_r = time.perf_counter()
             for i in active:
                 lens[i] += 1            # this round wrote K/V at lens[i]
                 req = slots[i]
@@ -859,6 +1242,8 @@ class Engine:
                 self._m["tokens_out"].inc()
                 cur[i, 0] = t
                 maybe_retire(i)
+                if slots[i] is not None and self._expired(req, now_r):
+                    retire_slot(i, "timeout")   # round-boundary cancel
             # decode advanced every row's length, including retired/empty
             # slots; re-zero them so dead rows can never drift past max_len
             cache["len"] = jnp.asarray(np.asarray(lens, np.int32))
@@ -875,6 +1260,31 @@ class Engine:
             finished.extend(self._run_batch(batch))
         return finished
 
+    def _retry_call(self, site: str, fn):
+        """Run ``fn`` behind fault-site ``site`` with bounded retries.
+        Returns ``(result, fired, err)``: on success err is None and fired
+        is the corrupt directive (if one fired); after exhausting
+        ``max_retries`` (InjectedFault only — a real exception may have
+        consumed donated buffers, so it never retries) result is None and
+        err carries the absorbed exception."""
+        last_err: Optional[BaseException] = None
+        for attempt in range(self.scfg.max_retries + 1):
+            if attempt:
+                self._m["retries"].inc()
+                if self.scfg.retry_backoff_s > 0:
+                    time.sleep(self.scfg.retry_backoff_s
+                               * (2 ** (attempt - 1)))
+            try:
+                fired = faults.check(site)
+                return fn(), fired, None
+            except faults.InjectedFault as e:
+                last_err = e
+                continue
+            except Exception as e:
+                last_err = e
+                break
+        return None, None, last_err
+
     def _run_batch(self, reqs: List[Request]) -> List[Request]:
         b = len(reqs)
         plen = max(len(r.prompt) for r in reqs)
@@ -884,11 +1294,28 @@ class Engine:
         now = time.perf_counter()
         for r in reqs:
             r.admit_t = now
-        with obs_trace.span("engine.prefill", batch=b, plen=plen):
-            logits, cache = self.prefill(self.params,
-                                         {"tokens": jnp.asarray(toks)})
-            self._m["prefills"].inc()
-            lg = np.asarray(logits)
+
+        def do_prefill():
+            with obs_trace.span("engine.prefill", batch=b, plen=plen):
+                logits, cache = self.prefill(self.params,
+                                             {"tokens": jnp.asarray(toks)})
+                self._m["prefills"].inc()
+                return np.asarray(logits), cache
+
+        got, fired, err = self._retry_call("engine.prefill", do_prefill)
+        if err is not None:
+            # the static batch shares one prefill: retire it whole — the
+            # next _take_batch keeps draining the queue
+            for r in reqs:
+                r.status = "error"
+                r.error = repr(err)
+                r.done = True
+                self._m["errors"].inc()
+            return self._finish_batch(reqs)
+        lg, cache = got
+        if fired is not None:
+            lg = fired.apply(lg)
+            self.poisoned_uids.update(r.uid for r in reqs)
         cur = np.zeros((b, 1), np.int32)
         now = time.perf_counter()
         for i, r in enumerate(reqs):
@@ -902,18 +1329,44 @@ class Engine:
                 r.done = True
         steps = max(r.max_new_tokens for r in reqs) - 1
         for _ in range(max(steps, 0)):
+            now = time.perf_counter()
+            for r in reqs:
+                if not r.done and self._expired(r, now):
+                    r.done = True       # round-boundary cancellation
+                    r.status = "timeout"
+                    self._m["timeouts"].inc()
             if all(r.done for r in reqs):
                 break
-            t0 = time.perf_counter()
-            with obs_trace.span("engine.decode_round", round=self._round,
-                                active=sum(not r.done for r in reqs)):
-                logits, cache = self.decode(self.params, jnp.asarray(cur),
-                                            cache)
-                # sync logits AND cache before stopping the timer (see the
-                # continuous path): decode_tok_s must be device time
-                jax.block_until_ready((logits, cache))
-            self._m["decode_time"].inc(time.perf_counter() - t0)
-            lg = np.asarray(logits)
+
+            def do_round():
+                t0 = time.perf_counter()
+                with obs_trace.span("engine.decode_round",
+                                    round=self._round,
+                                    active=sum(not r.done for r in reqs)):
+                    logits, new_cache = self.decode(
+                        self.params, jnp.asarray(cur), cache)
+                    # sync logits AND cache before stopping the timer (see
+                    # the continuous path): decode_tok_s must be device
+                    # time
+                    jax.block_until_ready((logits, new_cache))
+                self._m["decode_time"].inc(time.perf_counter() - t0)
+                return np.asarray(logits), new_cache
+
+            got, fired, err = self._retry_call("engine.decode_round",
+                                               do_round)
+            if err is not None:
+                for r in reqs:          # one shared (donated) cache: no
+                    if not r.done:      # per-request attribution possible
+                        r.status = "error"
+                        r.error = repr(err)
+                        r.done = True
+                        self._m["errors"].inc()
+                break
+            lg, cache = got
+            if fired is not None:
+                lg = fired.apply(lg)
+                self.poisoned_uids.update(
+                    r.uid for r in reqs if not r.done)
             self._round += 1
             self._m["decode_steps"].inc()
             for i, r in enumerate(reqs):
@@ -927,9 +1380,16 @@ class Engine:
                 if (t == self._effective_eos(r)
                         or len(r.out_tokens) >= r.max_new_tokens):
                     r.done = True
+        return self._finish_batch(reqs)
+
+    def _finish_batch(self, reqs: List[Request]) -> List[Request]:
         now = time.perf_counter()
         for r in reqs:
             r.done = True
+            if r.status == "pending":
+                r.status = "ok"
+            if r.first_token_t == 0.0:  # batch failed before first token
+                r.first_token_t = now
             r.finish_t = now
             r.finish_round = self._round
             self._m["requests_done"].inc()

@@ -21,8 +21,10 @@ from __future__ import annotations
 import json
 import os
 import threading
+import warnings
 from typing import Dict, Optional
 
+from repro.faults import inject as faults
 from repro.obs import metrics as _obs_metrics
 
 # v2: the batched/spatially-tiled kernel grids added block_n/block_h/block_w
@@ -60,12 +62,28 @@ class TuneCache:
             self._load(path)
 
     def _load(self, path: str):
+        """Crash-safe load: a corrupt / truncated / wrong-typed cache file
+        NEVER raises out of cache construction — it warns once, marks the
+        cache ``stale`` (empty), and the dispatch layer degrades to the
+        analytic cost model (``tune.cache.analytic_fallback`` counts it).
+        ``save()`` is atomic (temp file + ``os.replace``), so a cache can
+        only end up corrupt via external truncation — exactly the case the
+        ``tune.cache_load`` fault seam injects in tests/test_faults.py."""
         if not os.path.exists(path):
             return
         try:
+            faults.check("tune.cache_load")
             with open(path) as f:
                 blob = json.load(f)
-        except (OSError, ValueError):
+            if not isinstance(blob, dict):
+                raise ValueError(f"expected a JSON object at top level, "
+                                 f"got {type(blob).__name__}")
+        except Exception as e:
+            warnings.warn(
+                f"tune cache {path!r} is unreadable ({e!r}); serving "
+                f"falls back to analytic schedules until it is re-tuned",
+                RuntimeWarning, stacklevel=2)
+            _obs_metrics.counter("tune.cache.load_failed").inc()
             self.stale = True
             return
         if blob.get("schema_version") != SCHEMA_VERSION:
